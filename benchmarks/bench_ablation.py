@@ -1,0 +1,68 @@
+"""Ablation of the control-plane design decisions (EXPERIMENTS.md
+§Paper-validation calibration notes): TO_thresh, winsorized estimation,
+compliance factor — on the exp-1 scenario (fashion-mnist, WC trace,
+30 rps, SLO 500 ms) where the knobs BIND; at high-rate/lenient-SLO
+operating points (exp 2) they are inert (measured).
+
+Standalone: ``PYTHONPATH=src python -m benchmarks.bench_ablation``.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core import MonitorConfig, OptimizerConfig, ProxyConfig, SLAConfig, ms
+from repro.serverless.latency import get_workload
+from repro.serverless.platform import PlatformConfig
+from repro.simulation.arrivals import TraceModulatedPoisson
+from repro.simulation.simulator import run_simulation
+from repro.simulation.traces import synthetic_trace
+
+from benchmarks.common import write_csv
+
+VARIANTS = [
+    ("paper-faithful (to=0.5, raw P95)", dict(to_thresh=0.5), dict(outlier_mult=0.0)),
+    ("to_thresh=0.9, raw P95", dict(to_thresh=0.9), dict(outlier_mult=0.0)),
+    ("to_thresh=0.5, winsorized", dict(to_thresh=0.5), dict(outlier_mult=5.0)),
+    ("default (to=0.9, winsorized)", dict(to_thresh=0.9), dict(outlier_mult=5.0)),
+    ("compliance 0.7", dict(to_thresh=0.9), dict(outlier_mult=5.0), 0.7),
+    ("compliance 0.9", dict(to_thresh=0.9), dict(outlier_mult=5.0), 0.9),
+]
+
+
+def run(quick: bool = False, rate: float = 30.0, slo_ms: float = 500.0) -> List[Dict]:
+    duration = 600.0 if quick else 1800.0
+    wl = get_workload("pytorch-fashion-mnist")
+    pc = PlatformConfig(initial_scale=1, max_scale=27, cold_start=10.0)
+    rows: List[Dict] = []
+    for variant in VARIANTS:
+        name, opt_kw, mon_kw = variant[0], variant[1], variant[2]
+        compliance = variant[3] if len(variant) > 3 else 0.8
+        sla = SLAConfig(slo_target=ms(slo_ms), compliance_factor=compliance)
+        cfg = ProxyConfig(
+            sla=sla,
+            monitor=MonitorConfig(**mon_kw),
+            optimizer=OptimizerConfig(**opt_kw),
+        )
+        tr = synthetic_trace("wc", duration=duration, seed=0).scaled(rate)
+        s = run_simulation(
+            policy="mlproxy", sla=sla, workload=wl,
+            arrivals=TraceModulatedPoisson(tr), platform_config=pc,
+            duration=duration, warmup=duration / 6, seed=2,
+            policy_kwargs={"proxy_config": cfg},
+        ).summary
+        rows.append({
+            "variant": name,
+            "containers": round(s["avg_containers"], 3),
+            "viol_pct": round(s["violation_pct"], 4),
+            "avg_bs": round(s["avg_batch_size"], 2),
+            "p95_ms": round(s["p95"] * 1000, 1),
+        })
+    write_csv("ablation_controller.csv", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r['variant']:34s} cont={r['containers']:6.2f} "
+              f"viol%={r['viol_pct']:7.3f} BS={r['avg_bs']:5.2f} "
+              f"p95={r['p95_ms']:6.0f}ms")

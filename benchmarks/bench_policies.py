@@ -1,0 +1,66 @@
+"""Beyond-paper: policy shoot-out — MLProxy vs passthrough, static batching,
+Clipper-style AIMD, and the profiled-oracle (BATCH-style) baseline, on the
+same workload/trace, including a fault-injection variant (container crashes
++ stragglers with hedging) to exercise the reliability path."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core import SLAConfig, ms
+from repro.serverless.latency import get_workload
+from repro.serverless.platform import PlatformConfig
+from repro.simulation.arrivals import TraceModulatedPoisson
+from repro.simulation.simulator import run_simulation
+from repro.simulation.traces import synthetic_trace
+
+from benchmarks.common import write_csv
+
+POLICIES = ("passthrough", "static", "clipper", "oracle", "mlproxy")
+
+
+def run(quick: bool = False) -> List[Dict]:
+    duration = 600.0 if quick else 1500.0
+    warmup = duration / 5
+    wl = get_workload("pytorch-fashion-mnist")
+    sla = SLAConfig(slo_target=ms(500))
+    rows: List[Dict] = []
+    for faults in (False, True):
+        pc = PlatformConfig(
+            initial_scale=1,
+            failure_prob_per_batch=0.002 if faults else 0.0,
+            straggler_prob=0.01 if faults else 0.0,
+            straggler_mult=5.0,
+            hedge_factor=3.0 if faults else 0.0,
+        )
+        for policy in POLICIES:
+            kw = {}
+            if policy == "static":
+                kw = {"batch_size": 8, "timeout": 0.2}
+            elif policy == "oracle":
+                kw = {"latency_model": lambda bs: wl.percentile(bs, 95)}
+            trace = synthetic_trace("wc", duration=duration, seed=3).scaled(30)
+            res = run_simulation(
+                policy=policy, sla=sla, workload=wl,
+                arrivals=TraceModulatedPoisson(trace), platform_config=pc,
+                duration=duration, warmup=warmup, seed=11,
+                policy_kwargs=kw,
+            )
+            s = res.summary
+            rows.append({
+                "policy": policy,
+                "faults": faults,
+                "containers": round(s["avg_containers"], 3),
+                "viol_pct": round(s["violation_pct"], 4),
+                "avg_bs": round(s["avg_batch_size"], 2),
+                "p95_ms": round(s["p95"] * 1000, 1),
+                "failed_attempts": s["failed_attempts"],
+                "hedged": s["hedged_dispatches"],
+                "completed": s["completed"],
+            })
+    write_csv("policy_comparison.csv", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

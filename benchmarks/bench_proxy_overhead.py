@@ -1,0 +1,74 @@
+"""Control-plane overhead (paper §4.2 reports <10% of one vCPU and <200 MB
+for the proxy): decision throughput of the scalar proxy event path and the
+vectorized fleet controller (decisions/second)."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import MLProxy, MonitorConfig, OptimizerConfig, ProxyConfig, Request, SLAConfig
+from repro.core import jax_controller as jc
+
+from benchmarks.common import write_csv
+
+
+def scalar_proxy_throughput(n_events: int = 50_000) -> float:
+    cfg = ProxyConfig(
+        sla=SLAConfig(slo_target=0.5),
+        monitor=MonitorConfig(min_samples=1),
+        optimizer=OptimizerConfig(initial_max_bs=8),
+    )
+    sink: List = []
+    proxy = MLProxy(cfg, dispatch_fn=sink.append)
+    for bs in range(1, 12):
+        proxy.monitor.record_upstream(bs, 0.05, now=0.0)
+    t0 = time.perf_counter()
+    t = 0.0
+    for i in range(n_events):
+        t += 0.001
+        proxy.on_request(Request(arrival_time=t), now=t)
+        if sink:
+            batch = sink.pop()
+            proxy.on_response(batch, 0.05, now=t + 0.05)
+    dt = time.perf_counter() - t0
+    return n_events / dt
+
+
+def fleet_controller_throughput(n_endpoints: int = 4096,
+                                iters: int = 50) -> float:
+    state = jc.init_fleet(n_endpoints, n_buckets=16, window=64)
+    slo = jnp.full((n_endpoints,), 0.5, jnp.float32)
+    qlen = jnp.ones((n_endpoints,), jnp.int32)
+    frt = jnp.zeros((n_endpoints,), jnp.float32)
+    # warm up compile
+    jc.timeout_step(state, qlen, frt, slo)[0].block_until_ready()
+    s2 = jc.aimd_step(state, slo)
+    jax.block_until_ready(s2.max_bs)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        d, to = jc.timeout_step(state, qlen, frt, slo)
+        state = jc.aimd_step(state, slo)
+    jax.block_until_ready((d, to, state.max_bs))
+    dt = time.perf_counter() - t0
+    return n_endpoints * iters / dt
+
+
+def run(quick: bool = False) -> List[Dict]:
+    rows = [
+        {"metric": "scalar_proxy_decisions_per_s",
+         "value": round(scalar_proxy_throughput(10_000 if quick else 50_000))},
+        {"metric": "fleet_controller_endpoint_updates_per_s",
+         "value": round(fleet_controller_throughput(1024 if quick else 4096,
+                                                    10 if quick else 50))},
+    ]
+    write_csv("proxy_overhead.csv", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,51 @@
+"""Figure 7: time series for experiment #1 (Fashion MNIST, WC trace,
+30 rps, SLO 500 ms): windowed P95, container count, SLO miss rate and
+Max_BS over time, with and without MLProxy."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core import SLAConfig, ms
+from repro.serverless.latency import get_workload
+from repro.serverless.platform import PlatformConfig
+from repro.simulation.arrivals import TraceModulatedPoisson
+from repro.simulation.simulator import run_simulation
+from repro.simulation.traces import synthetic_trace
+
+from benchmarks.common import write_csv
+from benchmarks.bench_table3 import EXPERIMENTS
+
+
+def run(quick: bool = False) -> List[Dict]:
+    exp = EXPERIMENTS[0]
+    duration = 600.0 if quick else 1800.0
+    sla = SLAConfig(slo_target=ms(exp.slo_ms))
+    wl = get_workload(exp.workload)
+    rows: List[Dict] = []
+    for policy in ("passthrough", "mlproxy"):
+        trace = synthetic_trace(exp.trace, duration=duration, seed=0
+                                ).scaled(exp.max_rps)
+        res = run_simulation(
+            policy=policy, sla=sla, workload=wl,
+            arrivals=TraceModulatedPoisson(trace),
+            platform_config=PlatformConfig(initial_scale=1),
+            duration=duration, seed=1, sample_interval=5.0,
+        )
+        tl = res.timeline
+        for i in range(len(tl["t"])):
+            rows.append({
+                "policy": policy,
+                "t": float(tl["t"][i]),
+                "p95_ms": round(float(tl["p95"][i]) * 1000, 2),
+                "containers": float(tl["containers"][i]),
+                "miss_rate": float(tl["miss_rate"][i]),
+                "max_bs": float(tl["max_bs"][i]),
+                "arrival_rate": trace.rate_at(float(tl["t"][i])),
+            })
+    write_csv("fig7_timeseries.csv", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()
+    print("fig7_timeseries.csv written")

@@ -1,0 +1,41 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import csv
+import os
+import time
+from typing import Dict, Iterable, List
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "results")
+
+
+def out_path(name: str) -> str:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    return os.path.join(OUT_DIR, name)
+
+
+def write_csv(name: str, rows: List[Dict], field_order: Iterable[str] = ()):
+    path = out_path(name)
+    if not rows:
+        return path
+    fields = list(field_order) or list(rows[0].keys())
+    for r in rows:
+        for k in r:
+            if k not in fields:
+                fields.append(k)
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=fields)
+        w.writeheader()
+        for r in rows:
+            w.writerow(r)
+    return path
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.perf_counter() - self.t0

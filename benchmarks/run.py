@@ -1,0 +1,57 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV per the harness contract:
+``us_per_call`` is the wall-time of producing the artifact;
+``derived`` is the benchmark's headline number.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--quick", action="store_true",
+                   help="shorter simulations (CI-scale)")
+    p.add_argument("--only", default=None, help="run a single benchmark")
+    args = p.parse_args()
+
+    from benchmarks.common import Timer
+    from benchmarks import (bench_batch_scaling, bench_ccdf, bench_policies,
+                            bench_proxy_overhead, bench_table3,
+                            bench_timeseries)
+
+    benches = {
+        "fig3_fig4_batch_scaling": (
+            bench_batch_scaling.run,
+            lambda rows: min(r["relative_per_inference"] for r in rows
+                             if r["batch_size"] == 16
+                             and "linear" not in r["workload"])),
+        "table3_experiments": (
+            bench_table3.run,
+            lambda rows: sum(r["cont_reduction_pct"] for r in rows) / len(rows)),
+        "fig6_ccdf": (bench_ccdf.run, lambda rows: len(rows)),
+        "fig7_timeseries": (bench_timeseries.run, lambda rows: len(rows)),
+        "policy_comparison": (
+            bench_policies.run,
+            lambda rows: min(r["containers"] for r in rows if not r["faults"])),
+        "proxy_overhead": (
+            bench_proxy_overhead.run, lambda rows: rows[0]["value"]),
+    }
+    print("name,us_per_call,derived")
+    for name, (fn, derive) in benches.items():
+        if args.only and args.only != name:
+            continue
+        with Timer() as t:
+            rows = fn(quick=args.quick)
+        try:
+            derived = derive(rows)
+        except Exception:
+            derived = float("nan")
+        print(f"{name},{t.seconds*1e6:.0f},{derived}")
+        sys.stdout.flush()
+
+
+if __name__ == "__main__":
+    main()

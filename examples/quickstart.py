@@ -1,0 +1,45 @@
+"""Quickstart: MLProxy in 60 seconds.
+
+Runs the paper's core loop end-to-end on a simulated serverless platform:
+Poisson arrivals → MLProxy (adaptive batching, Algorithms 1+2) → Knative-
+like autoscaled backend, and prints the cost/SLO comparison against a
+stock API gateway.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core import SLAConfig, ms
+from repro.serverless.latency import get_workload
+from repro.serverless.platform import PlatformConfig
+from repro.simulation.arrivals import PoissonProcess
+from repro.simulation.simulator import run_simulation
+
+
+def main() -> None:
+    sla = SLAConfig(slo_target=ms(500))  # P95 ≤ 500 ms
+    workload = get_workload("pytorch-fashion-mnist")  # Table-2 workload
+
+    print(f"workload: {workload.name}, s(1)={workload.mean(1)*1000:.0f} ms, "
+          f"s(16)={workload.mean(16)*1000:.0f} ms  (sub-linear → batchable)")
+    print(f"SLO: P95 ≤ {sla.slo_target*1000:.0f} ms\n")
+
+    for policy in ("passthrough", "mlproxy"):
+        res = run_simulation(
+            policy=policy,
+            sla=sla,
+            workload=workload,
+            arrivals=PoissonProcess(rate=30.0, duration=900.0),
+            platform_config=PlatformConfig(initial_scale=1),
+            duration=900.0,
+            warmup=180.0,
+            seed=0,
+        )
+        s = res.summary
+        label = "stock gateway" if policy == "passthrough" else "MLProxy    "
+        print(f"{label}: avg containers {s['avg_containers']:5.2f}  "
+              f"SLO violations {s['violation_pct']:6.3f}%  "
+              f"avg batch {s['avg_batch_size']:5.2f}  "
+              f"P95 {s['p95']*1000:4.0f} ms")
+
+
+if __name__ == "__main__":
+    main()

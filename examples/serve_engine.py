@@ -1,0 +1,71 @@
+"""End-to-end serving driver: MLProxy fronting the REAL JAX engine.
+
+Hybrid loop: simulated Poisson arrivals drive the proxy; every dispatched
+batch executes a real bucketed prefill+decode on this host (the measured
+wall time IS the upstream latency the monitor learns from). Demonstrates:
+batch-size bucketing, the compile cache, adaptive Max_BS growth, and the
+replica pool's failover.
+
+    PYTHONPATH=src python examples/serve_engine.py [--requests 300]
+"""
+import argparse
+
+import jax
+
+from repro.configs import get_config
+from repro.core import SLAConfig
+from repro.serverless.platform import PlatformConfig
+from repro.serving.batcher import EngineBackedLatency
+from repro.serving.engine import EngineConfig, InferenceEngine
+from repro.simulation.arrivals import PoissonProcess
+from repro.simulation.simulator import run_simulation
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--arch", default="qwen2-0.5b")
+    p.add_argument("--rate", type=float, default=40.0)
+    p.add_argument("--duration", type=float, default=60.0)
+    p.add_argument("--slo-ms", type=float, default=2000.0)
+    args = p.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    ecfg = EngineConfig(batch_buckets=(1, 2, 4, 8, 16, 32),
+                        prompt_buckets=(16,), max_len=32, gen_len=4)
+    engine = InferenceEngine(cfg, ecfg, rng=jax.random.PRNGKey(0))
+    print(f"[serve] warming compile cache for {cfg.name} "
+          f"(buckets {ecfg.batch_buckets}) ...")
+    engine.warmup(plen=16)
+    print(f"[serve] {engine.compile_count} compiled programs cached")
+
+    latency = EngineBackedLatency(engine, prompt_len=16, gen_len=4)
+    sla = SLAConfig(slo_target=args.slo_ms / 1000.0)
+    from repro.core import OptimizerConfig
+
+    res = run_simulation(
+        policy="mlproxy",
+        sla=sla,
+        workload=latency,  # real JAX execution per dispatched batch
+        arrivals=PoissonProcess(rate=args.rate, duration=args.duration),
+        platform_config=PlatformConfig(initial_scale=1, cold_start=0.5),
+        duration=args.duration,
+        seed=0,
+        policy_kwargs={
+            "bucketing": "pow2",
+            # faster AIMD cadence so short demo runs show batch growth
+            "optimizer": OptimizerConfig(update_interval=5.0, initial_max_bs=2),
+        },
+    )
+    s = res.summary
+    print(f"\n[serve] completed {s['completed']:.0f} requests "
+          f"({engine.stats['batches']:.0f} real JAX batches, "
+          f"{engine.stats['tokens']:.0f} tokens generated)")
+    print(f"[serve] avg batch {s['avg_batch_size']:.2f}, "
+          f"P95 {s['p95']*1000:.0f} ms, violations {s['violation_pct']:.2f}%, "
+          f"avg containers {s['avg_containers']:.2f}")
+    print(f"[serve] padding waste is visible in engine timings; "
+          f"the monitor keys latency windows by bucket (TPU adaptation)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Train a ~100M-parameter qwen2-family model for a few hundred steps on
+CPU, with checkpoint/restart (kill it mid-run and re-invoke: it resumes
+from the last committed step, including the data-iterator position).
+
+    PYTHONPATH=src python examples/train_100m.py [--steps 200]
+"""
+import argparse
+import dataclasses
+
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig
+from repro.launch.train import TrainConfig, train
+from repro.optim.adamw import AdamWConfig
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--steps", type=int, default=200)
+    p.add_argument("--checkpoint-dir", default="/tmp/repro_train_100m")
+    args = p.parse_args()
+
+    # ~100M params: qwen2 family at reduced width/depth
+    cfg = dataclasses.replace(
+        get_config("qwen2-0.5b"),
+        name="qwen2-100m",
+        num_layers=6,
+        d_model=512,
+        num_heads=8,
+        num_kv_heads=2,
+        head_dim=64,
+        d_ff=2048,
+        vocab_size=65536,
+        max_seq_len=512,
+        param_dtype="float32",
+        compute_dtype="float32",
+        remat=False,
+        attn_q_chunk=128,
+    )
+    print(f"[example] {cfg.name}: {cfg.param_count()/1e6:.1f}M params")
+    out = train(
+        cfg,
+        TrainConfig(steps=args.steps, log_every=10, checkpoint_every=50,
+                    checkpoint_dir=args.checkpoint_dir,
+                    optimizer=AdamWConfig(learning_rate=1e-3)),
+        DataConfig(seq_len=128, global_batch=8, vocab_size=cfg.vocab_size),
+    )
+    print(f"[example] loss {out['first_loss']:.3f} → {out['final_loss']:.3f} "
+          f"over {out['steps']} steps")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Architecture config registry: ``get_config("<arch-id>")``.
+
+Ten assigned architectures (see DESIGN.md §3) plus the paper's own
+serving workloads. Full configs are exercised only via the dry-run;
+``get_config(arch).reduced()`` gives the CPU smoke-test variant.
+"""
+from repro.configs.base import ModelConfig, ShapeCell, SHAPES, SHAPES_BY_NAME  # noqa: F401
+
+from repro.configs.llama4_scout_17b_a16e import CONFIG as _llama4
+from repro.configs.kimi_k2_1t_a32b import CONFIG as _kimi
+from repro.configs.starcoder2_15b import CONFIG as _starcoder2
+from repro.configs.qwen2_0_5b import CONFIG as _qwen2
+from repro.configs.nemotron_4_340b import CONFIG as _nemotron
+from repro.configs.yi_34b import CONFIG as _yi
+from repro.configs.zamba2_1_2b import CONFIG as _zamba2
+from repro.configs.xlstm_1_3b import CONFIG as _xlstm
+from repro.configs.seamless_m4t_large_v2 import CONFIG as _seamless
+from repro.configs.internvl2_76b import CONFIG as _internvl
+
+REGISTRY = {
+    "llama4-scout-17b-a16e": _llama4,
+    "kimi-k2-1t-a32b": _kimi,
+    "starcoder2-15b": _starcoder2,
+    "qwen2-0.5b": _qwen2,
+    "nemotron-4-340b": _nemotron,
+    "yi-34b": _yi,
+    "zamba2-1.2b": _zamba2,
+    "xlstm-1.3b": _xlstm,
+    "seamless-m4t-large-v2": _seamless,
+    "internvl2-76b": _internvl,
+}
+
+ARCH_IDS = tuple(REGISTRY)
+
+
+def get_config(arch: str) -> ModelConfig:
+    try:
+        return REGISTRY[arch]
+    except KeyError:
+        raise KeyError(f"unknown arch {arch!r}; available: {sorted(REGISTRY)}") from None

@@ -1,0 +1,22 @@
+"""xLSTM-1.3B. 48 blocks (d_model=2048, 4 heads) in xLSTM[7:1] layout:
+super-blocks of 7 mLSTM + 1 sLSTM. d_ff=0 — blocks carry their own
+up/down projections. Sub-quadratic → runs the long_500k cell.
+[arXiv:2405.04517; unverified]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-1.3b",
+    family="ssm",
+    num_layers=48,
+    d_model=2048,
+    num_heads=4,
+    num_kv_heads=4,
+    head_dim=512,
+    d_ff=0,
+    vocab_size=50304,
+    activation="silu",
+    norm="layernorm",
+    mlstm_per_slstm=7,
+    max_seq_len=524288,
+)

@@ -1,0 +1,22 @@
+"""MLProxy core — the paper's contribution as a composable library.
+
+Public surface:
+  * :class:`~repro.core.proxy.MLProxy` — the adaptive reverse proxy.
+  * :class:`~repro.core.config.ProxyConfig` / ``SLAConfig`` /
+    ``MonitorConfig`` / ``OptimizerConfig`` — configuration.
+  * :mod:`repro.core.policies` — baseline policies for comparison.
+  * :mod:`repro.core.jax_controller` — fleet-scale vectorized controller.
+"""
+from repro.core.config import (  # noqa: F401
+    MonitorConfig,
+    OptimizerConfig,
+    ProxyConfig,
+    SLAConfig,
+    bucket_of,
+    ms,
+)
+from repro.core.monitor import LatencyWindow, P2Quantile, SmartMonitor  # noqa: F401
+from repro.core.optimizer import AIMDBatchOptimizer  # noqa: F401
+from repro.core.proxy import MLProxy  # noqa: F401
+from repro.core.request import Batch, Request  # noqa: F401
+from repro.core.scheduler import QueueScheduler  # noqa: F401

@@ -1,0 +1,170 @@
+"""Vectorized, jittable MLProxy control plane for fleet-scale deployments.
+
+Beyond the paper: a cloud provider shipping MLProxy "as part of their API
+Gateway offering" (paper §6) hosts *thousands* of endpoints. Running one
+Python object per endpoint is fine at paper scale (one endpoint); at fleet
+scale the control decisions themselves become a throughput problem. This
+module re-expresses the two MLProxy decision loops as pure JAX functions
+over struct-of-arrays state, so a single jitted call advances *all*
+endpoints at once:
+
+* :func:`aimd_step` — Algorithm 2 for N endpoints (one fused vector op).
+* :func:`timeout_step` — Algorithm 1's DTO/TO computation for N endpoints.
+* latency statistics as fixed-size ring buffers per (endpoint, bucket) with
+  a masked percentile — the sliding window of the Smart Monitor, kept in
+  device memory.
+
+All functions are `jax.jit`-compatible and pure; the host loop owns the
+event plumbing and calls these at tick granularity. Property tests assert
+equivalence with the scalar Python implementation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class FleetState:
+    """Struct-of-arrays control state for N endpoints × B batch-size buckets.
+
+    Shapes:
+      max_bs:        (N,) float — AIMD batch-size state (raw, ≥ 1).
+      ring:          (N, B, W) float — latency samples per bucket (NaN = empty).
+      ring_pos:      (N, B) int32 — next write slot per ring.
+      e2e_ring:      (N, We) float — end-to-end latency samples (NaN = empty).
+      e2e_pos:       (N,) int32.
+      to_count:      (N,) int32 — timeout dispatches this interval.
+      disp_count:    (N,) int32 — total dispatches this interval.
+    """
+
+    max_bs: jax.Array
+    ring: jax.Array
+    ring_pos: jax.Array
+    e2e_ring: jax.Array
+    e2e_pos: jax.Array
+    to_count: jax.Array
+    disp_count: jax.Array
+
+
+def init_fleet(n_endpoints: int, n_buckets: int, window: int = 64,
+               e2e_window: int = 256, initial_max_bs: float = 1.0) -> FleetState:
+    return FleetState(
+        max_bs=jnp.full((n_endpoints,), initial_max_bs, jnp.float32),
+        ring=jnp.full((n_endpoints, n_buckets, window), jnp.nan, jnp.float32),
+        ring_pos=jnp.zeros((n_endpoints, n_buckets), jnp.int32),
+        e2e_ring=jnp.full((n_endpoints, e2e_window), jnp.nan, jnp.float32),
+        e2e_pos=jnp.zeros((n_endpoints,), jnp.int32),
+        to_count=jnp.zeros((n_endpoints,), jnp.int32),
+        disp_count=jnp.zeros((n_endpoints,), jnp.int32),
+    )
+
+
+def _masked_percentile(x: jax.Array, q: float) -> jax.Array:
+    """Percentile over the non-NaN suffix of the trailing axis.
+
+    Empty windows yield NaN (callers treat NaN as "no estimate"). Uses a
+    sort with NaNs pushed to the end and a per-row nearest-rank gather —
+    O(W log W) on-device, no host sync.
+    """
+    sorted_x = jnp.sort(x, axis=-1)  # NaNs sort to the end
+    count = jnp.sum(~jnp.isnan(x), axis=-1)
+    rank = jnp.ceil(q / 100.0 * count).astype(jnp.int32) - 1
+    rank = jnp.clip(rank, 0, x.shape[-1] - 1)
+    picked = jnp.take_along_axis(sorted_x, rank[..., None], axis=-1)[..., 0]
+    return jnp.where(count > 0, picked, jnp.nan)
+
+
+@functools.partial(jax.jit, static_argnames=("percentile",))
+def record_upstream(state: FleetState, endpoint: jax.Array, bucket: jax.Array,
+                    latency: jax.Array, percentile: float = 95.0) -> FleetState:
+    """Scatter a batch of (endpoint, bucket, latency) observations."""
+    w = state.ring.shape[-1]
+    pos = state.ring_pos[endpoint, bucket]
+    ring = state.ring.at[endpoint, bucket, pos].set(latency)
+    ring_pos = state.ring_pos.at[endpoint, bucket].set((pos + 1) % w)
+    return dataclasses.replace(state, ring=ring, ring_pos=ring_pos)
+
+
+@jax.jit
+def record_e2e(state: FleetState, endpoint: jax.Array, latency: jax.Array) -> FleetState:
+    w = state.e2e_ring.shape[-1]
+    pos = state.e2e_pos[endpoint]
+    ring = state.e2e_ring.at[endpoint, pos].set(latency)
+    e2e_pos = state.e2e_pos.at[endpoint].set((pos + 1) % w)
+    return dataclasses.replace(state, e2e_ring=ring, e2e_pos=e2e_pos)
+
+
+@jax.jit
+def record_dispatch(state: FleetState, endpoint: jax.Array,
+                    was_timeout: jax.Array) -> FleetState:
+    disp = state.disp_count.at[endpoint].add(1)
+    to = state.to_count.at[endpoint].add(was_timeout.astype(jnp.int32))
+    return dataclasses.replace(state, disp_count=disp, to_count=to)
+
+
+@functools.partial(jax.jit, static_argnames=("percentile",))
+def timeout_step(state: FleetState, queue_len: jax.Array, frt: jax.Array,
+                 slo: jax.Array, percentile: float = 95.0,
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Algorithm 1's decision for all N endpoints at once.
+
+    Args:
+      queue_len: (N,) int32 current queue sizes (N_q).
+      frt: (N,) seconds since each endpoint's oldest queued request.
+      slo: (N,) SLO targets.
+    Returns:
+      (dispatch_now, timeout): (N,) bool — dispatch immediately;
+      (N,) float — relative timeout for endpoints not dispatching now.
+    """
+    n, b, _ = state.ring.shape
+    # RT95 for batch one larger than the queue; bucket index clips at B-1.
+    probe = jnp.clip(queue_len, 0, b - 1)  # bucket of N_q+1 (precomputed map)
+    est = _masked_percentile(state.ring[jnp.arange(n), probe, :], percentile)
+    # Fallback for empty windows: max over *all* buckets' percentiles (a
+    # conservative stand-in for the regression fallback; NaN → optimistic 0).
+    per_bucket = _masked_percentile(state.ring, percentile)  # (N, B)
+    fallback = jnp.nanmax(
+        jnp.where(jnp.isnan(per_bucket), -jnp.inf, per_bucket), axis=-1
+    )
+    fallback = jnp.where(jnp.isfinite(fallback), fallback, 0.0)
+    est = jnp.where(jnp.isnan(est), fallback, est)
+    dto = slo - est
+    to = dto - frt
+    dispatch_now = (to <= 0.0) & (queue_len > 0)
+    full = queue_len >= jnp.maximum(1.0, jnp.floor(state.max_bs))
+    return dispatch_now | full, jnp.maximum(to, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("percentile",))
+def aimd_step(state: FleetState, slo: jax.Array, *, to_thresh: float = 0.9,
+              compliance_factor: float = 0.8, inc_step: float = 1.0,
+              dec_mult: float = 0.8, max_cap: float = 256.0,
+              percentile: float = 95.0) -> FleetState:
+    """Algorithm 2 for all N endpoints (one fused update + interval reset)."""
+    rt = _masked_percentile(state.e2e_ring, percentile)  # (N,)
+    to_ratio = jnp.where(
+        state.disp_count > 0, state.to_count / jnp.maximum(state.disp_count, 1), 0.0
+    )
+    rt_violation = jnp.where(jnp.isnan(rt), False, rt > compliance_factor * slo)
+    violation = (to_ratio > to_thresh) | rt_violation
+    new_bs = jnp.where(
+        violation,
+        jnp.maximum(1.0, state.max_bs * dec_mult),
+        jnp.minimum(max_cap, state.max_bs + inc_step),
+    )
+    return dataclasses.replace(
+        state,
+        max_bs=new_bs,
+        to_count=jnp.zeros_like(state.to_count),
+        disp_count=jnp.zeros_like(state.disp_count),
+    )
+
+
+def effective_max_bs(state: FleetState) -> jax.Array:
+    return jnp.maximum(1, jnp.floor(state.max_bs).astype(jnp.int32))

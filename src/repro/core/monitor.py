@@ -1,0 +1,354 @@
+"""Smart Monitor — sliding-window latency statistics keyed by batch size.
+
+Implements the paper's monitoring component (§2.2): for every batch size the
+proxy has dispatched, keep a sliding window of upstream response times and
+expose the windowed 95th percentile (``RT95[bs]``); additionally keep a
+window of end-to-end response times (queueing + proxy + upstream) used by
+the AIMD optimizer for SLO-compliance decisions.
+
+Beyond the paper, three estimator back-ends are provided (see
+``MonitorConfig.estimator``): the paper-faithful per-size windowed
+percentile, a robust linear regression over the populated windows (used as
+the fallback for batch sizes never observed — the paper is silent on this
+cold-start case), and a P² streaming quantile with O(1) memory per size.
+"""
+from __future__ import annotations
+
+import bisect
+import collections
+import math
+from typing import Deque, Dict, List, Optional, Tuple
+
+from repro.core.config import MonitorConfig, SLAConfig
+
+
+class LatencyWindow:
+    """Sliding window of (timestamp, latency) with lazy horizon eviction."""
+
+    __slots__ = ("maxlen", "horizon", "_buf")
+
+    def __init__(self, maxlen: int, horizon: float) -> None:
+        self.maxlen = maxlen
+        self.horizon = horizon
+        self._buf: Deque[Tuple[float, float]] = collections.deque(maxlen=maxlen)
+
+    def add(self, now: float, latency: float) -> None:
+        self._buf.append((now, latency))
+
+    def _evict(self, now: float) -> None:
+        cutoff = now - self.horizon
+        while self._buf and self._buf[0][0] < cutoff:
+            self._buf.popleft()
+
+    def __len__(self) -> int:
+        return len(self._buf)
+
+    def values(self, now: Optional[float] = None) -> List[float]:
+        if now is not None:
+            self._evict(now)
+        return [v for (_, v) in self._buf]
+
+    def percentile(self, q: float, now: Optional[float] = None,
+                   outlier_mult: float = 0.0) -> Optional[float]:
+        """Empirical percentile (nearest-rank, higher interpolation).
+
+        ``outlier_mult > 0`` winsorizes: samples above ``outlier_mult ×
+        median`` are dropped before ranking (robustness to cold-start
+        storms; see MonitorConfig.outlier_mult).
+        """
+        vals = sorted(self.values(now))
+        if not vals:
+            return None
+        if outlier_mult > 0 and len(vals) >= 4:
+            med = vals[len(vals) // 2]
+            kept = [v for v in vals if v <= outlier_mult * med]
+            if kept:
+                vals = kept
+        # Higher interpolation keeps the estimate conservative for SLOs.
+        rank = min(len(vals) - 1, max(0, math.ceil(q / 100.0 * len(vals)) - 1))
+        return vals[rank]
+
+    def mean(self, now: Optional[float] = None) -> Optional[float]:
+        vals = self.values(now)
+        return sum(vals) / len(vals) if vals else None
+
+    def snapshot(self) -> dict:
+        return {"maxlen": self.maxlen, "horizon": self.horizon, "buf": list(self._buf)}
+
+    @classmethod
+    def restore(cls, state: dict) -> "LatencyWindow":
+        w = cls(state["maxlen"], state["horizon"])
+        w._buf.extend(state["buf"])
+        return w
+
+
+class P2Quantile:
+    """P² streaming quantile estimator (Jain & Chlamtac, 1985).
+
+    O(1) memory per tracked quantile; used as an optional back-end for
+    very high-rate endpoints where keeping windows is wasteful.
+    """
+
+    __slots__ = ("p", "n", "q", "npos", "dn", "_init")
+
+    def __init__(self, p: float) -> None:
+        if not 0 < p < 1:
+            raise ValueError("p must be in (0,1)")
+        self.p = p
+        self._init: List[float] = []
+        self.n: List[int] = []
+        self.q: List[float] = []
+        self.npos: List[float] = []
+        self.dn: List[float] = []
+
+    def add(self, x: float) -> None:
+        if len(self._init) < 5:
+            bisect.insort(self._init, x)
+            if len(self._init) == 5:
+                self.q = list(self._init)
+                self.n = [1, 2, 3, 4, 5]
+                p = self.p
+                self.npos = [1, 1 + 2 * p, 1 + 4 * p, 3 + 2 * p, 5]
+                self.dn = [0, p / 2, p, (1 + p) / 2, 1]
+            return
+        q, n, npos = self.q, self.n, self.npos
+        if x < q[0]:
+            q[0] = x
+            k = 0
+        elif x >= q[4]:
+            q[4] = x
+            k = 3
+        else:
+            k = 0
+            for i in range(1, 4):
+                if x < q[i]:
+                    k = i - 1
+                    break
+            else:
+                k = 3
+        for i in range(k + 1, 5):
+            n[i] += 1
+        for i in range(5):
+            npos[i] += self.dn[i]
+        for i in range(1, 4):
+            d = npos[i] - n[i]
+            if (d >= 1 and n[i + 1] - n[i] > 1) or (d <= -1 and n[i - 1] - n[i] < -1):
+                d = 1 if d >= 0 else -1
+                # parabolic prediction
+                qi = q[i] + d / (n[i + 1] - n[i - 1]) * (
+                    (n[i] - n[i - 1] + d) * (q[i + 1] - q[i]) / (n[i + 1] - n[i])
+                    + (n[i + 1] - n[i] - d) * (q[i] - q[i - 1]) / (n[i] - n[i - 1])
+                )
+                if not (q[i - 1] < qi < q[i + 1]):
+                    # linear fallback
+                    qi = q[i] + d * (q[i + d] - q[i]) / (n[i + d] - n[i])
+                q[i] = qi
+                n[i] += d
+
+    @property
+    def count(self) -> int:
+        return self.n[4] if self.n else len(self._init)
+
+    def value(self) -> Optional[float]:
+        if self.q:
+            return self.q[2]
+        if self._init:
+            # not enough samples for markers: empirical on what we have
+            k = max(0, math.ceil(self.p * len(self._init)) - 1)
+            return self._init[k]
+        return None
+
+    def snapshot(self) -> dict:
+        return {
+            "p": self.p,
+            "init": list(self._init),
+            "n": list(self.n),
+            "q": list(self.q),
+            "npos": list(self.npos),
+            "dn": list(self.dn),
+        }
+
+    @classmethod
+    def restore(cls, state: dict) -> "P2Quantile":
+        est = cls(state["p"])
+        est._init = list(state["init"])
+        est.n = list(state["n"])
+        est.q = list(state["q"])
+        est.npos = list(state["npos"])
+        est.dn = list(state["dn"])
+        return est
+
+
+def _theil_sen_fit(points: List[Tuple[float, float]]) -> Tuple[float, float]:
+    """Robust line fit (median of pairwise slopes). Returns (a, b): y≈a+b·x."""
+    if len(points) == 1:
+        return points[0][1], 0.0
+    slopes = []
+    for i in range(len(points)):
+        for j in range(i + 1, len(points)):
+            (x0, y0), (x1, y1) = points[i], points[j]
+            if x1 != x0:
+                slopes.append((y1 - y0) / (x1 - x0))
+    if not slopes:
+        ys = [y for _, y in points]
+        return sorted(ys)[len(ys) // 2], 0.0
+    slopes.sort()
+    b = slopes[len(slopes) // 2]
+    residuals = sorted(y - b * x for x, y in points)
+    a = residuals[len(residuals) // 2]
+    return a, b
+
+
+class SmartMonitor:
+    """Latency statistics provider for the scheduler and AIMD optimizer.
+
+    Responsibilities (paper §2.2):
+      * per-batch-size sliding windows of upstream response times →
+        ``upstream_percentile(bs)`` (the scheduler's ``RT95[N_q+1]``);
+      * sliding window of end-to-end response times → ``e2e_percentile()``;
+      * dispatch-cause accounting over the current optimizer interval →
+        ``timeout_ratio()``.
+    """
+
+    def __init__(self, config: MonitorConfig, sla: SLAConfig) -> None:
+        self.config = config
+        self.sla = sla
+        self._upstream: Dict[int, LatencyWindow] = {}
+        self._p2: Dict[int, P2Quantile] = {}
+        self._e2e = LatencyWindow(config.window_size * 4, config.e2e_horizon)
+        # dispatch-cause counters for the *current* optimizer interval
+        self._timeout_dispatches = 0
+        self._total_dispatches = 0
+        # lifetime counters (metrics/reporting)
+        self.lifetime_dispatches = 0
+        self.lifetime_requests = 0
+        self.lifetime_violations = 0
+
+    # ---------------------------------------------------------------- record
+    def record_upstream(self, batch_size: int, latency: float, now: float) -> None:
+        """Record one upstream batch completion."""
+        if batch_size <= 0:
+            raise ValueError("batch_size must be >= 1")
+        win = self._upstream.get(batch_size)
+        if win is None:
+            win = LatencyWindow(self.config.window_size, self.config.window_horizon)
+            self._upstream[batch_size] = win
+        win.add(now, latency)
+        if self.config.estimator == "p2":
+            est = self._p2.get(batch_size)
+            if est is None:
+                est = P2Quantile(self.sla.percentile / 100.0)
+                self._p2[batch_size] = est
+            est.add(latency)
+
+    def record_e2e(self, latency: float, now: float) -> None:
+        """Record one end-to-end (user-observed) response time."""
+        self._e2e.add(now, latency)
+        self.lifetime_requests += 1
+        if latency > self.sla.slo_target:
+            self.lifetime_violations += 1
+
+    def record_dispatch(self, batch_size: int, cause: str) -> None:
+        """cause ∈ {'full', 'timeout', 'flush'}."""
+        self._total_dispatches += 1
+        self.lifetime_dispatches += 1
+        if cause == "timeout":
+            self._timeout_dispatches += 1
+
+    # -------------------------------------------------------------- estimate
+    def upstream_percentile(self, batch_size: int, now: float) -> float:
+        """Estimated upstream latency percentile for ``batch_size``.
+
+        Paper-faithful path: the windowed empirical percentile for that
+        exact batch size. Cold-start/fallback: robust regression over the
+        percentiles of every populated window (so unseen sizes interpolate /
+        extrapolate sensibly); before *any* observation, an optimistic
+        default that makes the scheduler batch until data arrives.
+        """
+        cfg = self.config
+        if cfg.estimator == "p2":
+            est = self._p2.get(batch_size)
+            if est is not None and est.count >= cfg.min_samples:
+                v = est.value()
+                if v is not None:
+                    return v
+        else:
+            win = self._upstream.get(batch_size)
+            if win is not None and len(win.values(now)) >= cfg.min_samples:
+                v = win.percentile(self.sla.percentile, now,
+                                   outlier_mult=cfg.outlier_mult)
+                if v is not None:
+                    return v
+        return self._regression_estimate(batch_size, now)
+
+    def _regression_estimate(self, batch_size: int, now: float) -> float:
+        points: List[Tuple[float, float]] = []
+        for bs, win in self._upstream.items():
+            if len(win.values(now)) > 0:
+                p = win.percentile(self.sla.percentile, now)
+                if p is not None:
+                    points.append((float(bs), p))
+        if not points:
+            return self.config.optimistic_default
+        if len(points) == 1:
+            # single observed size: assume flat (sub-linear optimism); the
+            # AIMD loop corrects any resulting violation.
+            return points[0][1]
+        a, b = _theil_sen_fit(points)
+        est = a + b * batch_size
+        lo = min(y for _, y in points)
+        return max(est, 0.0 if est >= 0 else 0.0, 0.5 * lo)
+
+    def e2e_percentile(self, now: float) -> Optional[float]:
+        return self._e2e.percentile(self.sla.percentile, now)
+
+    def e2e_mean(self, now: float) -> Optional[float]:
+        return self._e2e.mean(now)
+
+    def timeout_ratio(self) -> float:
+        if self._total_dispatches == 0:
+            return 0.0
+        return self._timeout_dispatches / self._total_dispatches
+
+    def reset_interval(self) -> None:
+        """Called by the optimizer at the end of each update interval."""
+        self._timeout_dispatches = 0
+        self._total_dispatches = 0
+
+    # --------------------------------------------------------------- metrics
+    def violation_rate(self) -> float:
+        if self.lifetime_requests == 0:
+            return 0.0
+        return self.lifetime_violations / self.lifetime_requests
+
+    def observed_batch_sizes(self) -> List[int]:
+        return sorted(self._upstream)
+
+    # ------------------------------------------------------- fault tolerance
+    def snapshot(self) -> dict:
+        return {
+            "upstream": {bs: w.snapshot() for bs, w in self._upstream.items()},
+            "p2": {bs: e.snapshot() for bs, e in self._p2.items()},
+            "e2e": self._e2e.snapshot(),
+            "timeout_dispatches": self._timeout_dispatches,
+            "total_dispatches": self._total_dispatches,
+            "lifetime": (
+                self.lifetime_dispatches,
+                self.lifetime_requests,
+                self.lifetime_violations,
+            ),
+        }
+
+    def restore(self, state: dict) -> None:
+        self._upstream = {
+            int(bs): LatencyWindow.restore(s) for bs, s in state["upstream"].items()
+        }
+        self._p2 = {int(bs): P2Quantile.restore(s) for bs, s in state["p2"].items()}
+        self._e2e = LatencyWindow.restore(state["e2e"])
+        self._timeout_dispatches = state["timeout_dispatches"]
+        self._total_dispatches = state["total_dispatches"]
+        (
+            self.lifetime_dispatches,
+            self.lifetime_requests,
+            self.lifetime_violations,
+        ) = state["lifetime"]

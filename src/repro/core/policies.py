@@ -1,0 +1,256 @@
+"""Batching policies: MLProxy plus the baselines it is compared against.
+
+Every policy exposes the same event-driven surface as :class:`MLProxy`
+(`on_request`, `on_response`, `on_timer`, `next_event_time`, `flush`,
+`stats`, `snapshot`/`restore`), so the simulator and the serving engine can
+swap them freely:
+
+* ``PassthroughPolicy`` — the paper's "MLProxy off" baseline: every request
+  is forwarded upstream immediately as a batch of one (what a stock API
+  gateway does).
+* ``StaticBatchPolicy`` — fixed max batch size + fixed queue timeout
+  (what naive middleware does; no SLA awareness).
+* ``ClipperAIMDPolicy`` — Clipper-style adaptive batching (Crankshaw et al.,
+  NSDI'17): AIMD directly on the batch size driven only by whether the
+  latency SLO was met, with a fixed small queue timeout.
+* ``OracleStaticPolicy`` — BATCH-style profiled baseline (Ali et al.,
+  SC'20): given an offline-profiled latency curve, pick the largest batch
+  size whose predicted latency fits under the SLO and derive the timeout
+  from the leftover budget. Requires prior profiling — exactly the
+  requirement MLProxy removes.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+from repro.core.config import MonitorConfig, ProxyConfig, SLAConfig, bucket_of
+from repro.core.monitor import SmartMonitor
+from repro.core.proxy import MLProxy
+from repro.core.request import Batch, Request
+
+
+class BatchingPolicy:
+    """Common bookkeeping for non-MLProxy policies."""
+
+    def __init__(self, sla: SLAConfig, dispatch_fn: Callable[[Batch], None],
+                 monitor_config: Optional[MonitorConfig] = None,
+                 bucketing: Optional[str] = None) -> None:
+        self.sla = sla
+        self.dispatch_fn = dispatch_fn
+        self.monitor = SmartMonitor(monitor_config or MonitorConfig(), sla)
+        self.bucketing = bucketing
+        self._queue = []
+        self._first_arrival: Optional[float] = None
+        self.next_deadline: Optional[float] = None
+        self.dispatched_batches = 0
+        self.dispatched_requests = 0
+
+    # -------- subclass interface ------------------------------------------
+    def target_batch_size(self, now: float) -> int:
+        raise NotImplementedError
+
+    def queue_timeout(self, now: float) -> Optional[float]:
+        """Relative timeout measured from first-request arrival, or None."""
+        raise NotImplementedError
+
+    # -------- shared machinery --------------------------------------------
+    def on_request(self, request: Request, now: float) -> None:
+        if not self._queue:
+            self._first_arrival = now
+        self._queue.append(request)
+        if len(self._queue) >= max(1, self.target_batch_size(now)):
+            self._dispatch(now, "full")
+            return
+        to = self.queue_timeout(now)
+        if to is None:
+            self.next_deadline = None
+        else:
+            deadline = (self._first_arrival or now) + to
+            if deadline <= now:
+                self._dispatch(now, "timeout")
+            else:
+                self.next_deadline = deadline
+
+    def on_timer(self, now: float) -> None:
+        if self.next_deadline is not None and now + 1e-12 >= self.next_deadline:
+            if self._queue:
+                self._dispatch(now, "timeout")
+            else:
+                self.next_deadline = None
+
+    def on_response(self, batch: Batch, upstream_latency: float, now: float) -> None:
+        self.monitor.record_upstream(batch.effective_size, upstream_latency, now)
+        batch.complete(now)
+        for r in batch.requests:
+            self.monitor.record_e2e(r.e2e_latency, now)
+
+    def next_event_time(self, now: float) -> Optional[float]:
+        return self.next_deadline
+
+    def flush(self, now: float) -> None:
+        if self._queue:
+            self._dispatch(now, "flush")
+
+    def _dispatch(self, now: float, cause: str) -> None:
+        batch = Batch(requests=self._queue, dispatch_time=now, cause=cause)
+        if self.bucketing is not None:
+            batch.bucket_size = bucket_of(batch.size, self.bucketing)
+        for r in batch.requests:
+            r.dispatch_time = now
+        self._queue = []
+        self._first_arrival = None
+        self.next_deadline = None
+        self.dispatched_batches += 1
+        self.dispatched_requests += batch.size
+        self.monitor.record_dispatch(batch.size, cause)
+        self.dispatch_fn(batch)
+
+    @property
+    def max_bs(self) -> int:
+        return self.target_batch_size(0.0)
+
+    def stats(self, now: float) -> dict:
+        return {
+            "max_bs": self.target_batch_size(now),
+            "queue_len": len(self._queue),
+            "dispatched_batches": self.dispatched_batches,
+            "dispatched_requests": self.dispatched_requests,
+            "avg_batch_size": (
+                self.dispatched_requests / self.dispatched_batches
+                if self.dispatched_batches else 0.0
+            ),
+            "e2e_p": self.monitor.e2e_percentile(now),
+            "violation_rate": self.monitor.violation_rate(),
+            "timeout_ratio": self.monitor.timeout_ratio(),
+        }
+
+    def snapshot(self) -> dict:
+        return {
+            "monitor": self.monitor.snapshot(),
+            "queue": list(self._queue),
+            "first_arrival": self._first_arrival,
+            "next_deadline": self.next_deadline,
+            "counts": (self.dispatched_batches, self.dispatched_requests),
+        }
+
+    def restore(self, state: dict) -> None:
+        self.monitor.restore(state["monitor"])
+        self._queue = list(state["queue"])
+        self._first_arrival = state["first_arrival"]
+        self.next_deadline = state["next_deadline"]
+        self.dispatched_batches, self.dispatched_requests = state["counts"]
+
+
+class PassthroughPolicy(BatchingPolicy):
+    """No batching: forward every request immediately (stock API gateway)."""
+
+    def target_batch_size(self, now: float) -> int:
+        return 1
+
+    def queue_timeout(self, now: float) -> Optional[float]:
+        return 0.0
+
+
+class StaticBatchPolicy(BatchingPolicy):
+    """Fixed batch size and fixed queue timeout."""
+
+    def __init__(self, sla, dispatch_fn, batch_size: int, timeout: float, **kw) -> None:
+        super().__init__(sla, dispatch_fn, **kw)
+        self._bs = batch_size
+        self._to = timeout
+
+    def target_batch_size(self, now: float) -> int:
+        return self._bs
+
+    def queue_timeout(self, now: float) -> Optional[float]:
+        return self._to
+
+
+class ClipperAIMDPolicy(BatchingPolicy):
+    """Clipper-style AIMD: grow batch size additively while the windowed
+    latency percentile meets the SLO; back off multiplicatively otherwise.
+    The queue timeout is a fixed fraction of the SLO budget."""
+
+    def __init__(self, sla, dispatch_fn, inc: int = 1, dec_mult: float = 0.9,
+                 update_interval: float = 10.0, timeout_frac: float = 0.25,
+                 max_cap: int = 256, **kw) -> None:
+        super().__init__(sla, dispatch_fn, **kw)
+        self.inc = inc
+        self.dec_mult = dec_mult
+        self.update_interval = update_interval
+        self.timeout_frac = timeout_frac
+        self.max_cap = max_cap
+        self._bs = 1.0
+        self._last_update: Optional[float] = None
+
+    def target_batch_size(self, now: float) -> int:
+        return max(1, min(self.max_cap, int(self._bs)))
+
+    def queue_timeout(self, now: float) -> Optional[float]:
+        return self.sla.slo_target * self.timeout_frac
+
+    def on_timer(self, now: float) -> None:
+        super().on_timer(now)
+        if self._last_update is None:
+            self._last_update = now
+            return
+        # epsilon tolerance: without it a timer that fires a float-ulp
+        # before the interval boundary never advances _last_update while
+        # next_event_time keeps returning the same instant (spin)
+        if now - self._last_update >= self.update_interval - 1e-9:
+            p = self.monitor.e2e_percentile(now)
+            if p is not None and p > self.sla.slo_target:
+                self._bs = max(1.0, self._bs * self.dec_mult)
+            else:
+                self._bs = min(float(self.max_cap), self._bs + self.inc)
+            self._last_update = now
+
+    def next_event_time(self, now: float) -> Optional[float]:
+        nxt = (self._last_update + self.update_interval
+               if self._last_update is not None
+               else now + self.update_interval)
+        if self.next_deadline is not None:
+            return min(self.next_deadline, nxt)
+        return nxt
+
+
+class OracleStaticPolicy(BatchingPolicy):
+    """BATCH-style profiled baseline: requires an offline latency model
+    ``latency_model(bs) -> p95 seconds`` (the profiling step MLProxy
+    removes) and solves for the largest SLO-feasible batch size."""
+
+    def __init__(self, sla, dispatch_fn, latency_model: Callable[[int], float],
+                 headroom: float = 0.9, max_cap: int = 256, **kw) -> None:
+        super().__init__(sla, dispatch_fn, **kw)
+        self.latency_model = latency_model
+        budget = sla.slo_target * headroom
+        bs = 1
+        for cand in range(1, max_cap + 1):
+            if latency_model(cand) <= budget:
+                bs = cand
+            else:
+                break
+        self._bs = bs
+        self._to = max(0.0, budget - latency_model(bs))
+
+    def target_batch_size(self, now: float) -> int:
+        return self._bs
+
+    def queue_timeout(self, now: float) -> Optional[float]:
+        return self._to
+
+
+def make_policy(name: str, sla: SLAConfig, dispatch_fn, **kwargs):
+    """Factory used by the simulator and benchmarks."""
+    if name == "mlproxy":
+        proxy_cfg = kwargs.pop("proxy_config", None) or ProxyConfig(sla=sla, **kwargs)
+        return MLProxy(proxy_cfg, dispatch_fn)
+    if name == "passthrough":
+        return PassthroughPolicy(sla, dispatch_fn, **kwargs)
+    if name == "static":
+        return StaticBatchPolicy(sla, dispatch_fn, **kwargs)
+    if name == "clipper":
+        return ClipperAIMDPolicy(sla, dispatch_fn, **kwargs)
+    if name == "oracle":
+        return OracleStaticPolicy(sla, dispatch_fn, **kwargs)
+    raise ValueError(f"unknown policy {name!r}")

@@ -1,0 +1,112 @@
+"""MLProxy — the adaptive reverse proxy (Smart Proxy + Smart Monitor).
+
+Wires together the three paper components behind a small event-driven API:
+
+    proxy = MLProxy(config, dispatch_fn=send_upstream)
+    proxy.on_request(req, now)             # arrival path (Algorithm 1)
+    proxy.on_response(batch, latency, now) # upstream completion → monitor
+    proxy.on_timer(now)                    # timeout + AIMD ticks
+    proxy.next_event_time(now)             # earliest time on_timer is needed
+
+``dispatch_fn(batch)`` is the only outbound dependency — the simulator sends
+the batch to the modeled serverless platform; the real serving path sends it
+to the JAX :class:`~repro.serving.engine.InferenceEngine`.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+from repro.core.config import ProxyConfig
+from repro.core.monitor import SmartMonitor
+from repro.core.optimizer import AIMDBatchOptimizer
+from repro.core.request import Batch, Request
+from repro.core.scheduler import QueueScheduler
+
+
+class MLProxy:
+    """Single-endpoint adaptive batching proxy (the paper's contribution)."""
+
+    def __init__(self, config: ProxyConfig, dispatch_fn: Callable[[Batch], None]) -> None:
+        self.config = config
+        self.monitor = SmartMonitor(config.monitor, config.sla)
+        self.optimizer = AIMDBatchOptimizer(config.optimizer, config.sla, self.monitor)
+        self.scheduler = QueueScheduler(
+            config=config,
+            monitor=self.monitor,
+            dispatch_fn=dispatch_fn,
+            max_bs_fn=lambda: self.optimizer.max_bs,
+        )
+        self._started = False
+
+    # ------------------------------------------------------------------ api
+    def on_request(self, request: Request, now: float) -> None:
+        if not self._started:
+            # anchor the AIMD interval to first traffic
+            self.optimizer.maybe_update(now)
+            self._started = True
+        self.scheduler.on_arrival(request, now)
+
+    def on_response(self, batch: Batch, upstream_latency: float, now: float) -> None:
+        """Record a completed upstream batch; completes every member request."""
+        # Monitor keys by the *effective* (padded) size on bucketed backends:
+        # that is the size whose latency the next dispatch decision must
+        # predict.
+        self.monitor.record_upstream(batch.effective_size, upstream_latency, now)
+        batch.complete(now)
+        for r in batch.requests:
+            assert r.e2e_latency is not None
+            self.monitor.record_e2e(r.e2e_latency, now)
+
+    def on_timer(self, now: float) -> None:
+        self.scheduler.on_timer(now)
+        self.optimizer.maybe_update(now)
+
+    def next_event_time(self, now: float) -> Optional[float]:
+        """Earliest future time at which :meth:`on_timer` must run."""
+        candidates = []
+        if self.scheduler.next_deadline is not None:
+            candidates.append(self.scheduler.next_deadline)
+        if self._started:
+            candidates.append(self.optimizer.next_update_time(now))
+        return min(candidates) if candidates else None
+
+    def flush(self, now: float) -> None:
+        self.scheduler.flush(now)
+
+    # --------------------------------------------------------------- metrics
+    @property
+    def max_bs(self) -> int:
+        return self.optimizer.max_bs
+
+    def stats(self, now: float) -> dict:
+        return {
+            "max_bs": self.optimizer.max_bs,
+            "max_bs_raw": self.optimizer.max_bs_raw,
+            "queue_len": self.scheduler.queue_len,
+            "dispatched_batches": self.scheduler.dispatched_batches,
+            "dispatched_requests": self.scheduler.dispatched_requests,
+            "avg_batch_size": (
+                self.scheduler.dispatched_requests / self.scheduler.dispatched_batches
+                if self.scheduler.dispatched_batches
+                else 0.0
+            ),
+            "e2e_p": self.monitor.e2e_percentile(now),
+            "violation_rate": self.monitor.violation_rate(),
+            "timeout_ratio": self.monitor.timeout_ratio(),
+        }
+
+    # ------------------------------------------------------ fault tolerance
+    def snapshot(self) -> dict:
+        """Serializable control-plane state (crash/restart resumes warm)."""
+        return {
+            "monitor": self.monitor.snapshot(),
+            "optimizer": self.optimizer.snapshot(),
+            "scheduler": self.scheduler.snapshot(),
+            "started": self._started,
+        }
+
+    def restore(self, state: dict) -> None:
+        self.monitor.restore(state["monitor"])
+        self.optimizer.restore(state["optimizer"])
+        self.scheduler.restore(state["scheduler"])
+        self._started = state["started"]

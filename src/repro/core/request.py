@@ -1,0 +1,58 @@
+"""Request / batch data types shared by the proxy, simulator and engine."""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, List, Optional
+
+_req_counter = itertools.count()
+
+
+@dataclasses.dataclass
+class Request:
+    """One inference request as seen by the proxy."""
+
+    arrival_time: float
+    payload: Any = None
+    req_id: int = dataclasses.field(default_factory=lambda: next(_req_counter))
+    # Filled in on completion:
+    dispatch_time: Optional[float] = None
+    completion_time: Optional[float] = None
+
+    @property
+    def e2e_latency(self) -> Optional[float]:
+        if self.completion_time is None:
+            return None
+        return self.completion_time - self.arrival_time
+
+    @property
+    def queue_time(self) -> Optional[float]:
+        if self.dispatch_time is None:
+            return None
+        return self.dispatch_time - self.arrival_time
+
+
+@dataclasses.dataclass
+class Batch:
+    """A dispatched batch of requests."""
+
+    requests: List[Request]
+    dispatch_time: float
+    cause: str  # 'full' | 'timeout' | 'flush'
+    bucket_size: Optional[int] = None  # padded size on fixed-shape backends
+
+    @property
+    def size(self) -> int:
+        return len(self.requests)
+
+    @property
+    def effective_size(self) -> int:
+        return self.bucket_size if self.bucket_size is not None else self.size
+
+    @property
+    def oldest_arrival(self) -> float:
+        return min(r.arrival_time for r in self.requests)
+
+    def complete(self, completion_time: float) -> None:
+        for r in self.requests:
+            r.completion_time = completion_time

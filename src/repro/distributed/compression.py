@@ -1,0 +1,120 @@
+"""Gradient compression for the inter-pod (DP) reduction.
+
+At 2+ pods the gradient all-reduce crosses the slow inter-pod links once
+per step; compressing that traffic is the standard lever (DESIGN.md §4).
+Two composable schemes, both pure-JAX and usable as hooks around
+``adamw.apply_updates``:
+
+* :func:`int8_compress` / :func:`int8_decompress` — per-tensor symmetric
+  int8 quantization (4× traffic reduction vs f32, 2× vs bf16) with an f32
+  scale per leaf.
+* :class:`TopKCompressor` — top-k magnitude sparsification with **error
+  feedback** (the residual is carried and added to the next step's
+  gradient, preserving convergence; Stich et al., 2018).
+
+These compress the *representation*; the actual collective runs on the
+compressed payload (values + indices) under any reduction the caller
+wires (psum of dense int32-decoded tensors, or gather-based sparse
+aggregation). The hooks are exercised by unit tests and available to the
+train driver via ``TrainConfig.optimizer`` wrapping.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ------------------------------------------------------------------- int8
+def int8_compress(tree: Any) -> Any:
+    """Per-leaf symmetric int8 quantization: leaf → (q int8, scale f32)."""
+
+    def one(x):
+        if not jnp.issubdtype(x.dtype, jnp.floating):
+            return (x, None)
+        xf = x.astype(jnp.float32)
+        scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+        return (q, scale)
+
+    return jax.tree.map(one, tree)
+
+
+def int8_decompress(ctree: Any, like: Any) -> Any:
+    """Inverse of :func:`int8_compress` (dtype restored from ``like``)."""
+    flat_c, _ = jax.tree.flatten(ctree, is_leaf=lambda t: isinstance(t, tuple))
+    flat_l, treedef = jax.tree.flatten(like)
+    out = []
+    for (q, scale), ref in zip(flat_c, flat_l):
+        if scale is None:
+            out.append(q)
+        else:
+            out.append((q.astype(jnp.float32) * scale).astype(ref.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+# ------------------------------------------------------------------- top-k
+@dataclasses.dataclass
+class TopKState:
+    residual: Any  # error-feedback memory, same structure as grads
+
+
+class TopKCompressor:
+    """Top-k magnitude sparsification with error feedback.
+
+    ``compress`` returns (values, indices) per leaf covering ``fraction``
+    of the entries; the untransmitted remainder accumulates in the
+    residual and is re-injected next step.
+    """
+
+    def __init__(self, fraction: float = 0.01):
+        if not 0 < fraction <= 1:
+            raise ValueError("fraction must be in (0, 1]")
+        self.fraction = fraction
+
+    def init(self, grads: Any) -> TopKState:
+        return TopKState(residual=jax.tree.map(
+            lambda g: jnp.zeros_like(g, jnp.float32), grads))
+
+    def compress(self, grads: Any, state: TopKState
+                 ) -> Tuple[Any, TopKState]:
+        frac = self.fraction
+
+        def one(g, r):
+            gf = g.astype(jnp.float32) + r
+            flat = gf.reshape(-1)
+            k = max(1, int(flat.shape[0] * frac))
+            vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+            sel = flat[idx]
+            kept = jnp.zeros_like(flat).at[idx].set(sel)
+            new_r = flat - kept  # error feedback
+            return (sel, idx, g.shape), new_r.reshape(g.shape)
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_r = jax.tree.leaves(state.residual)
+        outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+        payload = jax.tree.unflatten(treedef, [o[0] for o in outs])
+        new_state = TopKState(residual=jax.tree.unflatten(
+            treedef, [o[1] for o in outs]))
+        return payload, new_state
+
+    @staticmethod
+    def decompress(payload: Any, like: Any) -> Any:
+        flat_p, _ = jax.tree.flatten(
+            payload, is_leaf=lambda t: isinstance(t, tuple) and len(t) == 3)
+        flat_l, treedef = jax.tree.flatten(like)
+        out = []
+        for (vals, idx, shape), ref in zip(flat_p, flat_l):
+            dense = jnp.zeros(int(jnp.prod(jnp.asarray(shape))),
+                              jnp.float32).at[idx].set(vals)
+            out.append(dense.reshape(shape).astype(ref.dtype))
+        return jax.tree.unflatten(treedef, out)
+
+    def compressed_bytes(self, grads: Any) -> int:
+        total = 0
+        for g in jax.tree.leaves(grads):
+            k = max(1, int(g.size * self.fraction))
+            total += k * (4 + 4)  # f32 value + int32 index
+        return total

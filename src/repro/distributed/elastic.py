@@ -1,0 +1,40 @@
+"""Elastic scaling: resume work on a different mesh than it was saved from.
+
+Checkpoints (``repro.distributed.checkpoint``) store full (unsharded)
+arrays addressed by leaf path, so elasticity is a *placement* decision at
+restore time: ``reshard(tree, mesh, cfg)`` computes fresh parameter
+shardings for the new mesh and ``device_put``s accordingly. A job saved on
+a 2-pod mesh restores onto 1 pod (or a differently-shaped debug mesh)
+without any format conversion; only divisibility constraints re-derive.
+
+For the serving path, elasticity is live: ``ReplicaPool.scale_to`` adds or
+retires replicas, and the proxy control-plane snapshot (monitor windows,
+AIMD state) carries over verbatim — a resized deployment resumes with
+learned latency statistics instead of cold-starting the controller.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.distributed import checkpoint as ckpt
+from repro.distributed.sharding import shard_params
+
+
+def reshard(tree: Any, mesh, cfg: ModelConfig) -> Any:
+    """Place a (host) pytree onto ``mesh`` with freshly derived shardings."""
+    shardings = shard_params(tree, mesh, cfg)
+    return jax.device_put(tree, shardings)
+
+
+def restore_elastic(directory: str, like: Any, mesh, cfg: ModelConfig,
+                    step: Optional[int] = None) -> Tuple[int, Any, dict]:
+    """Restore the latest (or given) checkpoint onto an arbitrary mesh."""
+    if step is None:
+        step = ckpt.latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {directory}")
+    tree, meta = ckpt.restore_checkpoint(directory, step, like)
+    return step, reshard(tree, mesh, cfg), meta

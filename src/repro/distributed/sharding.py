@@ -1,0 +1,220 @@
+"""Sharding rules: params (FSDP×TP×EP), optimizer state, inputs, caches.
+
+Strategy (single-pod mesh ("data","model"); multi-pod adds a pure-DP
+"pod" axis in front):
+
+  * weight matrices — contracting/output features over "model" (tensor
+    parallel), the other large dim over "data" (FSDP; XLA all-gathers on
+    use, reduce-scatters gradients);
+  * expert weights — experts over "model" (expert parallel), d_model over
+    "data";
+  * embeddings / lm_head — vocab over "model", d_model over "data";
+  * batch inputs — batch over ("pod","data"); when batch == 1 (long-context
+    decode) the sequence dim shards over "data" instead (sequence
+    parallelism);
+  * KV caches / SSM states — batch over ("pod","data"); then the largest
+    remaining dim divisible by "model" (kv-heads when they divide evenly,
+    otherwise the cache sequence dim);
+  * 1-D/small leaves — replicated.
+
+Pattern overrides keep the out-projections ("wo", "out_proj", "down_proj")
+sharded on their *contracting* dim so TP activations flow without an extra
+all-gather (Megatron convention).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeCell
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _batch_size(mesh: Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in batch_axes(mesh)]))
+
+
+def _leaf_path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+# ----------------------------------------------------------------- parameters
+def param_spec(path: str, shape: Tuple[int, ...], mesh: Mesh,
+               cfg: ModelConfig) -> P:
+    model_n = _axis_size(mesh, "model")
+    data_n = _axis_size(mesh, "data")
+    spec: list = [None] * len(shape)
+    if len(shape) <= 1:
+        return P(*spec)
+
+    dims = list(range(len(shape)))
+
+    def assign(axis_name: str, dim: int) -> None:
+        spec[dim] = axis_name
+        dims.remove(dim)
+
+    def divisible(dim: int, n: int) -> bool:
+        return n > 1 and shape[dim] % n == 0 and shape[dim] >= 2 * n
+
+    # -- pattern overrides ---------------------------------------------------
+    low = path.lower()
+    is_embed = re.search(r"(^|/)embed", low) and shape[-1] == cfg.d_model
+    is_head = "lm_head" in low
+    is_expert = re.search(r"moe/w[io]$", low) or (
+        len(shape) >= 3 and cfg.num_experts and shape[-3] == cfg.num_experts
+        and "conv" not in low)
+    is_out_proj = re.search(r"(wo|out_proj|down_proj)$", low)
+
+    if is_embed:
+        # (V, D) or stacked (.., V, D): vocab → model, d_model → data
+        if divisible(len(shape) - 2, model_n):
+            assign("model", len(shape) - 2)
+        if divisible(len(shape) - 1, data_n):
+            assign("data", len(shape) - 1)
+        return P(*spec)
+    if is_head:
+        # (D, V): vocab → model, d_model → data
+        if divisible(len(shape) - 1, model_n):
+            assign("model", len(shape) - 1)
+        if divisible(len(shape) - 2, data_n):
+            assign("data", len(shape) - 2)
+        return P(*spec)
+    if is_expert and cfg.num_experts:
+        e_dim = next((d for d in dims if shape[d] == cfg.num_experts), None)
+        if e_dim is not None and shape[e_dim] % model_n == 0:
+            assign("model", e_dim)
+        # FSDP over the expert FFN width — matches the shard_map MoE
+        # in_specs (wi: (…, E, D, F) F→data; wo: (…, E, F, D) F→data), so
+        # the stored layout is exactly what the kernel consumes.
+        f_dim = len(shape) - 1 if low.endswith("wi") else len(shape) - 2
+        if f_dim in dims and divisible(f_dim, data_n):
+            assign("data", f_dim)
+        else:
+            cands = [d for d in dims if divisible(d, data_n)]
+            if cands:
+                assign("data", max(cands, key=lambda d: shape[d]))
+        return P(*spec)
+
+    # -- generic matrices ----------------------------------------------------
+    if is_out_proj:
+        model_dim = len(shape) - 2  # contracting dim
+        other = len(shape) - 1
+    else:
+        model_dim = len(shape) - 1  # output features
+        other = len(shape) - 2
+    if divisible(model_dim, model_n):
+        assign("model", model_dim)
+    if other in dims and divisible(other, data_n):
+        assign("data", other)
+    else:
+        cands = [d for d in dims if divisible(d, data_n) and shape[d] >= 512]
+        if cands:
+            assign("data", max(cands, key=lambda d: shape[d]))
+    return P(*spec)
+
+
+def shard_params(abstract_params: Any, mesh: Mesh, cfg: ModelConfig) -> Any:
+    """NamedSharding tree matching an abstract (or concrete) param tree."""
+
+    def one(path, leaf):
+        return NamedSharding(
+            mesh, param_spec(_leaf_path_str(path), tuple(leaf.shape), mesh, cfg))
+
+    return jax.tree_util.tree_map_with_path(one, abstract_params)
+
+
+def shard_opt_state(abstract_opt: Any, param_shardings: Any, mesh: Mesh) -> Any:
+    """Optimizer state mirrors param sharding (mu/nu); scalars replicated."""
+    replicated = NamedSharding(mesh, P())
+    return type(abstract_opt)(
+        step=replicated,
+        mu=param_shardings,
+        nu=param_shardings,
+    )
+
+
+# ---------------------------------------------------------------- data/caches
+def data_spec(shape: Tuple[int, ...], mesh: Mesh, cfg: ModelConfig,
+              global_batch: int) -> P:
+    """Batch inputs: batch over ("pod","data"); seq over "data" if batch=1."""
+    b_axes = batch_axes(mesh)
+    bsz = _batch_size(mesh)
+    spec: list = [None] * len(shape)
+    if not shape:
+        return P()
+    if shape[0] == global_batch and global_batch % max(bsz, 1) == 0 and bsz > 1:
+        spec[0] = b_axes if len(b_axes) > 1 else b_axes[0]
+    elif len(shape) >= 2 and "data" in mesh.axis_names:
+        # batch not shardable (e.g. 1): sequence parallelism over "data"
+        if shape[1] % _axis_size(mesh, "data") == 0 and shape[1] >= 2 * _axis_size(mesh, "data"):
+            spec[1] = "data"
+    return P(*spec)
+
+
+def cache_spec(path: str, shape: Tuple[int, ...], mesh: Mesh, cfg: ModelConfig,
+               global_batch: int) -> P:
+    model_n = _axis_size(mesh, "model")
+    b_axes = batch_axes(mesh)
+    bsz = _batch_size(mesh)
+    spec: list = [None] * len(shape)
+    if len(shape) == 0:
+        return P()
+    dims = list(range(len(shape)))
+    # batch dim: first dim whose size == global_batch and shards evenly
+    for d in dims:
+        if shape[d] == global_batch and global_batch % max(bsz, 1) == 0 and bsz > 1:
+            spec[d] = b_axes if len(b_axes) > 1 else b_axes[0]
+            dims.remove(d)
+            break
+    # model dim: kv-heads if they divide; else largest divisible dim
+    head_like = [d for d in dims
+                 if shape[d] in (cfg.num_kv_heads, cfg.num_heads)
+                 and shape[d] % model_n == 0 and model_n > 1]
+    if head_like:
+        spec[head_like[0]] = "model"
+    else:
+        cands = [d for d in dims
+                 if model_n > 1 and shape[d] % model_n == 0 and shape[d] >= 2 * model_n]
+        if cands:
+            spec[max(cands, key=lambda d: shape[d])] = "model"
+    return P(*spec)
+
+
+def shard_inputs(abstract_inputs: Any, mesh: Mesh, cfg: ModelConfig,
+                 shape_cell: ShapeCell, *, is_cache: bool = False) -> Any:
+    """Sharding tree for the step-function inputs of one dry-run cell.
+
+    ``is_cache=True`` forces :func:`cache_spec` for every leaf (the cache
+    argument is passed as a bare tree, so its leaf paths carry no "cache"
+    marker).
+    """
+
+    def one(path, leaf):
+        pstr = _leaf_path_str(path)
+        if is_cache or "cache" in pstr:
+            sp = cache_spec(pstr, tuple(leaf.shape), mesh, cfg,
+                            shape_cell.global_batch)
+        else:
+            sp = data_spec(tuple(leaf.shape), mesh, cfg, shape_cell.global_batch)
+        return NamedSharding(mesh, sp)
+
+    return jax.tree_util.tree_map_with_path(one, abstract_inputs)

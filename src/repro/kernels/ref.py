@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every Pallas kernel (same signatures as ops.py).
+
+These re-export the model-library reference implementations — the kernels
+are *behind* the model code, so the oracle and the production fallback are
+the same audited code path.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.attention import (
+    chunked_attention as _chunked,
+    decode_attention as _decode_ref,
+    reference_attention as _naive,
+)
+from repro.models.ssm import ssd_chunked as _ssd_chunked, ssd_reference
+
+
+def flash_attention(q, k, v, *, causal: bool = True, **_):
+    """Oracle for ops.flash_attention (naive full-matrix GQA attention)."""
+    return _naive(q, k, v, causal=causal)
+
+
+def flash_attention_chunked(q, k, v, *, causal: bool = True, q_chunk: int = 512, **_):
+    """Second, independently-derived oracle (streaming softmax)."""
+    return _chunked(q, k, v, causal=causal, q_chunk=q_chunk)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, **_):
+    """Oracle for ops.decode_attention."""
+    return _decode_ref(q, k_cache, v_cache, cache_len)
+
+
+def mlstm_attention(q, k, v, log_i, log_f, **_):
+    """Oracle for ops.mlstm_attention (pure-jnp parallel mLSTM)."""
+    from repro.models.xlstm import _mlstm_parallel
+
+    return _mlstm_parallel(q, k, v, log_i, log_f, chunk=10**9)
+
+
+def ssd_scan(x, dt, a, b, c, *, chunk: int = 128, **_):
+    """Oracle for ops.ssd_scan (chunked pure-jnp SSD)."""
+    y, _ = _ssd_chunked(x, dt, a, b, c, chunk=chunk)
+    return y
+
+
+def ssd_scan_sequential(x, dt, a, b, c, **_):
+    """Slow sequential oracle (exact recurrence)."""
+    y, _ = ssd_reference(x, dt, a, b, c)
+    return y

@@ -1,0 +1,127 @@
+"""Training driver: data pipeline → jitted train step → checkpoint/restart.
+
+Runnable at reduced scale on CPU (``examples/train_100m.py`` drives a ~100M
+config for a few hundred steps); the same step function is what the
+dry-run lowers at full scale on the production mesh.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import DataConfig, TokenDataset
+from repro.distributed import checkpoint as ckpt
+from repro.models.model import Model
+from repro.optim import adamw
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    log_every: int = 10
+    checkpoint_every: int = 50
+    checkpoint_dir: Optional[str] = None
+    keep_checkpoints: int = 3
+    seed: int = 0
+    warmup_steps: int = 20
+    optimizer: adamw.AdamWConfig = dataclasses.field(default_factory=adamw.AdamWConfig)
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig,
+                    total_steps: int, warmup: int):
+    """Build the jittable (params, opt_state, batch) → ... step function."""
+    model = Model(cfg)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        lr_scale = adamw.cosine_schedule(
+            opt_state.step, warmup=warmup, total=total_steps)
+        params, opt_state, metrics = adamw.apply_updates(
+            opt_cfg, params, grads, opt_state, lr_scale=lr_scale)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def train(cfg: ModelConfig, tcfg: TrainConfig,
+          data_cfg: Optional[DataConfig] = None,
+          ) -> Dict[str, Any]:
+    """Run a (reduced-scale) training job; returns final metrics."""
+    data_cfg = data_cfg or DataConfig(
+        seq_len=min(cfg.max_seq_len, 128), global_batch=8,
+        vocab_size=cfg.vocab_size, seed=tcfg.seed)
+    dataset = TokenDataset(data_cfg)
+    model = Model(cfg)
+    rng = jax.random.PRNGKey(tcfg.seed)
+    params = model.init(rng)
+    opt_state = adamw.init_state(tcfg.optimizer, params)
+
+    start_step = 0
+    if tcfg.checkpoint_dir:
+        restored = ckpt.restore_latest(tcfg.checkpoint_dir,
+                                       {"params": params, "opt": opt_state})
+        if restored is not None:
+            start_step, tree, meta = restored
+            params, opt_state = tree["params"], tree["opt"]
+            dataset.restore(meta["data"])
+            print(f"[train] resumed from step {start_step}")
+
+    step_fn = jax.jit(make_train_step(
+        cfg, tcfg.optimizer, tcfg.steps, tcfg.warmup_steps))
+    losses = []
+    t0 = time.perf_counter()
+    for step in range(start_step, tcfg.steps):
+        batch = jax.tree.map(jnp.asarray, next(dataset))
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if (step + 1) % tcfg.log_every == 0 or step == tcfg.steps - 1:
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            dt = time.perf_counter() - t0
+            print(f"[train] step {step+1}/{tcfg.steps} loss={loss:.4f} "
+                  f"gnorm={float(metrics['grad_norm']):.3f} "
+                  f"({dt/(step-start_step+1)*1000:.0f} ms/step)")
+        if tcfg.checkpoint_dir and (step + 1) % tcfg.checkpoint_every == 0:
+            ckpt.save_checkpoint(
+                tcfg.checkpoint_dir, step + 1,
+                {"params": params, "opt": opt_state},
+                metadata={"data": dataset.state(), "arch": cfg.name})
+            ckpt.prune_checkpoints(tcfg.checkpoint_dir, tcfg.keep_checkpoints)
+    return {
+        "final_loss": losses[-1] if losses else float("nan"),
+        "first_loss": losses[0] if losses else float("nan"),
+        "params": params,
+        "steps": tcfg.steps,
+    }
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--arch", required=True)
+    p.add_argument("--steps", type=int, default=100)
+    p.add_argument("--checkpoint-dir", default=None)
+    p.add_argument("--seq-len", type=int, default=128)
+    p.add_argument("--batch", type=int, default=8)
+    p.add_argument("--full-size", action="store_true",
+                   help="use the full config (needs accelerators)")
+    args = p.parse_args()
+    cfg = get_config(args.arch)
+    if not args.full_size:
+        cfg = cfg.reduced()
+    tcfg = TrainConfig(steps=args.steps, checkpoint_dir=args.checkpoint_dir)
+    data_cfg = DataConfig(seq_len=args.seq_len, global_batch=args.batch,
+                          vocab_size=cfg.vocab_size)
+    out = train(cfg, tcfg, data_cfg)
+    print(f"[train] done: loss {out['first_loss']:.4f} → {out['final_loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,178 @@
+"""Attention: GQA with RoPE, memory-efficient chunked prefill, cached decode.
+
+The chunked (flash-style) prefill path scans over query blocks carrying a
+running (max, sum, accumulator) triple, so the full S×S score matrix is
+never materialized — this is what makes 32k-token prefill lowerable at
+full size. The same function doubles as the pure-jnp oracle for the Pallas
+flash kernel in ``repro.kernels``; on TPU the kernel slots in behind the
+``use_pallas`` flag of the model config.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense_init
+
+NEG_INF = -1e30
+
+
+# ----------------------------------------------------------------- parameters
+def init_attention(key, d_model: int, num_heads: int, num_kv_heads: int,
+                   head_dim: int, dtype, qkv_bias: bool = False) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(kq, d_model, num_heads * head_dim, dtype),
+        "wk": dense_init(kk, d_model, num_kv_heads * head_dim, dtype),
+        "wv": dense_init(kv, d_model, num_kv_heads * head_dim, dtype),
+        "wo": dense_init(ko, num_heads * head_dim, d_model, dtype,
+                         scale=1.0 / math.sqrt(num_heads * head_dim)),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((num_heads * head_dim,), dtype=dtype)
+        p["bk"] = jnp.zeros((num_kv_heads * head_dim,), dtype=dtype)
+        p["bv"] = jnp.zeros((num_kv_heads * head_dim,), dtype=dtype)
+    return p
+
+
+def qkv_proj(p: dict, x: jax.Array, num_heads: int, num_kv_heads: int,
+             head_dim: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    b, s, _ = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    return (
+        q.reshape(b, s, num_heads, head_dim),
+        k.reshape(b, s, num_kv_heads, head_dim),
+        v.reshape(b, s, num_kv_heads, head_dim),
+    )
+
+
+# ------------------------------------------------------------- full attention
+def _gqa_scores(q: jax.Array, k: jax.Array) -> jax.Array:
+    """q: (B, Sq, Hq, D), k: (B, Sk, Hkv, D) → (B, Hkv, G, Sq, Sk)."""
+    b, sq, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, sq, hkv, g, d)
+    return jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                      k.astype(jnp.float32))
+
+
+def reference_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True,
+                        q_offset: int = 0) -> jax.Array:
+    """Naive full-matrix GQA attention (oracle; used for small shapes)."""
+    b, sq, hq, d = q.shape
+    sk = k.shape[1]
+    scores = _gqa_scores(q, k) / math.sqrt(d)  # (B, Hkv, G, Sq, Sk)
+    if causal:
+        qpos = jnp.arange(sq)[:, None] + q_offset
+        kpos = jnp.arange(sk)[None, :]
+        mask = kpos <= qpos  # (Sq, Sk)
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w, v.astype(jnp.float32))
+    return out.reshape(b, sq, hq, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------- chunked (flash)
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      causal: bool = True, q_chunk: int = 512,
+                      q_offset: int = 0) -> jax.Array:
+    """Flash-style attention: scan over query chunks with streaming softmax.
+
+    Memory: O(Sq·Sk / n_chunks) scores instead of O(Sq·Sk). Equivalent to
+    :func:`reference_attention` up to float error.
+    """
+    b, sq, hq, d = q.shape
+    sk = k.shape[1]
+    hkv = k.shape[2]
+    g = hq // hkv
+    if sq <= q_chunk:
+        return reference_attention(q, k, v, causal=causal, q_offset=q_offset)
+    n_chunks = math.ceil(sq / q_chunk)
+    pad = n_chunks * q_chunk - sq
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qs = q.reshape(b, n_chunks, q_chunk, hq, d).transpose(1, 0, 2, 3, 4)
+
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scale = 1.0 / math.sqrt(d)
+    kpos = jnp.arange(sk)[None, :]
+
+    def body(carry, inp):
+        qc, idx = inp  # (B, C, Hq, D), scalar chunk index
+        qg = qc.reshape(b, q_chunk, hkv, g, d).astype(jnp.float32)
+        scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kf) * scale
+        if causal:
+            qpos = idx * q_chunk + jnp.arange(q_chunk)[:, None] + q_offset
+            mask = kpos <= qpos  # (C, Sk)
+            scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        m = jnp.max(scores, axis=-1)
+        w = jnp.exp(scores - m[..., None])
+        l = jnp.sum(w, axis=-1)
+        o = jnp.einsum("bhgqk,bkhd->bhgqd", w, vf)
+        o = o / jnp.maximum(l, 1e-30)[..., None]
+        out = o.transpose(0, 3, 1, 2, 4).reshape(b, q_chunk, hq, d)
+        return carry, out
+
+    # Remat the chunk body: without this the scan stacks every chunk's
+    # (B,H,C,Sk) score/softmax residuals for backward — the full O(S²)
+    # matrix flash attention exists to avoid. Recompute per chunk instead.
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    _, outs = jax.lax.scan(body, (), (qs, jnp.arange(n_chunks)))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, n_chunks * q_chunk, hq, d)
+    if pad:
+        out = out[:, :sq]
+    return out.astype(q.dtype)
+
+
+# --------------------------------------------------------------------- decode
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cache_len: jax.Array) -> jax.Array:
+    """Single-step attention over a (possibly padded) KV cache.
+
+    q: (B, 1, Hq, D); k_cache/v_cache: (B, S_max, Hkv, D);
+    cache_len: scalar or (B,) — number of valid cache entries (includes the
+    token being decoded, already written into the cache).
+    """
+    b, _, hq, d = q.shape
+    s_max, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, d).astype(jnp.float32)
+    scores = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache.astype(jnp.float32))
+    scores = scores / math.sqrt(d)
+    pos = jnp.arange(s_max)[None, :]
+    valid = pos < jnp.reshape(cache_len, (-1, 1))  # (B or 1, S_max)
+    scores = jnp.where(valid[:, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", w, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, hq, d).astype(q.dtype)
+
+
+# ------------------------------------------------------------------ KV cache
+def init_kv_cache(num_layers: int, batch: int, max_len: int, num_kv_heads: int,
+                  head_dim: int, dtype) -> dict:
+    shape = (num_layers, batch, max_len, num_kv_heads, head_dim)
+    return {
+        "k": jnp.zeros(shape, dtype=dtype),
+        "v": jnp.zeros(shape, dtype=dtype),
+        "len": jnp.zeros((), dtype=jnp.int32),
+    }
+
+
+def cache_update_layer(k_cache: jax.Array, v_cache: jax.Array, k: jax.Array,
+                       v: jax.Array, start: jax.Array):
+    """Write (B, S, Hkv, D) at position ``start`` of one layer's cache."""
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k.astype(k_cache.dtype),
+                                           (0, start, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype),
+                                           (0, start, 0, 0))
+    return k_cache, v_cache

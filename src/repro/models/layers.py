@@ -1,0 +1,163 @@
+"""Shared building blocks: norms, activations, RoPE, projections, embeddings.
+
+Everything is functional: ``init_*`` builds a params pytree, the matching
+apply function consumes it. Parameter dtype and compute dtype are decoupled
+(bf16 params / bf16 MXU compute / f32 norm + softmax accumulation on TPU;
+f32 everywhere for CPU smoke tests).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+# ----------------------------------------------------------------- init utils
+def dense_init(key, in_dim: int, out_dim: int, dtype, scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim)) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype):
+    return (jax.random.normal(key, (vocab, dim)) * 0.02).astype(dtype)
+
+
+# ----------------------------------------------------------------------- norms
+def init_rmsnorm(dim: int, dtype) -> Params:
+    return {"scale": jnp.ones((dim,), dtype=dtype)}
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def init_layernorm(dim: int, dtype) -> Params:
+    return {"scale": jnp.ones((dim,), dtype=dtype), "bias": jnp.zeros((dim,), dtype=dtype)}
+
+
+def layernorm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(dtype)
+
+
+def make_norm(kind: str):
+    if kind == "rmsnorm":
+        return init_rmsnorm, rmsnorm
+    if kind == "layernorm":
+        return init_layernorm, layernorm
+    raise ValueError(f"unknown norm {kind!r}")
+
+
+# ----------------------------------------------------------------- activations
+def activation_fn(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "relu":
+        return jax.nn.relu
+    if name == "relu2":  # squared ReLU (Primer / Nemotron-4)
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(f"unknown activation {name!r}")
+
+
+GATED_ACTIVATIONS = ("silu",)  # gated (GLU) families use fused wi = [gate|up]
+
+
+# ------------------------------------------------------------------------ FFN
+def init_mlp(key, d_model: int, d_ff: int, activation: str, dtype,
+             bias: bool = False) -> Params:
+    k1, k2 = jax.random.split(key)
+    gated = activation in GATED_ACTIVATIONS
+    wi_out = 2 * d_ff if gated else d_ff
+    p = {
+        "wi": dense_init(k1, d_model, wi_out, dtype),
+        "wo": dense_init(k2, d_ff, d_model, dtype, scale=1.0 / math.sqrt(d_ff)),
+    }
+    if bias:
+        p["bi"] = jnp.zeros((wi_out,), dtype=dtype)
+        p["bo"] = jnp.zeros((d_model,), dtype=dtype)
+    return p
+
+
+def mlp(p: Params, x: jax.Array, activation: str) -> jax.Array:
+    act = activation_fn(activation)
+    h = x @ p["wi"]
+    if "bi" in p:
+        h = h + p["bi"]
+    if activation in GATED_ACTIVATIONS:
+        gate, up = jnp.split(h, 2, axis=-1)
+        h = act(gate) * up
+    else:
+        h = act(h)
+    out = h @ p["wo"]
+    if "bo" in p:
+        out = out + p["bo"]
+    return out
+
+
+# ----------------------------------------------------------------------- RoPE
+def rope_frequencies(head_dim: int, max_len: int, theta: float,
+                     dtype=jnp.float32) -> Tuple[jax.Array, jax.Array]:
+    """Precompute (cos, sin) tables of shape (max_len, head_dim // 2)."""
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    t = jnp.arange(max_len, dtype=jnp.float32)
+    freqs = jnp.outer(t, inv)
+    return jnp.cos(freqs).astype(dtype), jnp.sin(freqs).astype(dtype)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array,
+               positions: jax.Array) -> jax.Array:
+    """Rotate pairs. x: (B, S, H, D); positions: (B, S) absolute indices."""
+    c = cos[positions][:, :, None, :]  # (B, S, 1, D/2)
+    s = sin[positions][:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- embeddings
+def init_embedding(key, vocab: int, d_model: int, dtype) -> Params:
+    return {"table": embed_init(key, vocab, d_model, dtype)}
+
+
+def embed(p: Params, tokens: jax.Array) -> jax.Array:
+    return p["table"][tokens]
+
+
+def unembed(p: Params, x: jax.Array, head: Optional[jax.Array]) -> jax.Array:
+    """Project to vocab logits; ``head`` is None for tied embeddings."""
+    w = head if head is not None else p["table"].T
+    return (x @ w.astype(x.dtype)).astype(jnp.float32)
+
+
+# --------------------------------------------------------------------- losses
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array,
+                          mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean next-token loss. logits: (..., V) f32; labels: (...) int32.
+
+    Gather-free: the gold logit is extracted with a one-hot contraction
+    instead of ``take_along_axis`` so a vocab-sharded logits tensor reduces
+    with a psum rather than an all-gather (GSPMD lowers gathers over a
+    sharded operand dim by gathering the operand).
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    gold = jnp.sum(logits * onehot, axis=-1)
+    nll = lse - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

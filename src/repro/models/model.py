@@ -1,0 +1,140 @@
+"""Model facade: one uniform API over all architecture families.
+
+    model = Model(cfg)
+    params = model.init(rng)
+    loss   = model.loss(params, batch)
+    logits, cache = model.prefill(params, inputs, cache)
+    logits, cache = model.decode_step(params, tokens, cache)
+
+plus ``input_specs(cfg, shape)`` building ShapeDtypeStruct stand-ins for the
+dry-run (weak-type-correct, shardable, no device allocation) and
+``make_inputs`` building real (random) inputs for smoke tests.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.models import encdec, hybrid, transformer, xlstm_model
+
+Params = Dict[str, Any]
+
+_FAMILY_MODULES = {
+    "dense": transformer,
+    "moe": transformer,
+    "vlm": transformer,
+    "hybrid": hybrid,
+    "ssm": xlstm_model,
+    "encdec": encdec,
+}
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self._mod = _FAMILY_MODULES[cfg.family]
+
+    # ------------------------------------------------------------------ api
+    def init(self, rng) -> Params:
+        return self._mod.init_params(self.cfg, rng)
+
+    def init_abstract(self) -> Params:
+        """Parameter pytree as ShapeDtypeStructs (no allocation)."""
+        return jax.eval_shape(lambda: self._mod.init_params(
+            self.cfg, jax.random.PRNGKey(0)))
+
+    def loss(self, params: Params, batch: Dict[str, jax.Array]) -> jax.Array:
+        return self._mod.loss_fn(self.cfg, params, batch)
+
+    def forward(self, params: Params, inputs) -> jax.Array:
+        logits, _ = self._mod.forward(self.cfg, params, inputs)
+        return logits
+
+    def init_cache(self, batch: int, max_len: int):
+        return self._mod.init_cache(self.cfg, batch, max_len)
+
+    def prefill(self, params: Params, inputs, cache):
+        return self._mod.prefill(self.cfg, params, inputs, cache)
+
+    def decode_step(self, params: Params, tokens, cache):
+        return self._mod.decode_step(self.cfg, params, tokens, cache)
+
+
+# ---------------------------------------------------------------- input specs
+def _token_spec(b: int, s: int) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeCell) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every input of the shape's step fn.
+
+    * ``train``:   the loss/`train_step` inputs (tokens or embeds + labels).
+    * ``prefill``: prompt of ``seq_len`` tokens + an (abstract) empty cache.
+    * ``decode``:  one new token + an (abstract) cache of ``seq_len``.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    model = Model(cfg)
+    if shape.kind == "train":
+        if cfg.family == "encdec":
+            frames = jax.ShapeDtypeStruct((b, cfg.frontend_seq or s, cfg.d_model),
+                                          cfg.cdtype)
+            return {"batch": {"frames": frames, "tokens": _token_spec(b, s),
+                              "labels": _token_spec(b, s)}}
+        if cfg.embed_inputs:
+            inputs = jax.ShapeDtypeStruct((b, s, cfg.d_model), cfg.cdtype)
+            return {"batch": {"inputs": inputs, "labels": _token_spec(b, s)}}
+        return {"batch": {"tokens": _token_spec(b, s), "labels": _token_spec(b, s)}}
+    if shape.kind == "prefill":
+        cache = jax.eval_shape(lambda: model.init_cache(b, s))
+        if cfg.family == "encdec":
+            frames = jax.ShapeDtypeStruct((b, cfg.frontend_seq or s, cfg.d_model),
+                                          cfg.cdtype)
+            return {"inputs": {"frames": frames, "tokens": _token_spec(b, s)},
+                    "cache": cache}
+        return {"inputs": _token_spec(b, s), "cache": cache}
+    if shape.kind == "decode":
+        cache = jax.eval_shape(lambda: model.init_cache(b, s))
+        return {"tokens": _token_spec(b, 1), "cache": cache}
+    raise ValueError(shape.kind)
+
+
+def make_inputs(cfg: ModelConfig, shape: ShapeCell, rng) -> Dict[str, Any]:
+    """Concrete random inputs matching :func:`input_specs` (smoke tests).
+
+    Caches are built with the real ``init_cache`` (valid zeros + lengths),
+    not random tensors.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    model = Model(cfg)
+    k1, k2 = jax.random.split(rng)
+    toks = lambda key, bb, ss: jax.random.randint(
+        key, (bb, ss), 0, cfg.vocab_size, dtype=jnp.int32)
+    if shape.kind == "train":
+        labels = toks(k2, b, s)
+        if cfg.family == "encdec":
+            frames = jax.random.normal(
+                k1, (b, cfg.frontend_seq or s, cfg.d_model)).astype(cfg.cdtype)
+            return {"batch": {"frames": frames, "tokens": toks(k1, b, s),
+                              "labels": labels}}
+        if cfg.embed_inputs:
+            inputs = jax.random.normal(k1, (b, s, cfg.d_model)).astype(cfg.cdtype)
+            return {"batch": {"inputs": inputs, "labels": labels}}
+        return {"batch": {"tokens": toks(k1, b, s), "labels": labels}}
+    if shape.kind == "prefill":
+        cache = model.init_cache(b, s)
+        if cfg.family == "encdec":
+            frames = jax.random.normal(
+                k1, (b, cfg.frontend_seq or s, cfg.d_model)).astype(cfg.cdtype)
+            return {"inputs": {"frames": frames, "tokens": toks(k2, b, s)},
+                    "cache": cache}
+        return {"inputs": toks(k1, b, s), "cache": cache}
+    if shape.kind == "decode":
+        cache = model.init_cache(b, s)
+        cache = dict(cache)
+        cache["len"] = jnp.asarray(s - 1, jnp.int32)
+        return {"tokens": toks(k1, b, 1), "cache": cache}
+    raise ValueError(shape.kind)

@@ -1,0 +1,229 @@
+"""Mamba-2 (SSD) blocks: chunked parallel scan for train/prefill, O(1)
+recurrent step for decode.
+
+The SSD form (Dao & Gu, 2024) computes, per head with state size N and
+head dim P:
+
+    h_t = exp(A·dt_t) · h_{t-1} + dt_t · B_t ⊗ x_t
+    y_t = C_t · h_t + D · x_t
+
+The chunked algorithm splits the sequence into chunks of length Q: an
+intra-chunk quadratic term (masked by the cumulative decay), a per-chunk
+final state, an inter-chunk state recurrence (scan over chunks) and a
+state-to-output term. All matmuls are MXU-shaped; the chunk length is the
+natural Pallas block size (see ``repro.kernels.ssd_scan``). ``ngroups=1``
+(B and C shared across heads), matching the released Mamba-2 configs.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+def init_mamba2(key, d_model: int, d_state: int, dtype,
+                expand: int = 2, head_dim: int = 64, conv_width: int = 4) -> dict:
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    ks = jax.random.split(key, 5)
+    conv_dim = d_inner + 2 * d_state  # x, B, C all pass the causal conv
+    return {
+        # fused input projection: [z, x, B, C, dt]
+        "in_proj": dense_init(ks[0], d_model, 2 * d_inner + 2 * d_state + n_heads, dtype),
+        "conv": (jax.random.normal(ks[1], (conv_width, conv_dim)) * 0.1).astype(dtype),
+        "conv_bias": jnp.zeros((conv_dim,), dtype=dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), dtype=jnp.float32),
+        "d_skip": jnp.ones((n_heads,), dtype=jnp.float32),
+        "norm_scale": jnp.ones((d_inner,), dtype=dtype),
+        "out_proj": dense_init(ks[2], d_inner, d_model, dtype,
+                               scale=1.0 / math.sqrt(d_inner)),
+    }
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """Stable 'segment sum': out[..., i, j] = sum_{k=j+1..i} x[..., k], -inf for j>i."""
+    t = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+                c: jax.Array, chunk: int = 128,
+                h0: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan (pure-jnp oracle for the Pallas kernel).
+
+    Shapes: x (B,S,H,P); dt (B,S,H) (already softplus'd, >0); a (H,)
+    (negative); b, c (B,S,N) shared across heads; h0 optional (B,H,P,N).
+    Returns (y (B,S,H,P), h_final (B,H,P,N)). f32 internally.
+    """
+    bs, s, h, p = x.shape
+    n = b.shape[-1]
+    nc = math.ceil(s / chunk)
+    pad = nc * chunk - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    # Tensor operands stay in the model dtype (bf16 on TPU): the big HBM
+    # reads (x, B, C and the (Q×Q) score/decay products) halve vs wholesale
+    # f32 upcasting, while einsum accumulation stays f32 via
+    # preferred_element_type (§Perf hillclimb: zamba2 train memory term).
+    xf = x.reshape(bs, nc, chunk, h, p)
+    dtf = dt.astype(jnp.float32).reshape(bs, nc, chunk, h)
+    bf = b.reshape(bs, nc, chunk, n)
+    cf = c.reshape(bs, nc, chunk, n)
+    f32 = jnp.float32
+
+    da = dtf * a[None, None, None, :]  # (B,C,Q,H) log-decay per step
+    da_cum = jnp.cumsum(da, axis=2)  # within-chunk cumulative
+    da_total = da_cum[:, :, -1, :]  # (B,C,H)
+
+    # 1) intra-chunk (quadratic) term
+    l = jnp.exp(_segsum(da.transpose(0, 1, 3, 2)))  # (B,C,H,Q,Q) f32
+    cb = jnp.einsum("bzqn,bzkn->bzqk", cf, bf,
+                    preferred_element_type=f32)  # (B,C,Q,Q)
+    w = (cb[:, :, None] * l * dtf.transpose(0, 1, 3, 2)[:, :, :, None, :]
+         ).astype(x.dtype)  # (B,C,H,Q,Q) — one f32 product, read back at bf16
+    y_diag = jnp.einsum("bzhqk,bzkhp->bzqhp", w, xf,
+                        preferred_element_type=f32)
+
+    # 2) per-chunk final states: decay from position to chunk end
+    decay_to_end = jnp.exp(da_total[:, :, None, :] - da_cum)  # (B,C,Q,H)
+    bw = (bf[:, :, :, None, :] * (decay_to_end * dtf)[..., None]
+          ).astype(x.dtype)  # (B,C,Q,H,N)
+    states = jnp.einsum("bzqhn,bzqhp->bzhpn", bw, xf,
+                        preferred_element_type=f32)  # (B,C,H,P,N)
+
+    # 3) inter-chunk recurrence (scan over chunk axis)
+    def body(h_prev, inp):
+        st, dtot = inp  # (B,H,P,N), (B,H)
+        h_new = h_prev * jnp.exp(dtot)[:, :, None, None] + st
+        return h_new, h_prev
+
+    init = h0.astype(jnp.float32) if h0 is not None else jnp.zeros((bs, h, p, n), jnp.float32)
+    h_last, h_prevs = jax.lax.scan(
+        body,
+        init,
+        (states.transpose(1, 0, 2, 3, 4), da_total.transpose(1, 0, 2)),
+    )
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)  # (B,C,H,P,N) state entering chunk
+
+    # 4) state-to-output: decay from chunk start to position
+    decay_from_start = jnp.exp(da_cum)  # (B,C,Q,H)
+    y_off = jnp.einsum("bzqn,bzqh,bzhpn->bzqhp",
+                       cf.astype(f32), decay_from_start, h_prevs)
+
+    y = (y_diag + y_off).reshape(bs, nc * chunk, h, p)
+    if pad:
+        y = y[:, :s]
+    return y.astype(x.dtype), h_last
+
+
+def ssd_reference(x, dt, a, b, c, h0=None):
+    """Sequential per-step oracle (slow; tests only)."""
+    bs, s, h, p = x.shape
+    n = b.shape[-1]
+    hstate = (h0.astype(jnp.float32) if h0 is not None
+              else jnp.zeros((bs, h, p, n), jnp.float32))
+    ys = []
+    for t in range(s):
+        dtt = dt[:, t].astype(jnp.float32)  # (B,H)
+        decay = jnp.exp(dtt * a[None, :])  # (B,H)
+        inject = jnp.einsum("bh,bhp,bn->bhpn", dtt, x[:, t].astype(jnp.float32),
+                            b[:, t].astype(jnp.float32))
+        hstate = hstate * decay[:, :, None, None] + inject
+        ys.append(jnp.einsum("bhpn,bn->bhp", hstate, c[:, t].astype(jnp.float32)))
+    return jnp.stack(ys, axis=1).astype(x.dtype), hstate
+
+
+def ssd_step(hstate, x_t, dt_t, a, b_t, c_t):
+    """One decode step. hstate (B,H,P,N); x_t (B,H,P); dt_t (B,H);
+    b_t, c_t (B,N). Returns (y_t (B,H,P), new state)."""
+    dtf = dt_t.astype(jnp.float32)
+    decay = jnp.exp(dtf * a[None, :])
+    inject = jnp.einsum("bh,bhp,bn->bhpn", dtf, x_t.astype(jnp.float32),
+                        b_t.astype(jnp.float32))
+    h_new = hstate * decay[:, :, None, None] + inject
+    y = jnp.einsum("bhpn,bn->bhp", h_new, c_t.astype(jnp.float32))
+    return y, h_new
+
+
+# --------------------------------------------------------------- full block
+def _causal_conv(seq: jax.Array, w: jax.Array, bias: jax.Array,
+                 state: Optional[jax.Array] = None):
+    """Depthwise causal conv1d. seq (B,S,C); w (W,C). Returns (out, new_state)
+    where state carries the last W-1 inputs for streaming decode."""
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((seq.shape[0], width - 1, seq.shape[-1]), seq.dtype)
+    else:
+        pad = state.astype(seq.dtype)
+    full = jnp.concatenate([pad, seq], axis=1)
+    out = sum(full[:, i:i + seq.shape[1]] * w[i][None, None, :] for i in range(width))
+    new_state = full[:, -(width - 1):] if width > 1 else None
+    return out + bias[None, None, :], new_state
+
+
+def mamba2_forward(p: dict, x: jax.Array, *, d_state: int, head_dim: int = 64,
+                   chunk: int = 128, state: Optional[dict] = None,
+                   ) -> Tuple[jax.Array, dict]:
+    """Full Mamba-2 mixer. x: (B, S, D) → (B, S, D).
+
+    ``state`` (for streaming decode) carries {"h": (B,H,P,N), "conv": (B,W-1,C)}.
+    Pass state=None for train/prefill-from-scratch (returns final state).
+    """
+    bsz, s, d_model = x.shape
+    d_inner = p["out_proj"].shape[0]
+    n_heads = p["a_log"].shape[0]
+
+    zxbcdt = x @ p["in_proj"]
+    z, xin, b, c, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + d_state,
+                 2 * d_inner + 2 * d_state], axis=-1)
+    conv_in = jnp.concatenate([xin, b, c], axis=-1)
+    conv_out, conv_state = _causal_conv(
+        conv_in, p["conv"], p["conv_bias"],
+        state["conv"] if state is not None else None)
+    conv_out = jax.nn.silu(conv_out)
+    xin, b, c = jnp.split(conv_out, [d_inner, d_inner + d_state], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    a = -jnp.exp(p["a_log"])  # (H,) negative decay rates
+    xh = xin.reshape(bsz, s, n_heads, head_dim)
+
+    h0 = state["h"] if state is not None else None
+    if s == 1 and state is not None:
+        y, h_last = ssd_step(h0, xh[:, 0], dt[:, 0], a, b[:, 0], c[:, 0])
+        y = y[:, None]
+    else:
+        y, h_last = ssd_chunked(xh, dt, a, b, c, chunk=chunk, h0=h0)
+    y = y + xh.astype(y.dtype) * p["d_skip"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(bsz, s, d_inner)
+
+    # gated RMS norm (mamba2's norm-before-out-proj, gated by z)
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    yf = yf * jax.lax.rsqrt(var + 1e-6) * p["norm_scale"].astype(jnp.float32)
+    out = (yf.astype(x.dtype)) @ p["out_proj"]
+    new_state = {"h": h_last, "conv": conv_state}
+    return out, new_state
+
+
+def init_mamba2_state(bsz: int, d_model: int, d_state: int, dtype,
+                      expand: int = 2, head_dim: int = 64,
+                      conv_width: int = 4) -> dict:
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    conv_dim = d_inner + 2 * d_state
+    return {
+        "h": jnp.zeros((bsz, n_heads, head_dim, d_state), jnp.float32),
+        "conv": jnp.zeros((bsz, conv_width - 1, conv_dim), dtype),
+    }

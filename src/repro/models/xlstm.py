@@ -1,0 +1,278 @@
+"""xLSTM blocks (Beck et al., 2024): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, sequential scan), composed 7:1 as in xLSTM[7:1].
+
+mLSTM parallel form (per head, queries i, keys j ≤ i):
+
+    b_ij = F_i − F_j + log i_j          (F = cumsum of log-sigmoid forget)
+    m_i  = max_j b_ij                   (stabilizer)
+    ŷ_i  = Σ_j exp(b_ij − m_i) (q_i·k_j/√d) v_j
+    n_i  = max(|Σ_j exp(b_ij − m_i)(q_i·k_j/√d)|, exp(−m_i))
+    y_i  = ŷ_i / n_i
+
+This is attention-shaped (quadratic in S with a decay bias instead of
+softmax), so train/prefill use a chunked form; decode uses the O(1)
+recurrent cell with state (C: d×d matrix, n: d vector, m: scalar) per head.
+
+sLSTM uses exponential gating with a stabilizer and a per-head recurrent
+matrix; it is inherently sequential → ``lax.scan`` over time.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+NEG_INF = -1e30
+
+
+# ------------------------------------------------------------------- mLSTM
+def init_mlstm(key, d_model: int, num_heads: int, dtype,
+               proj_factor: float = 2.0, conv_width: int = 4) -> dict:
+    d_inner = int(proj_factor * d_model)
+    hd = d_inner // num_heads
+    ks = jax.random.split(key, 8)
+
+    def headwise(k):  # block-diagonal per-head projection (H, hd, hd)
+        return (jax.random.normal(k, (num_heads, hd, hd))
+                / math.sqrt(hd)).astype(dtype)
+
+    return {
+        "up_proj": dense_init(ks[0], d_model, 2 * d_inner, dtype),  # [x | gate z]
+        "conv": (jax.random.normal(ks[1], (conv_width, d_inner)) * 0.1).astype(dtype),
+        "conv_bias": jnp.zeros((d_inner,), dtype=dtype),
+        "wq": headwise(ks[2]),
+        "wk": headwise(ks[3]),
+        "wv": headwise(ks[4]),
+        "w_if": dense_init(ks[5], d_inner, 2 * num_heads, jnp.float32),
+        "b_if": jnp.concatenate(
+            [jnp.zeros((num_heads,)), 3.0 * jnp.ones((num_heads,))]
+        ).astype(jnp.float32),
+        "norm_scale": jnp.ones((d_inner,), dtype=dtype),
+        "down_proj": dense_init(ks[6], d_inner, d_model, dtype,
+                                scale=1.0 / math.sqrt(d_inner)),
+    }
+
+
+def _mlstm_parallel(q, k, v, log_i, log_f, chunk: int = 512):
+    """q/k/v: (B,S,H,D); log_i/log_f: (B,S,H) → y (B,S,H,D). f32 internal."""
+    b, s, h, d = q.shape
+    qf = q.astype(jnp.float32) / math.sqrt(d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    fcum = jnp.cumsum(log_f, axis=1)  # (B,S,H) = F_i
+
+    def attend(q_blk, fcum_q, idx0):
+        """q_blk (B,C,H,D); fcum_q (B,C,H); returns y for one query chunk."""
+        c = q_blk.shape[1]
+        bmat = (fcum_q[:, :, None, :] - fcum[:, None, :, :]
+                + log_i[:, None, :, :])  # (B,C,S,H)
+        qpos = idx0 + jnp.arange(c)[:, None]
+        kpos = jnp.arange(s)[None, :]
+        mask = (kpos <= qpos)[None, :, :, None]
+        bmat = jnp.where(mask, bmat, NEG_INF)
+        m = jnp.max(bmat, axis=2)  # (B,C,H)
+        dmat = jnp.exp(bmat - m[:, :, None, :])
+        scores = jnp.einsum("bchd,bshd->bcsh", q_blk.astype(jnp.float32)
+                            / math.sqrt(d), kf)
+        cmat = scores * dmat
+        num = jnp.einsum("bcsh,bshd->bchd", cmat, vf)
+        den = jnp.abs(jnp.sum(cmat, axis=2))  # (B,C,H)
+        den = jnp.maximum(den, jnp.exp(-m))
+        return num / den[..., None]
+
+    if s <= chunk:
+        y = attend(q, fcum, 0)
+    else:
+        nc = math.ceil(s / chunk)
+        pad = nc * chunk - s
+        qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        fp = jnp.pad(fcum, ((0, 0), (0, pad), (0, 0)))
+        qs = qp.reshape(b, nc, chunk, h, d).transpose(1, 0, 2, 3, 4)
+        fs = fp.reshape(b, nc, chunk, h).transpose(1, 0, 2, 3)
+
+        def body(_, inp):
+            qc, fc, i = inp
+            return (), attend(qc, fc, i * chunk)
+
+        _, ys = jax.lax.scan(body, (), (qs, fs, jnp.arange(nc)))
+        y = ys.transpose(1, 0, 2, 3, 4).reshape(b, nc * chunk, h, d)[:, :s]
+    return y.astype(q.dtype)
+
+
+def mlstm_step(state: dict, q, k, v, log_i, log_f):
+    """Recurrent mLSTM cell. state: {"C": (B,H,D,D), "n": (B,H,D),
+    "m": (B,H)}; q/k/v: (B,H,D); log_i/log_f: (B,H)."""
+    d = q.shape[-1]
+    qf = q.astype(jnp.float32) / math.sqrt(d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    m_new = jnp.maximum(log_f + state["m"], log_i)
+    f_sc = jnp.exp(log_f + state["m"] - m_new)
+    i_sc = jnp.exp(log_i - m_new)
+    c_new = (state["C"] * f_sc[..., None, None]
+             + i_sc[..., None, None] * kf[..., :, None] * vf[..., None, :])
+    n_new = state["n"] * f_sc[..., None] + i_sc[..., None] * kf
+    num = jnp.einsum("bhd,bhde->bhe", qf, c_new)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n_new)),
+                      jnp.exp(-m_new))
+    y = num / den[..., None]
+    return y, {"C": c_new, "n": n_new, "m": m_new}
+
+
+def mlstm_block(p: dict, x: jax.Array, num_heads: int,
+                state: Optional[dict] = None, chunk: int = 512,
+                ) -> Tuple[jax.Array, Optional[dict]]:
+    """Full mLSTM block. x: (B,S,D). state enables streaming decode."""
+    b, s, d_model = x.shape
+    hd = p["wq"].shape[-1]
+    d_inner = num_heads * hd
+
+    up = x @ p["up_proj"]
+    xi, z = jnp.split(up, 2, axis=-1)
+    # causal conv on the x-branch
+    width = p["conv"].shape[0]
+    if state is not None:
+        padded = jnp.concatenate([state["conv"].astype(xi.dtype), xi], axis=1)
+    else:
+        padded = jnp.pad(xi, ((0, 0), (width - 1, 0), (0, 0)))
+    xc = sum(padded[:, i:i + s] * p["conv"][i][None, None, :] for i in range(width))
+    xc = jax.nn.silu(xc + p["conv_bias"][None, None, :])
+    new_conv = padded[:, -(width - 1):]
+
+    xc_h = xc.reshape(b, s, num_heads, hd)
+    xi_h = xi.reshape(b, s, num_heads, hd)
+    q = jnp.einsum("bshd,hde->bshe", xc_h, p["wq"])
+    k = jnp.einsum("bshd,hde->bshe", xc_h, p["wk"])
+    v = jnp.einsum("bshd,hde->bshe", xi_h, p["wv"])
+    gates = xc.astype(jnp.float32) @ p["w_if"] + p["b_if"][None, None, :]
+    log_i, f_pre = jnp.split(gates, 2, axis=-1)  # (B,S,H) each
+    log_f = jax.nn.log_sigmoid(f_pre)
+
+    if s == 1 and state is not None:
+        y, cell = mlstm_step(state["cell"], q[:, 0], k[:, 0], v[:, 0],
+                             log_i[:, 0], log_f[:, 0])
+        y = y[:, None]
+    else:
+        y = _mlstm_parallel(q, k, v, log_i, log_f, chunk=chunk)
+        cell = None
+        if state is not None:  # prefill that must hand off a decode state
+            cell = _mlstm_final_state(k, v, log_i, log_f)
+    y = y.reshape(b, s, d_inner)
+    # per-block RMS norm + output gating, down-projection
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    yf = yf * jax.lax.rsqrt(var + 1e-6) * p["norm_scale"].astype(jnp.float32)
+    yf = yf * jax.nn.silu(z.astype(jnp.float32))
+    out = yf.astype(x.dtype) @ p["down_proj"]
+    new_state = None
+    if state is not None:
+        new_state = {"conv": new_conv, "cell": cell}
+    return out, new_state
+
+
+def _mlstm_final_state(k, v, log_i, log_f):
+    """Fold a whole prefix into the recurrent state (used at prefill→decode)."""
+    b, s, h, d = k.shape
+    fcum = jnp.cumsum(log_f, axis=1)
+    ftot = fcum[:, -1]  # (B,H)
+    w = ftot[:, None, :] - fcum + log_i  # decay from j to end
+    m = jnp.max(w, axis=1)  # (B,H)
+    scale = jnp.exp(w - m[:, None, :])
+    c = jnp.einsum("bsh,bshd,bshe->bhde", scale, k.astype(jnp.float32),
+                   v.astype(jnp.float32))
+    n = jnp.einsum("bsh,bshd->bhd", scale, k.astype(jnp.float32))
+    return {"C": c, "n": n, "m": m}
+
+
+def init_mlstm_state(bsz: int, d_model: int, num_heads: int, dtype,
+                     proj_factor: float = 2.0, conv_width: int = 4) -> dict:
+    d_inner = int(proj_factor * d_model)
+    hd = d_inner // num_heads
+    return {
+        "conv": jnp.zeros((bsz, conv_width - 1, d_inner), dtype),
+        "cell": {
+            "C": jnp.zeros((bsz, num_heads, hd, hd), jnp.float32),
+            "n": jnp.zeros((bsz, num_heads, hd), jnp.float32),
+            "m": jnp.full((bsz, num_heads), -1e30, jnp.float32),
+        },
+    }
+
+
+# ------------------------------------------------------------------- sLSTM
+def init_slstm(key, d_model: int, num_heads: int, dtype) -> dict:
+    hd = d_model // num_heads
+    ks = jax.random.split(key, 3)
+    # fused input weights for z,i,f,o and per-head recurrent weights
+    return {
+        "w_in": dense_init(ks[0], d_model, 4 * d_model, dtype),
+        "r": (jax.random.normal(ks[1], (num_heads, hd, 4 * hd))
+              / math.sqrt(hd)).astype(dtype),
+        "b": jnp.concatenate(
+            [jnp.zeros((2 * d_model,)), 3.0 * jnp.ones((d_model,)),
+             jnp.zeros((d_model,))]).astype(jnp.float32),
+        "norm_scale": jnp.ones((d_model,), dtype=dtype),
+        "out_proj": dense_init(ks[2], d_model, d_model, dtype),
+    }
+
+
+def slstm_block(p: dict, x: jax.Array, num_heads: int,
+                state: Optional[dict] = None,
+                ) -> Tuple[jax.Array, Optional[dict]]:
+    """sLSTM block: sequential scan over time. x: (B,S,D)."""
+    b, s, d_model = x.shape
+    hd = d_model // num_heads
+    wx = (x @ p["w_in"]).astype(jnp.float32)  # (B,S,4D)
+
+    if state is None:
+        st = init_slstm_state(b, d_model, num_heads)
+    else:
+        st = state
+
+    rw = p["r"].astype(jnp.float32)  # (H, hd, 4hd)
+    bias = p["b"]
+
+    bz, bi, bf, bo = jnp.split(bias, 4)
+
+    def rs(a):  # (B, D) -> (B, H, hd)
+        return a.reshape(b, num_heads, hd)
+
+    def step(carry, wx_t):
+        c, n, h, m = carry  # each (B, H, hd)
+        rec = jnp.einsum("bhd,hde->bhe", h, rw)  # (B, H, 4hd), [z|i|f|o]
+        rz, ri, rf, ro = jnp.split(rec, 4, axis=-1)
+        xz, xi, xf, xo = jnp.split(wx_t, 4, axis=-1)  # each (B, D)
+        z = jnp.tanh(rs(xz) + rz + bz.reshape(1, num_heads, hd))
+        log_i = rs(xi) + ri + bi.reshape(1, num_heads, hd)
+        log_f = jax.nn.log_sigmoid(rs(xf) + rf + bf.reshape(1, num_heads, hd))
+        o = jax.nn.sigmoid(rs(xo) + ro + bo.reshape(1, num_heads, hd))
+        m_new = jnp.maximum(log_f + m, log_i)  # per-unit stabilizer
+        i_sc = jnp.exp(log_i - m_new)
+        f_sc = jnp.exp(log_f + m - m_new)
+        c_new = f_sc * c + i_sc * z
+        n_new = f_sc * n + i_sc
+        h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+        return (c_new, n_new, h_new, m_new), h_new
+
+    carry0 = (st["c"], st["n"], st["h"], st["m"])
+    carry, hs = jax.lax.scan(step, carry0, wx.transpose(1, 0, 2))
+    y = hs.transpose(1, 0, 2, 3).reshape(b, s, d_model)
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    yf = yf * jax.lax.rsqrt(var + 1e-6) * p["norm_scale"].astype(jnp.float32)
+    out = yf.astype(x.dtype) @ p["out_proj"]
+    new_state = {"c": carry[0], "n": carry[1], "h": carry[2], "m": carry[3]}
+    return out, new_state
+
+
+def init_slstm_state(bsz: int, d_model: int, num_heads: int) -> dict:
+    hd = d_model // num_heads
+    return {
+        "c": jnp.zeros((bsz, num_heads, hd), jnp.float32),
+        "n": jnp.zeros((bsz, num_heads, hd), jnp.float32),
+        "h": jnp.zeros((bsz, num_heads, hd), jnp.float32),
+        "m": jnp.zeros((bsz, num_heads, hd), jnp.float32),
+    }

@@ -1,0 +1,135 @@
+"""xLSTM LM (xLSTM[7:1]): super-blocks of ``mlstm_per_slstm`` mLSTM blocks
+followed by one sLSTM block, scanned at both levels (outer scan over
+super-blocks, inner scan over the mLSTM stack) so depth adds no HLO."""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import xlstm as xl
+from repro.models.layers import (
+    dense_init,
+    embed_init,
+    make_norm,
+    softmax_cross_entropy,
+)
+from repro.utils.scan import maybe_scan
+from repro.distributed.constraint import shard_activation
+
+Params = Dict[str, Any]
+
+
+def block_counts(cfg: ModelConfig) -> Tuple[int, int]:
+    """(n_super, n_mlstm_per_super). num_layers must divide evenly."""
+    per = cfg.mlstm_per_slstm + 1
+    if cfg.num_layers % per:
+        raise ValueError(
+            f"{cfg.name}: num_layers={cfg.num_layers} not divisible by "
+            f"mlstm_per_slstm+1={per}")
+    return cfg.num_layers // per, cfg.mlstm_per_slstm
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    init_norm, _ = make_norm(cfg.norm)
+    n_super, n_m = block_counts(cfg)
+    k_emb, k_m, k_s, k_head = jax.random.split(key, 4)
+
+    def init_m(k):
+        return {
+            "norm": init_norm(cfg.d_model, cfg.dtype),
+            "mlstm": xl.init_mlstm(k, cfg.d_model, cfg.num_heads, cfg.dtype),
+        }
+
+    def init_s(k):
+        return {
+            "norm": init_norm(cfg.d_model, cfg.dtype),
+            "slstm": xl.init_slstm(k, cfg.d_model, cfg.num_heads, cfg.dtype),
+        }
+
+    m_keys = jax.random.split(k_m, n_super * n_m).reshape(n_super, n_m, 2)
+    s_keys = jax.random.split(k_s, n_super)
+    return {
+        "embed": embed_init(k_emb, cfg.vocab_size, cfg.d_model, cfg.dtype),
+        "m_blocks": jax.vmap(jax.vmap(init_m))(m_keys),  # (n_super, n_m, ...)
+        "s_blocks": jax.vmap(init_s)(s_keys),  # (n_super, ...)
+        "final_norm": init_norm(cfg.d_model, cfg.dtype),
+        "lm_head": dense_init(k_head, cfg.d_model, cfg.vocab_size, cfg.dtype,
+                              scale=1.0 / math.sqrt(cfg.d_model)),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int = 0) -> Dict[str, Any]:
+    """Recurrent state; ``max_len`` is ignored (O(1)-in-seq states)."""
+    n_super, n_m = block_counts(cfg)
+    m_state = jax.vmap(jax.vmap(
+        lambda _: xl.init_mlstm_state(batch, cfg.d_model, cfg.num_heads, cfg.cdtype)
+    ))(jnp.zeros((n_super, n_m)))
+    s_state = jax.vmap(
+        lambda _: xl.init_slstm_state(batch, cfg.d_model, cfg.num_heads)
+    )(jnp.zeros((n_super,)))
+    return {"m": m_state, "s": s_state, "len": jnp.zeros((), jnp.int32)}
+
+
+def _run(cfg: ModelConfig, params: Params, tokens, cache, with_state: bool):
+    _, norm = make_norm(cfg.norm)
+    x = shard_activation((params["embed"][tokens]).astype(cfg.cdtype),
+                         ("pod", "data"), None, None)
+
+    def super_body(carry, inp):
+        (x,) = carry
+        m_params, s_params, m_state, s_state = inp
+
+        def m_body(xc, minp):
+            mp, mst = minp
+            h, new_st = xl.mlstm_block(
+                mp["mlstm"], norm(mp["norm"], xc), cfg.num_heads,
+                state=mst if with_state else None, chunk=cfg.attn_q_chunk)
+            return xc + h, new_st
+
+        x, new_m = maybe_scan(m_body, x, (m_params, m_state),
+                              unroll=not cfg.scan_layers)
+        h, new_s = xl.slstm_block(
+            s_params["slstm"], norm(s_params["norm"], x), cfg.num_heads,
+            state=s_state if with_state else None)
+        x = x + h
+        return (x,), (new_m, new_s)
+
+    if cfg.remat:
+        super_body = jax.checkpoint(
+            super_body, policy=jax.checkpoint_policies.nothing_saveable)
+    (x,), (new_m, new_s) = maybe_scan(
+        super_body, (x,),
+        (params["m_blocks"], params["s_blocks"], cache["m"], cache["s"]),
+        unroll=not cfg.scan_layers)
+    x = norm(params["final_norm"], x)
+    w = shard_activation(params["lm_head"], None, "model")
+    logits = shard_activation(x @ w.astype(x.dtype),
+                              ("pod", "data"), None, "model")
+    return logits.astype(jnp.float32), new_m, new_s
+
+
+def forward(cfg: ModelConfig, params: Params, tokens) -> Tuple[jax.Array, jax.Array]:
+    cache = init_cache(cfg, tokens.shape[0])
+    logits, _, _ = _run(cfg, params, tokens, cache, with_state=False)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch) -> jax.Array:
+    logits, _ = forward(cfg, params, batch.get("inputs", batch.get("tokens")))
+    return softmax_cross_entropy(logits[:, :-1], batch["labels"][:, 1:])
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens, cache):
+    logits, new_m, new_s = _run(cfg, params, tokens, cache, with_state=True)
+    new_cache = {"m": new_m, "s": new_s, "len": cache["len"] + tokens.shape[1]}
+    return logits[:, -1:], new_cache
+
+
+def decode_step(cfg: ModelConfig, params: Params, tokens, cache):
+    logits, new_m, new_s = _run(cfg, params, tokens, cache, with_state=True)
+    new_cache = {"m": new_m, "s": new_s, "len": cache["len"] + 1}
+    return logits, new_cache

@@ -1,0 +1,93 @@
+"""AdamW in pure JAX with configurable state dtype and global-norm clipping.
+
+State dtype matters at scale: bf16 first/second moments halve optimizer
+memory (340B-param training does not fit 256×16GB otherwise — see
+DESIGN.md §4); f32 is the default for small models.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    learning_rate: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip_norm: Optional[float] = 1.0
+    state_dtype: str = "float32"  # 'float32' | 'bfloat16'
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def init_state(config: AdamWConfig, params: Any) -> AdamWState:
+    dt = jnp.dtype(config.state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt) if jnp.issubdtype(
+        p.dtype, jnp.floating) else jnp.zeros(p.shape, p.dtype)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+    )
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def apply_updates(config: AdamWConfig, params: Any, grads: Any,
+                  state: AdamWState, lr_scale: jax.Array | float = 1.0,
+                  ) -> Tuple[Any, AdamWState, dict]:
+    """One AdamW step. Returns (params, state, metrics)."""
+    gnorm = global_norm(grads)
+    if config.grad_clip_norm is not None:
+        scale = jnp.minimum(1.0, config.grad_clip_norm / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+    step = state.step + 1
+    b1, b2 = config.b1, config.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+    lr = config.learning_rate * lr_scale
+
+    def upd(p, g, m, n):
+        if not jnp.issubdtype(p.dtype, jnp.floating):
+            return p, m, n
+        gf = g.astype(jnp.float32)
+        mf = m.astype(jnp.float32) * b1 + gf * (1 - b1)
+        nf = n.astype(jnp.float32) * b2 + jnp.square(gf) * (1 - b2)
+        update = (mf / bc1) / (jnp.sqrt(nf / bc2) + config.eps)
+        update = update + config.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * update
+        return p_new.astype(p.dtype), mf.astype(m.dtype), nf.astype(n.dtype)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.mu)
+    flat_n = jax.tree.leaves(state.nu)
+    out = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_m, flat_n)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_n = jax.tree.unflatten(tdef, [o[2] for o in out])
+    return new_p, AdamWState(step, new_m, new_n), {"grad_norm": gnorm}
+
+
+# -------------------------------------------------------------- LR schedules
+def cosine_schedule(step: jax.Array, *, warmup: int, total: int,
+                    min_frac: float = 0.1) -> jax.Array:
+    """Linear warmup then cosine decay to ``min_frac`` of peak."""
+    s = step.astype(jnp.float32)
+    warm = s / jnp.maximum(warmup, 1)
+    prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(s < warmup, warm, cos)

@@ -1,0 +1,373 @@
+"""Simulated serverless platform (Knative-shaped) for experiments.
+
+Models the pieces of Knative that the paper's evaluation depends on:
+
+* **Containers** with a concurrency limit (``containerConcurrency``); a
+  batched request occupies one concurrency slot for its service time (the
+  ML serving containers in the paper process requests serially).
+* **KPA autoscaler**: concurrency-based scaling with a stable window, a
+  panic window, target utilization, scale-to-zero after a grace period and
+  cold-start delay for new containers.
+* **Activator queue**: requests (batches) that arrive when no slot is free
+  queue platform-side; their queueing time is part of the upstream response
+  time the proxy's monitor observes — exactly what MLProxy sees through its
+  HTTP client.
+* **Billing**: integral of provisioned containers over time; the paper's
+  cost metric ("number of containers") is this integral / duration.
+* **Fault injection** (beyond paper, required at production scale): random
+  container crashes with at-least-once re-dispatch, straggler service
+  times, and optional hedged duplicates for straggler mitigation.
+
+The platform is clock-free like the proxy: it schedules itself on the
+shared :class:`~repro.simulation.events.EventQueue`.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import itertools
+import math
+from typing import Callable, Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.request import Batch
+from repro.serverless.latency import LatencyModel
+from repro.simulation.events import EventQueue
+
+
+@dataclasses.dataclass(frozen=True)
+class PlatformConfig:
+    container_concurrency: int = 1
+    target_utilization: float = 0.7
+    autoscale_tick: float = 2.0
+    metric_tick: float = 1.0
+    stable_window: float = 60.0
+    panic_window: float = 6.0
+    panic_threshold: float = 2.0
+    scale_to_zero_grace: float = 30.0
+    cold_start: float = 4.0
+    min_scale: int = 0
+    max_scale: int = 1000
+    initial_scale: int = 0
+    # Knative rate limits: desired ≤ up_rate × current per tick, and
+    # desired ≥ current / down_rate per tick.
+    max_scale_up_rate: float = 10.0
+    max_scale_down_rate: float = 2.0
+    # Processor-sharing slowdown: with k batches co-resident on one
+    # container, each takes ×(1 + ps_slowdown·(k−1)) longer (CPU-bound ML
+    # containers serialize; 1.0 ≈ perfect processor sharing).
+    ps_slowdown: float = 1.0
+    # Fault injection / mitigation (beyond paper)
+    failure_prob_per_batch: float = 0.0
+    straggler_prob: float = 0.0
+    straggler_mult: float = 5.0
+    hedge_factor: float = 0.0  # >0 enables hedged re-dispatch at f×E[s]
+
+
+class _Container:
+    _ids = itertools.count()
+
+    def __init__(self, ready_at: float) -> None:
+        self.cid = next(_Container._ids)
+        self.ready_at = ready_at
+        self.terminated = False
+        self.draining = False  # finish in-flight work then terminate
+        self.inflight: int = 0
+
+    def is_ready(self, now: float) -> bool:
+        return not self.terminated and now >= self.ready_at
+
+    def available_slots(self, now: float, concurrency: int) -> int:
+        if not self.is_ready(now) or self.draining:
+            return 0
+        return max(0, concurrency - self.inflight)
+
+
+class _WorkItem:
+    _ids = itertools.count()
+
+    def __init__(self, batch: Batch, submit_time: float) -> None:
+        self.item_id = next(_WorkItem._ids)
+        self.batch = batch
+        self.submit_time = submit_time
+        self.done = False
+        self.attempts = 0
+
+
+class ServerlessPlatform:
+    """Discrete-event Knative-like platform fed by a batching policy."""
+
+    def __init__(
+        self,
+        config: PlatformConfig,
+        latency_model: LatencyModel,
+        events: EventQueue,
+        rng: np.random.Generator,
+        on_batch_done: Callable[[Batch, float, float], None],
+    ) -> None:
+        """``on_batch_done(batch, upstream_latency, now)`` fires once per batch."""
+        self.config = config
+        self.latency = latency_model
+        self.events = events
+        self.rng = rng
+        self.on_batch_done = on_batch_done
+
+        self.containers: List[_Container] = []
+        self.pending: Deque[_WorkItem] = collections.deque()
+        # time-weighted concurrency (Knative's queue-proxy reports average
+        # concurrency over each reporting period, not point samples —
+        # point-sampling misses sub-second batches and flaps the panic mode)
+        self._conc_samples: Deque[Tuple[float, float]] = collections.deque()
+        self._conc_integral = 0.0
+        self._conc_t = 0.0
+        self._last_traffic: float = 0.0
+        self._panic_until: float = -1.0
+        self._started = False
+
+        # billing + metrics
+        self.container_seconds = 0.0
+        self._billing_last_t = 0.0
+        self._billing_last_n = 0
+        self.completed_batches = 0
+        self.failed_attempts = 0
+        self.hedged_dispatches = 0
+        self.cold_starts = 0
+        self.peak_containers = 0
+        self.timeline: List[Tuple[float, int, int, int]] = []  # (t, provisioned, ready, queued)
+
+        for _ in range(max(config.min_scale, config.initial_scale)):
+            self._start_container(0.0, cold=False)
+
+    # ------------------------------------------------------------------ api
+    def start(self, now: float) -> None:
+        """Begin autoscaler + metric ticking."""
+        if self._started:
+            return
+        self._started = True
+        self._billing_last_t = now
+        self.events.push(now + self.config.metric_tick, self._metric_tick)
+        self.events.push(now + self.config.autoscale_tick, self._autoscale_tick)
+
+    def submit(self, batch: Batch, now: float) -> None:
+        """One upstream HTTP request carrying ``batch`` (the proxy's view)."""
+        self.start(now)
+        self._accrue_conc(now)
+        self._last_traffic = now
+        item = _WorkItem(batch, now)
+        self.pending.append(item)
+        # Reactive fast-path: Knative's activator pokes the autoscaler on
+        # traffic from zero; model that by an immediate scale check.
+        if self._ready_count(now) == 0 and self._provisioned_count() == 0:
+            self._scale_to(max(1, self.config.min_scale), now)
+        self._try_assign(now)
+
+    # ------------------------------------------------------------- internals
+    def _provisioned_count(self) -> int:
+        return sum(1 for c in self.containers if not c.terminated and not c.draining)
+
+    def _billable_count(self) -> int:
+        return sum(1 for c in self.containers if not c.terminated)
+
+    def _ready_count(self, now: float) -> int:
+        return sum(1 for c in self.containers if c.is_ready(now) and not c.draining)
+
+    def _concurrency(self) -> float:
+        inflight = sum(c.inflight for c in self.containers if not c.terminated)
+        return float(inflight + len(self.pending))
+
+    def _accrue_conc(self, now: float) -> None:
+        """Advance the time-weighted concurrency integral to ``now``."""
+        if now > self._conc_t:
+            self._conc_integral += self._concurrency() * (now - self._conc_t)
+            self._conc_t = now
+
+    def _accrue_billing(self, now: float) -> None:
+        self.container_seconds += self._billing_last_n * (now - self._billing_last_t)
+        self._billing_last_t = now
+        self._billing_last_n = self._billable_count()
+
+    def _start_container(self, now: float, cold: bool = True) -> None:
+        self._accrue_billing(now)
+        delay = self.config.cold_start if cold else 0.0
+        c = _Container(ready_at=now + delay)
+        self.containers.append(c)
+        if cold:
+            self.cold_starts += 1
+            self.events.push(c.ready_at, self._on_container_ready)
+        self._billing_last_n = self._billable_count()
+        self.peak_containers = max(self.peak_containers, self._billable_count())
+
+    def _on_container_ready(self, now: float) -> None:
+        self._try_assign(now)
+
+    def _terminate(self, c: _Container, now: float) -> None:
+        self._accrue_billing(now)
+        if c.inflight > 0:
+            c.draining = True  # terminates in _complete
+        else:
+            c.terminated = True
+        self._billing_last_n = self._billable_count()
+
+    def _try_assign(self, now: float) -> None:
+        self._accrue_conc(now)
+        conc = self.config.container_concurrency
+        for c in self.containers:
+            if not self.pending:
+                break
+            slots = c.available_slots(now, conc)
+            while slots > 0 and self.pending:
+                item = self.pending.popleft()
+                if item.done:
+                    continue
+                self._execute(c, item, now)
+                slots -= 1
+
+    def _execute(self, c: _Container, item: _WorkItem, now: float) -> None:
+        cfg = self.config
+        c.inflight += 1
+        item.attempts += 1
+        service = self.latency.sample(item.batch.effective_size, self.rng)
+        if cfg.ps_slowdown > 0 and c.inflight > 1:
+            service *= 1.0 + cfg.ps_slowdown * (c.inflight - 1)
+        if cfg.straggler_prob > 0 and self.rng.random() < cfg.straggler_prob:
+            service *= cfg.straggler_mult
+        fail = cfg.failure_prob_per_batch > 0 and self.rng.random() < cfg.failure_prob_per_batch
+        if fail:
+            # crash at a uniform point during service; batch re-queued
+            crash_after = service * float(self.rng.random())
+            self.events.push(now + crash_after, lambda t, c=c, item=item: self._crash(c, item, t))
+        else:
+            self.events.push(now + service, lambda t, c=c, item=item: self._complete(c, item, t))
+            if cfg.hedge_factor > 0:
+                est = self.latency.mean(item.batch.effective_size)
+                self.events.push(
+                    now + cfg.hedge_factor * est,
+                    lambda t, item=item: self._maybe_hedge(item, t),
+                )
+
+    def _maybe_hedge(self, item: _WorkItem, now: float) -> None:
+        if item.done:
+            return
+        # straggler suspected: re-dispatch a duplicate; first finisher wins
+        self.hedged_dispatches += 1
+        self.pending.appendleft(item)
+        self._try_assign(now)
+
+    def _crash(self, c: _Container, item: _WorkItem, now: float) -> None:
+        if c.terminated:
+            return
+        self._accrue_conc(now)
+        self.failed_attempts += 1
+        self._accrue_billing(now)
+        c.terminated = True
+        c.inflight = 0
+        self._billing_last_n = self._billable_count()
+        if not item.done:
+            self.pending.appendleft(item)  # at-least-once re-dispatch
+        self._try_assign(now)
+
+    def _complete(self, c: _Container, item: _WorkItem, now: float) -> None:
+        if c.terminated:
+            return  # crashed while running; handled in _crash
+        self._accrue_conc(now)
+        c.inflight = max(0, c.inflight - 1)
+        if c.draining and c.inflight == 0:
+            self._accrue_billing(now)
+            c.terminated = True
+            self._billing_last_n = self._billable_count()
+        if not item.done:
+            item.done = True
+            self.completed_batches += 1
+            self.on_batch_done(item.batch, now - item.submit_time, now)
+        self._try_assign(now)
+
+    # ------------------------------------------------------------ autoscaler
+    def _metric_tick(self, now: float) -> None:
+        self._accrue_conc(now)
+        # prune terminated containers — _try_assign scans this list on every
+        # completion; without pruning long churny runs go quadratic
+        if len(self.containers) > 4 * max(self._provisioned_count(), 1):
+            self.containers = [c for c in self.containers if not c.terminated]
+        self._conc_samples.append((now, self._conc_integral))
+        cutoff = now - self.config.stable_window - 2 * self.config.metric_tick
+        while self._conc_samples and self._conc_samples[0][0] < cutoff:
+            self._conc_samples.popleft()
+        self.timeline.append(
+            (now, self._billable_count(), self._ready_count(now), len(self.pending))
+        )
+        self.events.push(now + self.config.metric_tick, self._metric_tick)
+
+    def _window_avg(self, now: float, window: float) -> float:
+        """Time-weighted average concurrency over the trailing window."""
+        if not self._conc_samples:
+            return 0.0
+        t_end, i_end = self._conc_samples[-1]
+        target = now - window
+        t_start, i_start = self._conc_samples[0]
+        for (t, i) in self._conc_samples:
+            if t >= target:
+                t_start, i_start = t, i
+                break
+        if t_end <= t_start:
+            return self._concurrency()
+        return (i_end - i_start) / (t_end - t_start)
+
+    def _autoscale_tick(self, now: float) -> None:
+        cfg = self.config
+        per_pod = cfg.container_concurrency * cfg.target_utilization
+        stable = self._window_avg(now, cfg.stable_window)
+        panic = self._window_avg(now, cfg.panic_window)
+        current = self._provisioned_count()
+
+        desired_stable = math.ceil(stable / per_pod) if stable > 0 else 0
+        desired_panic = math.ceil(panic / per_pod) if panic > 0 else 0
+
+        if current > 0 and panic >= cfg.panic_threshold * per_pod * current:
+            self._panic_until = now + cfg.stable_window
+        in_panic = now <= self._panic_until
+
+        desired = max(desired_stable, desired_panic) if in_panic else desired_stable
+        if in_panic:
+            desired = max(desired, current)  # no scale-down during panic
+        # scale-to-zero only after the grace period with no traffic
+        if desired == 0 and (now - self._last_traffic) < cfg.scale_to_zero_grace:
+            desired = max(1, cfg.min_scale) if self._last_traffic > 0 else cfg.min_scale
+        # Knative rate limits (per autoscale tick)
+        effective = max(current, 1)
+        desired = min(desired, math.ceil(effective * cfg.max_scale_up_rate))
+        desired = max(desired, math.floor(effective / cfg.max_scale_down_rate))
+        desired = max(cfg.min_scale, min(cfg.max_scale, desired))
+        if desired != current:
+            self._scale_to(desired, now)
+        self.events.push(now + cfg.autoscale_tick, self._autoscale_tick)
+
+    def _scale_to(self, desired: int, now: float) -> None:
+        current = self._provisioned_count()
+        if desired > current:
+            for _ in range(desired - current):
+                self._start_container(now)
+        elif desired < current:
+            # terminate idle containers first, newest first
+            victims = sorted(
+                (c for c in self.containers if not c.terminated and not c.draining),
+                key=lambda c: (c.inflight > 0, -c.ready_at),
+            )
+            for c in victims[: current - desired]:
+                self._terminate(c, now)
+        self._try_assign(now)
+
+    # ---------------------------------------------------------------- report
+    def reset_billing(self, now: float) -> None:
+        """Zero the billing integral (end-of-warmup barrier)."""
+        self._accrue_billing(now)
+        self.container_seconds = 0.0
+        self._billing_last_t = now
+        self.peak_containers = self._billable_count()
+        self.cold_starts = 0
+
+    def finalize(self, now: float) -> None:
+        self._accrue_billing(now)
+
+    def avg_containers(self, duration: float) -> float:
+        return self.container_seconds / duration if duration > 0 else 0.0

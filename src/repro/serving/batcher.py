@@ -1,0 +1,52 @@
+"""Glue between MLProxy and the JAX engine.
+
+``EngineBackedLatency`` turns the real engine into a
+:class:`~repro.serverless.latency.LatencyModel`: ``sample(batch_size)``
+executes a real bucketed prefill+decode on this host and returns measured
+wall seconds. Plugging it into the Simulator gives the hybrid loop used by
+``examples/serve_engine.py``: simulated arrivals + real MLProxy decisions +
+real JAX execution (service times measured, not modeled).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.serverless.latency import LatencyModel
+from repro.serving.engine import InferenceEngine, next_bucket
+
+
+class EngineBackedLatency(LatencyModel):
+    """LatencyModel whose samples are real engine executions."""
+
+    name = "engine"
+    noise_cv = 0.0  # real wall-clock variation is the noise
+
+    def __init__(self, engine: InferenceEngine, prompt_len: int = 16,
+                 gen_len: Optional[int] = None) -> None:
+        self.engine = engine
+        self.prompt_len = prompt_len
+        self.gen_len = gen_len
+        self._ema: Dict[int, float] = {}
+
+    def mean(self, batch_size: int) -> float:
+        bucket = next_bucket(batch_size, self.engine.ecfg.batch_buckets)
+        if bucket in self._ema:
+            return self._ema[bucket]
+        # never measured: optimistic estimate from the closest known bucket
+        known = sorted(self._ema)
+        if known:
+            return self._ema[known[-1]]
+        return 0.0
+
+    def sample(self, batch_size: int, rng: np.random.Generator) -> float:
+        prompts = rng.integers(
+            0, self.engine.cfg.vocab_size,
+            size=(batch_size, self.prompt_len)).astype(np.int32)
+        _, timing = self.engine.generate(prompts, gen_len=self.gen_len)
+        bucket = timing["bucket"]
+        dt = timing["latency_s"]
+        prev = self._ema.get(bucket)
+        self._ema[bucket] = dt if prev is None else 0.8 * prev + 0.2 * dt
+        return dt

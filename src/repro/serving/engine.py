@@ -1,0 +1,187 @@
+"""JAX inference engine — the data plane MLProxy fronts on TPU.
+
+Fixed-shape compiled programs make batch-size *bucketing* mandatory on
+XLA backends: the engine compiles ``prefill``/``decode_step`` once per
+(batch-bucket, prompt-bucket) and pads incoming batches up to the bucket.
+This is the TPU-native adaptation of the paper (DESIGN.md §2): the proxy's
+monitor keys its latency windows by the padded bucket size, which is the
+size whose latency the next dispatch decision must predict.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.model import Model
+
+
+def next_bucket(n: int, buckets: Sequence[int]) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    raise ValueError(f"batch {n} exceeds largest bucket {buckets[-1]}")
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    batch_buckets: Tuple[int, ...] = (1, 2, 4, 8, 16, 32)
+    prompt_buckets: Tuple[int, ...] = (16, 32, 64, 128)
+    max_len: int = 160  # prompt bucket + generation budget
+    gen_len: int = 8
+    greedy: bool = True
+
+
+class InferenceEngine:
+    """Single-replica engine: bucketed compile cache + prefill/decode loop."""
+
+    def __init__(self, cfg: ModelConfig, engine_cfg: EngineConfig,
+                 params: Optional[Any] = None, rng: Optional[jax.Array] = None):
+        self.cfg = cfg
+        self.ecfg = engine_cfg
+        self.model = Model(cfg)
+        if params is None:
+            params = self.model.init(rng if rng is not None else jax.random.PRNGKey(0))
+        self.params = params
+        self._prefill_cache: Dict[Tuple[int, int], Any] = {}
+        self._decode_cache: Dict[int, Any] = {}
+        self.compile_count = 0
+        self.stats: Dict[str, float] = {"batches": 0, "requests": 0, "tokens": 0}
+
+    # ------------------------------------------------------------- compiled
+    def _prefill_fn(self, bucket: int, plen: int):
+        key = (bucket, plen)
+        fn = self._prefill_cache.get(key)
+        if fn is None:
+            model = self.model
+
+            def run(params, tokens, cache):
+                return model.prefill(params, tokens, cache)
+
+            fn = jax.jit(run)
+            self._prefill_cache[key] = fn
+            self.compile_count += 1
+        return fn
+
+    def _decode_fn(self, bucket: int):
+        fn = self._decode_cache.get(bucket)
+        if fn is None:
+            model = self.model
+
+            def run(params, tokens, cache):
+                logits, cache = model.decode_step(params, tokens, cache)
+                nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+                return nxt[:, None], cache
+
+            fn = jax.jit(run, donate_argnames=("cache",))
+            self._decode_cache[bucket] = fn
+            self.compile_count += 1
+        return fn
+
+    def warmup(self, plen: int = 16) -> None:
+        """Precompile every batch bucket (what a replica does at startup)."""
+        for b in self.ecfg.batch_buckets:
+            prompts = np.zeros((b, plen), np.int32)
+            self.generate(prompts, gen_len=1)
+
+    # ------------------------------------------------------------------ api
+    def generate(self, prompts: np.ndarray, gen_len: Optional[int] = None,
+                 ) -> Tuple[np.ndarray, Dict[str, float]]:
+        """Greedy-decode ``gen_len`` tokens for a batch of prompts.
+
+        prompts: (n, plen) int32, n ≤ largest bucket. Returns (tokens
+        (n, gen_len), timing dict with wall seconds + bucket metadata).
+        """
+        gen_len = gen_len if gen_len is not None else self.ecfg.gen_len
+        n, plen_raw = prompts.shape
+        bucket = next_bucket(n, self.ecfg.batch_buckets)
+        plen = next_bucket(plen_raw, self.ecfg.prompt_buckets)
+        t0 = time.perf_counter()
+        padded = np.zeros((bucket, plen), np.int32)
+        padded[:n, plen - plen_raw:] = prompts  # left-pad into the bucket
+        tokens = jnp.asarray(padded)
+
+        cache = self.model.init_cache(bucket, self.ecfg.max_len)
+        logits, cache = self._prefill_fn(bucket, plen)(self.params, tokens, cache)
+        out = [jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]]
+        decode = self._decode_fn(bucket)
+        cur = out[0]
+        for _ in range(gen_len - 1):
+            cur, cache = decode(self.params, cur, cache)
+            out.append(cur)
+        result = jnp.concatenate(out, axis=1)
+        result = jax.device_get(result)[:n]
+        dt = time.perf_counter() - t0
+        self.stats["batches"] += 1
+        self.stats["requests"] += n
+        self.stats["tokens"] += n * gen_len
+        return result, {
+            "latency_s": dt, "bucket": bucket, "prompt_bucket": plen,
+            "padding_waste": (bucket - n) / bucket,
+        }
+
+
+class ReplicaPool:
+    """Elastic pool of engine replicas with failover (fault-tolerance shim).
+
+    Replicas share weights (one copy in memory on this host) but have
+    independent compile caches and health state, mirroring how a Knative
+    deployment schedules independent model servers. ``fail(i)`` marks a
+    replica down (its in-flight work is retried elsewhere); ``scale_to``
+    adds/removes replicas.
+    """
+
+    def __init__(self, cfg: ModelConfig, engine_cfg: EngineConfig,
+                 n_replicas: int = 1, rng: Optional[jax.Array] = None):
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        self._template = InferenceEngine(cfg, engine_cfg, rng=rng)
+        self.cfg = cfg
+        self.engine_cfg = engine_cfg
+        self.replicas: List[Optional[InferenceEngine]] = []
+        self.healthy: List[bool] = []
+        self._rr = 0
+        self.retries = 0
+        self.scale_to(n_replicas)
+
+    def scale_to(self, n: int) -> None:
+        while len(self.replicas) < n:
+            eng = InferenceEngine(self.cfg, self.engine_cfg,
+                                  params=self._template.params)
+            self.replicas.append(eng)
+            self.healthy.append(True)
+        for i in range(n, len(self.replicas)):
+            self.healthy[i] = False
+
+    @property
+    def n_healthy(self) -> int:
+        return sum(self.healthy)
+
+    def fail(self, index: int) -> None:
+        self.healthy[index] = False
+
+    def recover(self, index: int) -> None:
+        self.healthy[index] = True
+
+    def generate(self, prompts: np.ndarray, gen_len: Optional[int] = None):
+        """Round-robin dispatch with failover (at-least-once)."""
+        attempts = 0
+        while attempts <= len(self.replicas):
+            self._rr = (self._rr + 1) % max(len(self.replicas), 1)
+            idx = self._rr
+            if not self.healthy[idx]:
+                attempts += 1
+                continue
+            try:
+                out, timing = self.replicas[idx].generate(prompts, gen_len)
+                timing["replica"] = idx
+                return out, timing
+            except RuntimeError:
+                self.fail(idx)
+                self.retries += 1
+                attempts += 1
+        raise RuntimeError("no healthy replicas")

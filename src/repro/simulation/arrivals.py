@@ -1,0 +1,104 @@
+"""Arrival processes (the paper generates clients with a Poisson process
+modulated by real-world traces; §3.1, §3.5)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.simulation.traces import Trace
+
+
+class ArrivalProcess:
+    """Protocol: next arrival strictly after ``now``, or None when done."""
+
+    def next_arrival(self, now: float, rng: np.random.Generator) -> Optional[float]:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass
+class PoissonProcess(ArrivalProcess):
+    """Homogeneous Poisson with rate ``rate`` (req/s) over [0, duration)."""
+
+    rate: float
+    duration: float
+
+    def next_arrival(self, now: float, rng: np.random.Generator) -> Optional[float]:
+        if self.rate <= 0:
+            return None
+        t = now + rng.exponential(1.0 / self.rate)
+        return t if t < self.duration else None
+
+
+@dataclasses.dataclass
+class DeterministicProcess(ArrivalProcess):
+    """Fixed inter-arrival gap (tests and worst-case analyses)."""
+
+    gap: float
+    duration: float
+
+    def next_arrival(self, now: float, rng: np.random.Generator) -> Optional[float]:
+        t = now + self.gap
+        return t if t < self.duration else None
+
+
+@dataclasses.dataclass
+class TraceModulatedPoisson(ArrivalProcess):
+    """Non-homogeneous Poisson via thinning (Lewis & Shedler, 1979).
+
+    λ(t) comes from a :class:`Trace`; proposals are generated at λ_max and
+    accepted with probability λ(t)/λ_max — exact for piecewise-constant
+    rate profiles and O(1) per proposal.
+    """
+
+    trace: Trace
+
+    def next_arrival(self, now: float, rng: np.random.Generator) -> Optional[float]:
+        lam_max = self.trace.max_rate
+        if lam_max <= 0:
+            return None
+        t = now
+        end = float(self.trace.times[-1])
+        while True:
+            t = t + rng.exponential(1.0 / lam_max)
+            if t >= end:
+                return None
+            if rng.random() * lam_max <= self.trace.rate_at(t):
+                return t
+
+
+@dataclasses.dataclass
+class MMPP2(ArrivalProcess):
+    """2-state Markov-modulated Poisson process (bursty-load stress tests).
+
+    State 0: rate ``rate_lo``; state 1: rate ``rate_hi``; exponential
+    sojourn times with means ``mean_lo`` / ``mean_hi``.
+    """
+
+    rate_lo: float
+    rate_hi: float
+    mean_lo: float
+    mean_hi: float
+    duration: float
+    _state: int = 0
+    _switch_at: Optional[float] = None
+
+    def next_arrival(self, now: float, rng: np.random.Generator) -> Optional[float]:
+        t = now
+        while True:
+            if self._switch_at is None:
+                mean = self.mean_lo if self._state == 0 else self.mean_hi
+                self._switch_at = t + rng.exponential(mean)
+            rate = self.rate_lo if self._state == 0 else self.rate_hi
+            if rate <= 0:
+                t = self._switch_at
+            else:
+                cand = t + rng.exponential(1.0 / rate)
+                if cand < self._switch_at:
+                    return cand if cand < self.duration else None
+                t = self._switch_at
+            if t >= self.duration:
+                return None
+            self._state ^= 1
+            self._switch_at = None

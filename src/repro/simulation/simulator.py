@@ -1,0 +1,227 @@
+"""End-to-end discrete-event simulation: arrivals → policy → platform.
+
+Reproduces the paper's experimental pipeline (§3): a Poisson client
+(optionally trace-modulated) sends requests to the front-end policy
+(MLProxy or a baseline); the policy dispatches batches to the simulated
+Knative platform; completions flow back through the policy's monitor.
+
+Outputs match the paper's reporting: average container count (cost),
+SLO-violation percentage, average batch size (Table 3), the CCDF of
+response times (Fig. 6) and time series of P95 / containers / miss rate /
+Max_BS (Fig. 7).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import math
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import ProxyConfig, SLAConfig
+from repro.core.policies import make_policy
+from repro.core.request import Batch, Request
+from repro.serverless.latency import LatencyModel
+from repro.serverless.platform import PlatformConfig, ServerlessPlatform
+from repro.simulation.arrivals import ArrivalProcess
+from repro.simulation.events import EventQueue
+
+
+@dataclasses.dataclass
+class SimResult:
+    summary: Dict[str, float]
+    e2e_latencies: np.ndarray  # seconds, one per completed request
+    arrival_times: np.ndarray
+    timeline: Dict[str, np.ndarray]  # sampled time series
+    policy_stats: Dict[str, float]
+
+    def ccdf(self):
+        """Return (latency_sorted, ccdf) for Fig.6-style plots."""
+        lat = np.sort(self.e2e_latencies)
+        n = len(lat)
+        if n == 0:
+            return lat, lat
+        ccdf = 1.0 - (np.arange(1, n + 1) / n)
+        return lat, ccdf
+
+
+class Simulator:
+    def __init__(
+        self,
+        *,
+        policy: str,
+        sla: SLAConfig,
+        workload: LatencyModel,
+        arrivals: ArrivalProcess,
+        platform_config: Optional[PlatformConfig] = None,
+        policy_kwargs: Optional[dict] = None,
+        duration: float = 600.0,
+        warmup: float = 0.0,
+        drain_grace: float = 120.0,
+        sample_interval: float = 5.0,
+        p95_window: float = 60.0,
+        seed: int = 0,
+    ) -> None:
+        self.sla = sla
+        self.workload = workload
+        self.arrivals = arrivals
+        self.duration = duration
+        self.warmup = warmup
+        self.drain_grace = drain_grace
+        self.sample_interval = sample_interval
+        self.p95_window = p95_window
+        self.rng = np.random.default_rng(seed)
+        self.events = EventQueue()
+        self.now = 0.0
+
+        self.platform = ServerlessPlatform(
+            config=platform_config or PlatformConfig(),
+            latency_model=workload,
+            events=self.events,
+            rng=self.rng,
+            on_batch_done=self._on_batch_done,
+        )
+        self.policy = make_policy(
+            policy, sla, self._dispatch, **(policy_kwargs or {})
+        )
+
+        self.completed: List[Request] = []
+        self._recent: collections.deque = collections.deque()  # (t_done, e2e)
+        self._timer_scheduled_at: Optional[float] = None
+        self._samples: List[dict] = []
+
+    # --------------------------------------------------------------- wiring
+    def _dispatch(self, batch: Batch) -> None:
+        self.platform.submit(batch, self.now)
+
+    def _on_batch_done(self, batch: Batch, upstream_latency: float, now: float) -> None:
+        self.policy.on_response(batch, upstream_latency, now)
+        for r in batch.requests:
+            self.completed.append(r)
+            self._recent.append((now, r.e2e_latency))
+        self._reschedule_policy_timer()
+
+    def _on_arrival(self, now: float) -> None:
+        req = Request(arrival_time=now)
+        self.policy.on_request(req, now)
+        nxt = self.arrivals.next_arrival(now, self.rng)
+        if nxt is not None:
+            self.events.push(nxt, self._on_arrival)
+        self._reschedule_policy_timer()
+
+    def _on_policy_timer(self, now: float) -> None:
+        self._timer_scheduled_at = None
+        self.policy.on_timer(now)
+        self._reschedule_policy_timer(min_time=now + 1e-6)
+
+    def _reschedule_policy_timer(self, min_time: float = 0.0) -> None:
+        t = self.policy.next_event_time(self.now)
+        if t is None:
+            return
+        # min_time guards against zero-progress loops when a policy keeps
+        # requesting the instant a timer just served
+        t = max(t, self.now, min_time)
+        if self._timer_scheduled_at is None or t < self._timer_scheduled_at - 1e-12:
+            self._timer_scheduled_at = t
+            self.events.push(t, self._on_policy_timer)
+
+    # --------------------------------------------------------------- metrics
+    def _on_sample(self, now: float) -> None:
+        cutoff = now - self.p95_window
+        while self._recent and self._recent[0][0] < cutoff:
+            self._recent.popleft()
+        lats = [l for (_, l) in self._recent]
+        p95 = float(np.percentile(lats, 95)) if lats else math.nan
+        miss = (
+            sum(1 for l in lats if l > self.sla.slo_target) / len(lats)
+            if lats
+            else math.nan
+        )
+        self._samples.append(
+            {
+                "t": now,
+                "p95": p95,
+                "miss_rate": miss,
+                "containers": self.platform._billable_count(),
+                "ready": self.platform._ready_count(now),
+                "queued_batches": len(self.platform.pending),
+                "max_bs": float(self.policy.max_bs),
+                "proxy_queue": self.policy.stats(now).get("queue_len", 0),
+            }
+        )
+        if now < self.duration + self.drain_grace:
+            self.events.push(now + self.sample_interval, self._on_sample)
+
+    # ------------------------------------------------------------------ run
+    def run(self) -> SimResult:
+        first = self.arrivals.next_arrival(0.0, self.rng)
+        if first is not None:
+            self.events.push(first, self._on_arrival)
+        self.events.push(0.0, self._on_sample)
+        self.platform.start(0.0)
+        if self.warmup > 0:
+            self.events.push(self.warmup, self.platform.reset_billing)
+
+        hard_stop = self.duration + self.drain_grace
+        flushed = False
+        while self.events:
+            t, fn = self.events.pop()
+            if t > hard_stop:
+                break
+            self.now = t
+            if not flushed and t >= self.duration:
+                self.policy.flush(self.now)
+                flushed = True
+            fn(t)
+        if not flushed:
+            self.policy.flush(self.now)
+        # drain remaining completions
+        while self.events:
+            t, fn = self.events.pop()
+            if t > hard_stop:
+                break
+            self.now = t
+            fn(t)
+        self.platform.finalize(min(self.now, hard_stop))
+        return self._result()
+
+    def _result(self) -> SimResult:
+        done = [r for r in self.completed if r.arrival_time >= self.warmup]
+        e2e = np.asarray([r.e2e_latency for r in done], dtype=np.float64)
+        arr = np.asarray([r.arrival_time for r in done], dtype=np.float64)
+        viol = float(np.mean(e2e > self.sla.slo_target)) if len(e2e) else 0.0
+        pstats = self.policy.stats(self.now)
+        billing_window = max(self.now, self.duration) - self.warmup
+        summary = {
+            "completed": float(len(e2e)),
+            "violation_rate": viol,
+            "violation_pct": 100.0 * viol,
+            "avg_containers": self.platform.avg_containers(billing_window),
+            "peak_containers": float(self.platform.peak_containers),
+            "avg_batch_size": pstats.get("avg_batch_size", 0.0),
+            "p50": float(np.percentile(e2e, 50)) if len(e2e) else math.nan,
+            "p95": float(np.percentile(e2e, 95)) if len(e2e) else math.nan,
+            "p99": float(np.percentile(e2e, 99)) if len(e2e) else math.nan,
+            "mean_latency": float(e2e.mean()) if len(e2e) else math.nan,
+            "cold_starts": float(self.platform.cold_starts),
+            "failed_attempts": float(self.platform.failed_attempts),
+            "hedged_dispatches": float(self.platform.hedged_dispatches),
+            "throughput": float(len(e2e)) / max(self.now, 1e-9),
+        }
+        timeline = {
+            k: np.asarray([s[k] for s in self._samples], dtype=np.float64)
+            for k in (self._samples[0].keys() if self._samples else [])
+        }
+        return SimResult(
+            summary=summary,
+            e2e_latencies=e2e,
+            arrival_times=arr,
+            timeline=timeline,
+            policy_stats={k: v for k, v in pstats.items() if isinstance(v, (int, float))},
+        )
+
+
+def run_simulation(**kwargs) -> SimResult:
+    """Convenience wrapper: ``run_simulation(policy=..., sla=..., ...)``."""
+    return Simulator(**kwargs).run()

@@ -1,0 +1,31 @@
+"""``maybe_scan`` — ``jax.lax.scan`` or a Python unroll, same signature.
+
+Scan keeps HLO size O(1) in depth (production path). The unrolled path
+exists because XLA's cost analysis counts while-loop bodies ONCE regardless
+of trip count: the dry-run calibrates true FLOPs/bytes/collective volumes
+by compiling shallow *unrolled* variants at two depths and extrapolating
+linearly (see repro.roofline.analysis).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def maybe_scan(body: Callable, carry: Any, xs: Any, *, unroll: bool = False,
+               ) -> Tuple[Any, Any]:
+    """Like ``jax.lax.scan(body, carry, xs)``; Python-unrolled if ``unroll``."""
+    if not unroll:
+        return jax.lax.scan(body, carry, xs)
+    length = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(length):
+        x_i = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if not ys or all(l is None for l in jax.tree.leaves(ys[0], is_leaf=lambda x: x is None)):
+        return carry, None
+    stacked = jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+    return carry, stacked

@@ -1,0 +1,126 @@
+"""Unit tests for the Smart Monitor (windows, percentiles, fallbacks)."""
+import math
+import random
+
+import pytest
+
+from repro.core import MonitorConfig, SLAConfig, SmartMonitor
+from repro.core.monitor import LatencyWindow, P2Quantile, _theil_sen_fit
+
+SLA = SLAConfig(slo_target=0.5)
+
+
+def test_latency_window_percentile_nearest_rank():
+    w = LatencyWindow(maxlen=100, horizon=1e9)
+    for i, v in enumerate([10.0, 20.0, 30.0, 40.0]):
+        w.add(float(i), v)
+    assert w.percentile(50) == 20.0
+    assert w.percentile(95) == 40.0
+    assert w.percentile(100) == 40.0
+
+
+def test_latency_window_horizon_eviction():
+    w = LatencyWindow(maxlen=100, horizon=10.0)
+    w.add(0.0, 1.0)
+    w.add(5.0, 2.0)
+    w.add(20.0, 3.0)
+    assert w.values(now=21.0) == [2.0, 3.0][1:] or w.values(now=21.0) == [3.0]
+    # at t=21, cutoff=11: sample at t=5 evicted too
+    assert w.values(now=21.0) == [3.0]
+
+
+def test_latency_window_maxlen():
+    w = LatencyWindow(maxlen=8, horizon=1e9)
+    for i in range(100):
+        w.add(float(i), float(i))
+    assert len(w) == 8
+    assert w.values() == [float(i) for i in range(92, 100)]
+
+
+def test_p2_quantile_converges_to_empirical():
+    rng = random.Random(0)
+    est = P2Quantile(0.95)
+    xs = [rng.expovariate(1.0) for _ in range(5000)]
+    for x in xs:
+        est.add(x)
+    emp = sorted(xs)[int(0.95 * len(xs))]
+    assert est.value() == pytest.approx(emp, rel=0.15)
+
+
+def test_p2_quantile_few_samples():
+    est = P2Quantile(0.95)
+    for x in [1.0, 2.0, 3.0]:
+        est.add(x)
+    assert est.value() == 3.0
+
+
+def test_theil_sen_fit_recovers_line():
+    pts = [(1.0, 0.1 + 0.02 * 1), (2.0, 0.1 + 0.02 * 2), (4.0, 0.1 + 0.02 * 4),
+           (8.0, 0.1 + 0.02 * 8)]
+    a, b = _theil_sen_fit(pts)
+    assert a == pytest.approx(0.1, abs=1e-9)
+    assert b == pytest.approx(0.02, abs=1e-9)
+
+
+def test_monitor_exact_window_path():
+    mon = SmartMonitor(MonitorConfig(min_samples=3), SLA)
+    for i in range(10):
+        mon.record_upstream(4, 0.1 + 0.001 * i, now=float(i))
+    est = mon.upstream_percentile(4, now=10.0)
+    assert 0.1 <= est <= 0.11
+
+
+def test_monitor_regression_fallback_for_unseen_size():
+    mon = SmartMonitor(MonitorConfig(min_samples=1), SLA)
+    # populate sizes 1 and 2 with a linear curve lat = 0.05 + 0.01*bs
+    for bs in (1, 2, 4):
+        for i in range(5):
+            mon.record_upstream(bs, 0.05 + 0.01 * bs, now=float(i))
+    est8 = mon.upstream_percentile(8, now=10.0)
+    assert est8 == pytest.approx(0.05 + 0.01 * 8, rel=0.05)
+
+
+def test_monitor_optimistic_default_before_any_data():
+    mon = SmartMonitor(MonitorConfig(optimistic_default=0.0), SLA)
+    assert mon.upstream_percentile(5, now=0.0) == 0.0
+
+
+def test_monitor_timeout_ratio_and_reset():
+    mon = SmartMonitor(MonitorConfig(), SLA)
+    mon.record_dispatch(2, "timeout")
+    mon.record_dispatch(4, "full")
+    mon.record_dispatch(4, "full")
+    assert mon.timeout_ratio() == pytest.approx(1 / 3)
+    mon.reset_interval()
+    assert mon.timeout_ratio() == 0.0
+
+
+def test_monitor_violation_accounting():
+    mon = SmartMonitor(MonitorConfig(), SLA)
+    mon.record_e2e(0.4, now=0.0)   # ok
+    mon.record_e2e(0.6, now=0.0)   # violation (slo=0.5)
+    assert mon.violation_rate() == pytest.approx(0.5)
+
+
+def test_monitor_snapshot_restore_roundtrip():
+    mon = SmartMonitor(MonitorConfig(estimator="p2"), SLA)
+    for i in range(20):
+        mon.record_upstream(2, 0.1 + 0.01 * (i % 5), now=float(i))
+        mon.record_e2e(0.2, now=float(i))
+    mon.record_dispatch(2, "timeout")
+    state = mon.snapshot()
+    mon2 = SmartMonitor(MonitorConfig(estimator="p2"), SLA)
+    mon2.restore(state)
+    assert mon2.upstream_percentile(2, now=20.0) == mon.upstream_percentile(2, now=20.0)
+    assert mon2.timeout_ratio() == mon.timeout_ratio()
+    assert mon2.violation_rate() == mon.violation_rate()
+
+
+def test_p2_estimator_backend():
+    mon = SmartMonitor(MonitorConfig(estimator="p2", min_samples=5), SLA)
+    rng = random.Random(1)
+    xs = [0.1 + 0.02 * rng.random() for _ in range(500)]
+    for i, x in enumerate(xs):
+        mon.record_upstream(3, x, now=float(i))
+    emp = sorted(xs)[int(0.95 * len(xs))]
+    assert mon.upstream_percentile(3, now=600.0) == pytest.approx(emp, rel=0.1)

@@ -1,0 +1,84 @@
+"""Fleet controller (vectorized JAX) vs scalar Python implementation."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    AIMDBatchOptimizer,
+    MonitorConfig,
+    OptimizerConfig,
+    SLAConfig,
+    SmartMonitor,
+)
+from repro.core import jax_controller as jc
+
+
+def test_aimd_step_matches_scalar():
+    n = 16
+    rng = np.random.default_rng(0)
+    slo = np.full(n, 1.0, np.float32)
+    state = jc.init_fleet(n, n_buckets=8, window=32, e2e_window=64)
+    # scalar references
+    scalars = []
+    for i in range(n):
+        sla = SLAConfig(slo_target=1.0)
+        mon = SmartMonitor(MonitorConfig(window_size=64, window_horizon=1e12,
+                                         e2e_horizon=1e12), sla)
+        opt = AIMDBatchOptimizer(OptimizerConfig(), sla, mon)
+        scalars.append((mon, opt))
+
+    # feed identical observations to both
+    for step in range(50):
+        ep = int(rng.integers(0, n))
+        lat = float(rng.uniform(0.05, 1.5))
+        was_to = bool(rng.random() < 0.3)
+        state = jc.record_e2e(state, jnp.asarray(ep), jnp.asarray(lat, jnp.float32))
+        state = jc.record_dispatch(state, jnp.asarray(ep), jnp.asarray(was_to))
+        mon, _ = scalars[ep]
+        mon.record_e2e(lat, now=float(step))
+        mon.record_dispatch(2, "timeout" if was_to else "full")
+
+    state2 = jc.aimd_step(state, jnp.asarray(slo))
+    for i, (mon, opt) in enumerate(scalars):
+        opt.update(now=1e9)  # horizon large → no eviction difference
+        assert float(state2.max_bs[i]) == pytest.approx(opt.max_bs_raw, rel=1e-5), i
+    # counters reset
+    assert int(state2.disp_count.sum()) == 0
+
+
+def test_timeout_step_matches_equation():
+    n = 4
+    state = jc.init_fleet(n, n_buckets=8, window=16, initial_max_bs=8.0)
+    # endpoint 0: bucket 2 (probe for queue_len=2) has known latency 0.3
+    for _ in range(4):
+        state = jc.record_upstream(
+            state, jnp.asarray(0), jnp.asarray(2), jnp.asarray(0.3, jnp.float32)
+        )
+    queue_len = jnp.asarray([2, 0, 1, 8], jnp.int32)
+    frt = jnp.asarray([0.1, 0.0, 0.0, 0.0], jnp.float32)
+    slo = jnp.asarray([1.0, 1.0, 1.0, 1.0], jnp.float32)
+    dispatch, to = jc.timeout_step(state, queue_len, frt, slo)
+    # endpoint 0: TO = (1.0 - 0.3) - 0.1 = 0.6
+    assert float(to[0]) == pytest.approx(0.6, abs=1e-6)
+    assert not bool(dispatch[0])
+    # endpoint 1: empty queue → no dispatch
+    assert not bool(dispatch[1])
+    # endpoint 2: no latency data anywhere → est 0 → TO = SLO > 0, queue < max
+    assert not bool(dispatch[2])
+    assert float(to[2]) == pytest.approx(1.0, abs=1e-6)
+    # endpoint 3: queue_len == max_bs → dispatch 'full'
+    assert bool(dispatch[3])
+
+
+def test_masked_percentile_ignores_nans():
+    x = jnp.asarray([[1.0, jnp.nan, 3.0, 2.0], [jnp.nan] * 4])
+    p = jc._masked_percentile(x, 95.0)
+    assert float(p[0]) == 3.0
+    assert bool(jnp.isnan(p[1]))
+
+
+def test_effective_max_bs_floor():
+    state = jc.init_fleet(2, 4)
+    state = state.__class__(**{**state.__dict__, "max_bs": jnp.asarray([1.6, 7.2])})
+    eff = jc.effective_max_bs(state)
+    assert eff.tolist() == [1, 7]

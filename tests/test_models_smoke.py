@@ -1,0 +1,129 @@
+"""Per-architecture smoke tests: reduced config of the same family, one
+forward/train step on CPU, output shapes + no NaNs; plus prefill/decode
+consistency where the family supports exact streaming."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPES_BY_NAME, get_config
+from repro.configs.base import ShapeCell
+from repro.models.model import Model, input_specs, make_inputs
+
+SMOKE_TRAIN = ShapeCell("smoke_train", seq_len=24, global_batch=2, kind="train")
+SMOKE_PREFILL = ShapeCell("smoke_prefill", seq_len=16, global_batch=2, kind="prefill")
+SMOKE_DECODE = ShapeCell("smoke_decode", seq_len=16, global_batch=2, kind="decode")
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def _params(cfg, rng):
+    return Model(cfg).init(rng)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_smoke(arch, rng):
+    cfg = get_config(arch).reduced()
+    model = Model(cfg)
+    params = _params(cfg, rng)
+    inputs = make_inputs(cfg, SMOKE_TRAIN, rng)
+    loss, grads = jax.value_and_grad(lambda p: model.loss(p, inputs["batch"]))(params)
+    assert jnp.isfinite(loss), f"{arch}: loss not finite"
+    leaves = jax.tree.leaves(grads)
+    assert leaves, arch
+    for g in leaves:
+        assert jnp.all(jnp.isfinite(g)), f"{arch}: non-finite grad"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes(arch, rng):
+    cfg = get_config(arch).reduced()
+    model = Model(cfg)
+    params = _params(cfg, rng)
+    inputs = make_inputs(cfg, SMOKE_TRAIN, rng)["batch"]
+    fwd_in = inputs if cfg.family == "encdec" else inputs.get(
+        "inputs", inputs.get("tokens"))
+    logits = model.forward(params, fwd_in)
+    b, s = SMOKE_TRAIN.global_batch, SMOKE_TRAIN.seq_len
+    assert logits.shape == (b, s, cfg.vocab_size), f"{arch}: {logits.shape}"
+    assert logits.dtype == jnp.float32
+    assert jnp.all(jnp.isfinite(logits)), arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_consistency(arch, rng):
+    """prefill(S-1) + decode(1) must equal full forward at the last position.
+
+    Exact for every family: transformer KV caches, SSM/hybrid states and
+    enc-dec caches are all designed for exact streaming.
+    """
+    cfg = get_config(arch).reduced()
+    if cfg.embed_inputs and cfg.family != "encdec":
+        cfg = dataclasses.replace(cfg, embed_inputs=False)  # decode uses tokens
+    model = Model(cfg)
+    params = _params(cfg, rng)
+    b, s = 2, 12
+    tokens = jax.random.randint(rng, (b, s), 0, cfg.vocab_size, dtype=jnp.int32)
+    if cfg.family == "encdec":
+        frames = jax.random.normal(rng, (b, 8, cfg.d_model)).astype(cfg.cdtype)
+        full = model.forward(params, {"frames": frames, "tokens": tokens})
+        cache = model.init_cache(b, 32)
+        _, cache = model.prefill(params, {"frames": frames, "tokens": tokens[:, :-1]},
+                                 cache)
+        logits, cache = model.decode_step(params, tokens[:, -1:], cache)
+    else:
+        full = model.forward(params, tokens)
+        cache = model.init_cache(b, 32)
+        _, cache = model.prefill(params, tokens[:, :-1], cache)
+        logits, cache = model.decode_step(params, tokens[:, -1:], cache)
+    err = jnp.max(jnp.abs(full[:, -1:] - logits))
+    assert err < 5e-3, f"{arch}: decode/forward mismatch {err}"
+    assert int(cache["len"]) == s
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_input_specs_cover_all_shapes(arch):
+    cfg = get_config(arch)
+    for name, shape in SHAPES_BY_NAME.items():
+        if not cfg.supports_shape(shape):
+            assert cfg.skip_reason(shape) == "full-attention@500k"
+            continue
+        specs = input_specs(cfg, shape)
+        leaves = jax.tree.leaves(specs)
+        assert all(hasattr(l, "shape") for l in leaves), (arch, name)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_count_sane(arch):
+    cfg = get_config(arch)
+    n = cfg.param_count()
+    expected = {
+        "llama4-scout-17b-a16e": (80e9, 130e9),   # 16 experts × 8192 ffn
+        "kimi-k2-1t-a32b": (0.8e12, 1.3e12),
+        "starcoder2-15b": (12e9, 18e9),
+        "qwen2-0.5b": (0.3e9, 0.7e9),
+        "nemotron-4-340b": (300e9, 380e9),
+        "yi-34b": (30e9, 40e9),
+        "zamba2-1.2b": (0.9e9, 1.7e9),
+        "xlstm-1.3b": (1.0e9, 2.1e9),
+        "seamless-m4t-large-v2": (1.2e9, 2.8e9),
+        "internvl2-76b": (65e9, 85e9),
+    }[arch]
+    assert expected[0] < n < expected[1], f"{arch}: {n/1e9:.1f}B params"
+    assert cfg.active_param_count() <= n
+
+
+def test_moe_active_params_much_smaller():
+    cfg = get_config("kimi-k2-1t-a32b")
+    assert cfg.active_param_count() < 0.06 * cfg.param_count()
+
+
+def test_reduced_configs_are_small():
+    for arch in ARCH_IDS:
+        cfg = get_config(arch).reduced()
+        assert cfg.param_count() < 20e6, arch
+        assert cfg.family == get_config(arch).family

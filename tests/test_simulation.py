@@ -1,0 +1,341 @@
+"""Tests for the serverless platform model, arrivals, traces and simulator."""
+import numpy as np
+import pytest
+
+from repro.core import SLAConfig
+from repro.core.request import Batch, Request
+from repro.serverless.latency import (
+    AffineLatency,
+    LinearLatency,
+    MeasuredLatency,
+    PowerLawLatency,
+    get_workload,
+)
+from repro.serverless.platform import PlatformConfig, ServerlessPlatform
+from repro.simulation.arrivals import (
+    DeterministicProcess,
+    MMPP2,
+    PoissonProcess,
+    TraceModulatedPoisson,
+)
+from repro.simulation.events import EventQueue
+from repro.simulation.simulator import run_simulation
+from repro.simulation.traces import Trace, synthetic_trace
+
+
+# ------------------------------------------------------------------ latency
+def test_affine_latency_sublinear_per_inference():
+    m = AffineLatency(a=0.1, c=0.01, noise_cv=0.0)
+    per1 = m.mean(1) / 1
+    per16 = m.mean(16) / 16
+    assert per16 < per1  # batching reduces time-per-inference
+
+
+def test_linear_latency_no_benefit():
+    m = LinearLatency(base=0.05, noise_cv=0.0)
+    assert m.mean(8) / 8 == pytest.approx(m.mean(1))
+
+
+def test_powerlaw_latency():
+    m = PowerLawLatency(base=0.1, gamma=0.5, noise_cv=0.0)
+    assert m.mean(4) == pytest.approx(0.2)
+
+
+def test_measured_latency_interpolates_and_extrapolates():
+    m = MeasuredLatency(points=[(1, 0.1), (4, 0.16), (8, 0.24)], noise_cv=0.0)
+    assert m.mean(1) == pytest.approx(0.1)
+    assert m.mean(2) == pytest.approx(0.12)
+    assert m.mean(16) == pytest.approx(0.24 + 0.02 * 8)
+    assert m.mean(0) == pytest.approx(0.1)
+
+
+def test_latency_noise_is_unbiased():
+    m = AffineLatency(a=0.1, c=0.0, noise_cv=0.3)
+    rng = np.random.default_rng(0)
+    xs = [m.sample(1, rng) for _ in range(20000)]
+    assert np.mean(xs) == pytest.approx(0.1, rel=0.02)
+
+
+def test_latency_percentile_analytic():
+    m = AffineLatency(a=0.1, c=0.0, noise_cv=0.2)
+    rng = np.random.default_rng(0)
+    xs = sorted(m.sample(1, rng) for _ in range(20000))
+    emp95 = xs[int(0.95 * len(xs))]
+    assert m.percentile(1, 95) == pytest.approx(emp95, rel=0.03)
+
+
+def test_paper_workloads_brt_matches_table2():
+    # s(1) must equal Table 2's baseline response time (±15%)
+    for name, brt_ms in [
+        ("sklearn-iris", 8), ("keras-toxic", 40), ("onnx-resnet50", 201),
+        ("pytorch-fashion-mnist", 125), ("tfserving-mobilenet", 83),
+        ("tfserving-resnet", 204),
+    ]:
+        assert get_workload(name).mean(1) == pytest.approx(brt_ms / 1000, rel=0.15)
+
+
+# ------------------------------------------------------------------- traces
+def test_trace_rate_lookup_and_scaling():
+    tr = Trace(times=np.array([0.0, 10.0, 20.0]), rates=np.array([1.0, 3.0]))
+    assert tr.rate_at(5.0) == 1.0
+    assert tr.rate_at(15.0) == 3.0
+    assert tr.rate_at(25.0) == 0.0
+    sc = tr.scaled(30.0)
+    assert sc.max_rate == 30.0
+    assert sc.rate_at(5.0) == 10.0
+
+
+def test_synthetic_traces_shapes():
+    for kind in ("wc", "t4", "t5", "constant"):
+        tr = synthetic_trace(kind, duration=100.0, n_bins=50, seed=1)
+        assert tr.duration == pytest.approx(100.0)
+        assert tr.max_rate == pytest.approx(1.0)
+        assert tr.rates.min() >= 0.0
+    # WC must be peakier than T4 (sharp event spikes)
+    wc = synthetic_trace("wc", seed=1)
+    t4 = synthetic_trace("t4", seed=1)
+    assert wc.rates.mean() < t4.rates.mean()
+
+
+def test_trace_csv_roundtrip(tmp_path):
+    tr = synthetic_trace("wc", duration=60.0, n_bins=30)
+    p = tmp_path / "trace.csv"
+    tr.to_csv(str(p))
+    tr2 = Trace.from_csv(str(p))
+    np.testing.assert_allclose(tr2.rates, tr.rates, rtol=1e-5)
+    np.testing.assert_allclose(tr2.times, tr.times, atol=1e-5)
+
+
+def test_trace_stretch():
+    tr = synthetic_trace("t5", duration=100.0)
+    st = tr.stretched(400.0)
+    assert st.duration == pytest.approx(400.0)
+    assert st.max_rate == tr.max_rate
+
+
+# ----------------------------------------------------------------- arrivals
+def test_poisson_rate():
+    rng = np.random.default_rng(0)
+    p = PoissonProcess(rate=50.0, duration=200.0)
+    t, n = 0.0, 0
+    while True:
+        t2 = p.next_arrival(t, rng)
+        if t2 is None:
+            break
+        t, n = t2, n + 1
+    assert n == pytest.approx(50.0 * 200.0, rel=0.05)
+
+
+def test_trace_modulated_poisson_follows_trace():
+    tr = Trace(times=np.array([0.0, 100.0, 200.0]), rates=np.array([5.0, 50.0]))
+    rng = np.random.default_rng(0)
+    p = TraceModulatedPoisson(tr)
+    t, lo, hi = 0.0, 0, 0
+    while True:
+        t2 = p.next_arrival(t, rng)
+        if t2 is None:
+            break
+        if t2 < 100:
+            lo += 1
+        else:
+            hi += 1
+        t = t2
+    assert lo == pytest.approx(500, rel=0.2)
+    assert hi == pytest.approx(5000, rel=0.1)
+
+
+def test_mmpp_switches_states():
+    rng = np.random.default_rng(0)
+    p = MMPP2(rate_lo=1.0, rate_hi=100.0, mean_lo=10.0, mean_hi=10.0, duration=200.0)
+    t, n = 0.0, 0
+    while True:
+        t2 = p.next_arrival(t, rng)
+        if t2 is None:
+            break
+        t, n = t2, n + 1
+    # expected ≈ (1+100)/2 * 200 = 10100; loose band
+    assert 5000 < n < 16000
+
+
+def test_deterministic_process():
+    rng = np.random.default_rng(0)
+    p = DeterministicProcess(gap=0.5, duration=2.0)
+    assert p.next_arrival(0.0, rng) == 0.5
+    assert p.next_arrival(1.6, rng) is None
+
+
+# ----------------------------------------------------------------- platform
+def _mk_platform(**cfg_kw):
+    events = EventQueue()
+    done = []
+    plat = ServerlessPlatform(
+        config=PlatformConfig(**cfg_kw),
+        latency_model=AffineLatency(a=0.1, c=0.0, noise_cv=0.0),
+        events=events,
+        rng=np.random.default_rng(0),
+        on_batch_done=lambda b, lat, t: done.append((b, lat, t)),
+    )
+    return plat, events, done
+
+
+def _drain(events, until=1e9):
+    now = 0.0
+    while events:
+        t, fn = events.pop()
+        if t > until:
+            break
+        now = t
+        fn(t)
+    return now
+
+
+def test_platform_processes_batch_with_cold_start():
+    plat, events, done = _mk_platform(cold_start=2.0)
+    b = Batch(requests=[Request(arrival_time=0.0)], dispatch_time=0.0, cause="full")
+    plat.submit(b, 0.0)
+    _drain(events, until=10.0)
+    assert len(done) == 1
+    _, lat, t = done[0]
+    # cold start 2.0 + service 0.1
+    assert lat == pytest.approx(2.1, abs=0.05)
+
+
+def test_platform_warm_container_no_cold_start():
+    plat, events, done = _mk_platform(initial_scale=1)
+    b = Batch(requests=[Request(arrival_time=0.0)], dispatch_time=0.0, cause="full")
+    plat.submit(b, 0.0)
+    _drain(events, until=10.0)
+    assert done[0][1] == pytest.approx(0.1, abs=1e-6)
+
+
+def test_platform_queues_when_busy():
+    plat, events, done = _mk_platform(initial_scale=1, max_scale=1, min_scale=1)
+    for i in range(3):
+        b = Batch(requests=[Request(arrival_time=0.0)], dispatch_time=0.0, cause="full")
+        plat.submit(b, 0.0)
+    _drain(events, until=5.0)
+    lats = sorted(l for (_, l, _) in done)
+    assert lats == pytest.approx([0.1, 0.2, 0.3], abs=1e-6)
+
+
+def test_platform_failure_requeues_batch():
+    plat, events, done = _mk_platform(initial_scale=2, failure_prob_per_batch=1.0)
+    b = Batch(requests=[Request(arrival_time=0.0)], dispatch_time=0.0, cause="full")
+    plat.submit(b, 0.0)
+    # all attempts fail (prob 1.0) until containers exhausted + restarted;
+    # drain a while: the batch keeps being requeued, autoscaler restarts pods
+    _drain(events, until=60.0)
+    assert plat.failed_attempts >= 1
+    # at-least-once: batch never completes with failure_prob 1.0 but is
+    # never lost either — it's still pending or in flight
+    assert len(done) == 0
+
+
+def test_platform_straggler_and_hedge():
+    plat, events, done = _mk_platform(
+        initial_scale=2, straggler_prob=1.0, straggler_mult=10.0, hedge_factor=2.0
+    )
+    b = Batch(requests=[Request(arrival_time=0.0)], dispatch_time=0.0, cause="full")
+    plat.submit(b, 0.0)
+    _drain(events, until=30.0)
+    assert len(done) == 1  # exactly one completion despite duplicates
+    assert plat.hedged_dispatches >= 1
+
+
+def test_billing_integral():
+    plat, events, done = _mk_platform(initial_scale=2, min_scale=2)
+    plat.start(0.0)
+    _drain(events, until=10.0)
+    plat.finalize(10.0)
+    assert plat.avg_containers(10.0) == pytest.approx(2.0, rel=0.05)
+
+
+def test_scale_to_zero():
+    plat, events, _ = _mk_platform(initial_scale=1, scale_to_zero_grace=5.0)
+    plat.start(0.0)
+    b = Batch(requests=[Request(arrival_time=0.0)], dispatch_time=0.0, cause="full")
+    plat.submit(b, 0.0)
+    _drain(events, until=120.0)
+    assert plat._billable_count() == 0
+
+
+# ---------------------------------------------------------------- simulator
+def test_simulator_mlproxy_beats_passthrough_on_cost():
+    sla = SLAConfig(slo_target=0.5)
+    wl = get_workload("pytorch-fashion-mnist")
+    results = {}
+    for policy in ("passthrough", "mlproxy"):
+        res = run_simulation(
+            policy=policy, sla=sla, workload=wl,
+            arrivals=PoissonProcess(rate=30.0, duration=900.0),
+            platform_config=PlatformConfig(initial_scale=1),
+            duration=900.0, warmup=200.0, seed=7,
+        )
+        results[policy] = res.summary
+    assert results["mlproxy"]["avg_containers"] < 0.6 * results["passthrough"]["avg_containers"]
+    assert results["mlproxy"]["violation_pct"] < 2.0
+    assert results["mlproxy"]["avg_batch_size"] > 2.0
+
+
+def test_simulator_linear_workload_no_benefit():
+    # §4.3: linear-scaling workloads shouldn't benefit from batching
+    sla = SLAConfig(slo_target=0.5)
+    wl = LinearLatency(base=0.05, noise_cv=0.05)
+    results = {}
+    for policy in ("passthrough", "mlproxy"):
+        res = run_simulation(
+            policy=policy, sla=sla, workload=wl,
+            arrivals=PoissonProcess(rate=20.0, duration=600.0),
+            platform_config=PlatformConfig(initial_scale=1),
+            duration=600.0, warmup=150.0, seed=7,
+        )
+        results[policy] = res.summary
+    ratio = results["mlproxy"]["avg_containers"] / max(
+        results["passthrough"]["avg_containers"], 1e-9
+    )
+    assert ratio > 0.7  # no large cost win on the negative control
+
+
+def test_simulator_deterministic_given_seed():
+    sla = SLAConfig(slo_target=0.5)
+    wl = get_workload("sklearn-iris")
+    kw = dict(
+        policy="mlproxy", sla=sla, workload=wl,
+        arrivals=PoissonProcess(rate=50.0, duration=120.0),
+        platform_config=PlatformConfig(initial_scale=1),
+        duration=120.0, seed=3,
+    )
+    a = run_simulation(**kw).summary
+    kw["arrivals"] = PoissonProcess(rate=50.0, duration=120.0)
+    b = run_simulation(**kw).summary
+    assert a == b
+
+
+def test_simulator_ccdf_monotone():
+    sla = SLAConfig(slo_target=0.5)
+    res = run_simulation(
+        policy="mlproxy", sla=sla, workload=get_workload("sklearn-iris"),
+        arrivals=PoissonProcess(rate=20.0, duration=120.0),
+        platform_config=PlatformConfig(initial_scale=1),
+        duration=120.0, seed=1,
+    )
+    lat, ccdf = res.ccdf()
+    assert np.all(np.diff(lat) >= 0)
+    assert np.all(np.diff(ccdf) <= 1e-12)
+
+
+def test_simulator_static_and_clipper_and_oracle_policies():
+    sla = SLAConfig(slo_target=0.5)
+    wl = get_workload("keras-toxic")
+    for policy, kw in [
+        ("static", {"batch_size": 8, "timeout": 0.2}),
+        ("clipper", {}),
+        ("oracle", {"latency_model": lambda bs: wl.mean(bs)}),
+    ]:
+        res = run_simulation(
+            policy=policy, sla=sla, workload=wl,
+            arrivals=PoissonProcess(rate=30.0, duration=300.0),
+            platform_config=PlatformConfig(initial_scale=1),
+            duration=300.0, warmup=60.0, seed=5, policy_kwargs=kw,
+        )
+        assert res.summary["completed"] > 100
