@@ -18,7 +18,8 @@ def main() -> None:
     args = p.parse_args()
 
     from benchmarks.common import Timer
-    from benchmarks import (bench_batch_scaling, bench_ccdf, bench_policies,
+    from benchmarks import (bench_batch_scaling, bench_ccdf,
+                            bench_multi_endpoint, bench_policies,
                             bench_proxy_overhead, bench_table3,
                             bench_timeseries)
 
@@ -38,6 +39,10 @@ def main() -> None:
             lambda rows: min(r["containers"] for r in rows if not r["faults"])),
         "proxy_overhead": (
             bench_proxy_overhead.run, lambda rows: rows[0]["value"]),
+        "multi_endpoint": (
+            bench_multi_endpoint.run,
+            lambda rows: min(r["containers_total"] for r in rows
+                             if r["policy"] == "mlproxy")),
     }
     print("name,us_per_call,derived")
     for name, (fn, derive) in benches.items():

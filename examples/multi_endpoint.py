@@ -1,0 +1,47 @@
+"""Multi-endpoint quickstart: one proxy process, two SLA classes.
+
+A tight-SLO small model and a loose-SLO large model share one
+:class:`~repro.core.frontend.ProxyFrontend`; each endpoint runs its own
+MLProxy instance and converges to its own Max_BS. Run:
+
+    PYTHONPATH=src python examples/multi_endpoint.py
+"""
+from repro.core import SLAConfig, ms
+from repro.serverless.latency import get_workload
+from repro.serverless.platform import PlatformConfig
+from repro.simulation.arrivals import PoissonProcess
+from repro.simulation.simulator import EndpointSpec, run_multi_simulation
+
+
+def main() -> None:
+    duration = 600.0
+    specs = {
+        "iris-tight": EndpointSpec(
+            policy="mlproxy",
+            sla=SLAConfig(slo_target=ms(200)),
+            workload=get_workload("sklearn-iris"),
+            arrivals=PoissonProcess(rate=60.0, duration=duration),
+            platform_config=PlatformConfig(initial_scale=1),
+        ),
+        "resnet-loose": EndpointSpec(
+            policy="mlproxy",
+            sla=SLAConfig(slo_target=ms(1500)),
+            workload=get_workload("tfserving-resnet"),
+            arrivals=PoissonProcess(rate=8.0, duration=duration),
+            platform_config=PlatformConfig(initial_scale=1),
+        ),
+    }
+    res = run_multi_simulation(specs, duration=duration, warmup=duration / 5,
+                               seed=0)
+    print(f"fleet: {res.summary['avg_containers']:.2f} avg containers, "
+          f"{res.summary['completed']:.0f} requests, "
+          f"{res.summary['violation_pct']:.2f}% violations overall")
+    for name, s in res.endpoints.items():
+        print(f"  {name:13s} SLO {s['slo_target']*1000:6.0f} ms  "
+              f"viol {s['violation_pct']:6.3f}%  "
+              f"avg BS {s['avg_batch_size']:5.2f}  "
+              f"Max_BS {s['max_bs']:4.0f}  p95 {s['p95']*1000:7.1f} ms")
+
+
+if __name__ == "__main__":
+    main()

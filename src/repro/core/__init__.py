@@ -1,12 +1,22 @@
 """MLProxy core — the paper's contribution as a composable library.
 
-Public surface:
-  * :class:`~repro.core.proxy.MLProxy` — the adaptive reverse proxy.
-  * :class:`~repro.core.config.ProxyConfig` / ``SLAConfig`` /
-    ``MonitorConfig`` / ``OptimizerConfig`` — configuration.
-  * :mod:`repro.core.policies` — baseline policies for comparison.
-  * :mod:`repro.core.jax_controller` — fleet-scale vectorized controller.
+Public surface, organized as three layers:
+  * **Queue layer** — :class:`~repro.core.batch_queue.BatchQueue` (the one
+    shared queue/dispatch primitive) and the
+    :class:`~repro.core.batch_queue.Policy` protocol every policy
+    implements.
+  * **Policy layer** — :class:`~repro.core.proxy.MLProxy` (the adaptive
+    reverse proxy) and the baselines in :mod:`repro.core.policies`.
+  * **Routing layer** — :class:`~repro.core.frontend.ProxyFrontend`, which
+    multiplexes N named endpoints (each with its own policy + SLA) behind
+    one merged timer.
+
+Configuration lives in :class:`~repro.core.config.ProxyConfig` /
+``SLAConfig`` / ``MonitorConfig`` / ``OptimizerConfig``;
+:mod:`repro.core.jax_controller` holds the fleet-scale vectorized
+controller.
 """
+from repro.core.batch_queue import BatchQueue, Policy  # noqa: F401
 from repro.core.config import (  # noqa: F401
     MonitorConfig,
     OptimizerConfig,
@@ -15,6 +25,7 @@ from repro.core.config import (  # noqa: F401
     bucket_of,
     ms,
 )
+from repro.core.frontend import Endpoint, ProxyFrontend  # noqa: F401
 from repro.core.monitor import LatencyWindow, P2Quantile, SmartMonitor  # noqa: F401
 from repro.core.optimizer import AIMDBatchOptimizer  # noqa: F401
 from repro.core.proxy import MLProxy  # noqa: F401

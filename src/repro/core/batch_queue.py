@@ -1,0 +1,156 @@
+"""Shared batch-queue primitive and the formal ``Policy`` protocol.
+
+Every batching policy in this repo — :class:`~repro.core.proxy.MLProxy`'s
+queue scheduler and all four baselines in :mod:`repro.core.policies` —
+needs the same machinery underneath its decision logic: a FIFO of pending
+requests, the first-arrival (FRT) reference point, a single pending dispatch
+deadline, pow2 bucketing for fixed-shape backends, dispatch counters, and
+snapshot/restore of all of the above. That machinery used to be duplicated
+between ``QueueScheduler._dispatch`` and ``BatchingPolicy._dispatch``;
+:class:`BatchQueue` is the one shared implementation.
+
+A policy *decides* (target batch size, timeout); the queue *executes*
+(accumulate, stamp, bucket, count, hand off). The split keeps every policy
+down to its decision logic and makes the dispatch path change in exactly
+one place.
+
+:class:`Policy` is the event-driven surface the routing layer
+(:mod:`repro.core.frontend`), the simulator, and the serving engine program
+against. It is a :func:`typing.runtime_checkable` protocol so conformance
+is testable without inheritance.
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Optional, Protocol, runtime_checkable
+
+from repro.core.config import bucket_of
+from repro.core.monitor import SmartMonitor
+from repro.core.request import Batch, Request
+
+DispatchFn = Callable[[Batch], None]
+
+
+@runtime_checkable
+class Policy(Protocol):
+    """Event-driven batching-policy surface (clock-free: callers pass ``now``).
+
+    Implementations: :class:`~repro.core.proxy.MLProxy` and every baseline in
+    :mod:`repro.core.policies`. The simulator, the serving loop, and
+    :class:`~repro.core.frontend.ProxyFrontend` only ever touch this surface,
+    so policies are freely swappable per endpoint.
+    """
+
+    def on_request(self, request: Request, now: float) -> None:
+        """Handle one arrival; may dispatch synchronously."""
+
+    def on_response(self, batch: Batch, upstream_latency: float, now: float) -> None:
+        """Record a completed upstream batch; completes member requests."""
+
+    def on_timer(self, now: float) -> None:
+        """Fire due timeouts / periodic updates."""
+
+    def next_event_time(self, now: float) -> Optional[float]:
+        """Earliest future time at which :meth:`on_timer` must run."""
+
+    def flush(self, now: float) -> None:
+        """Dispatch whatever is queued (shutdown / checkpoint barrier)."""
+
+    def stats(self, now: float) -> dict:
+        """Point-in-time metrics (max_bs, queue_len, violation_rate, ...)."""
+
+    def snapshot(self) -> dict:
+        """Serializable control-plane state (crash/restart resumes warm)."""
+
+    def restore(self, state: dict) -> None:
+        """Inverse of :meth:`snapshot`."""
+
+    @property
+    def max_bs(self) -> int:
+        """Current target batch size."""
+        ...
+
+
+class BatchQueue:
+    """The shared queue/dispatch/bucketing/snapshot core under every policy.
+
+    Holds pending requests plus the two pieces of timing state every policy
+    needs — the oldest-arrival reference (``first_arrival``, the paper's FRT
+    anchor) and the single pending dispatch deadline (``next_deadline``) —
+    and owns the one ``_dispatch`` implementation: stamp dispatch times,
+    apply bucketing, reset state, bump counters, notify the monitor, hand
+    the batch to ``dispatch_fn``.
+    """
+
+    def __init__(
+        self,
+        dispatch_fn: DispatchFn,
+        monitor: Optional[SmartMonitor] = None,
+        bucketing: Optional[str] = None,
+    ) -> None:
+        self.dispatch_fn = dispatch_fn
+        self.monitor = monitor
+        self.bucketing = bucketing
+        self._queue: List[Request] = []
+        self.first_arrival: Optional[float] = None
+        self.next_deadline: Optional[float] = None
+        self.dispatched_batches = 0
+        self.dispatched_requests = 0
+
+    # ------------------------------------------------------------------ api
+    def __len__(self) -> int:
+        return len(self._queue)
+
+    @property
+    def queue_len(self) -> int:
+        return len(self._queue)
+
+    def append(self, request: Request, now: float) -> None:
+        """Enqueue one request; anchors ``first_arrival`` on an empty queue."""
+        if not self._queue:
+            self.first_arrival = now
+        self._queue.append(request)
+
+    def frt(self, now: float) -> float:
+        """Age of the oldest queued request (0 when empty)."""
+        if self.first_arrival is None:
+            return 0.0
+        return now - self.first_arrival
+
+    def _dispatch(self, now: float, cause: str) -> Batch:
+        """Dispatch the entire queue as one batch. The only implementation."""
+        batch = Batch(requests=self._queue, dispatch_time=now, cause=cause)
+        if self.bucketing is not None:
+            batch.bucket_size = bucket_of(batch.size, self.bucketing)
+        for r in batch.requests:
+            r.dispatch_time = now
+        self._queue = []
+        self.first_arrival = None
+        self.next_deadline = None
+        self.dispatched_batches += 1
+        self.dispatched_requests += batch.size
+        if self.monitor is not None:
+            self.monitor.record_dispatch(batch.size, cause)
+        self.dispatch_fn(batch)
+        return batch
+
+    @property
+    def avg_batch_size(self) -> float:
+        return (self.dispatched_requests / self.dispatched_batches
+                if self.dispatched_batches else 0.0)
+
+    # ------------------------------------------------------ fault tolerance
+    def snapshot(self) -> dict:
+        return {
+            "queue": list(self._queue),
+            "first_arrival": self.first_arrival,
+            "next_deadline": self.next_deadline,
+            "dispatched_batches": self.dispatched_batches,
+            "dispatched_requests": self.dispatched_requests,
+        }
+
+    def restore(self, state: dict) -> None:
+        self._queue = list(state["queue"])
+        self.first_arrival = state["first_arrival"]
+        self.next_deadline = state["next_deadline"]
+        self.dispatched_batches = state["dispatched_batches"]
+        self.dispatched_requests = state["dispatched_requests"]

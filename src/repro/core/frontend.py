@@ -1,0 +1,156 @@
+"""ProxyFrontend — the multi-endpoint routing layer.
+
+The paper deploys one MLProxy per serverless endpoint; a production fleet
+serves many models with many SLA classes through one proxy process. The
+frontend owns N named endpoints — each with its own
+:class:`~repro.core.batch_queue.Policy` (MLProxy or any baseline), its own
+:class:`~repro.core.config.SLAConfig`, and its own dispatch target — and:
+
+* routes arrivals by endpoint key (``request.endpoint`` or an explicit
+  argument),
+* stamps every outgoing :class:`~repro.core.request.Batch` with its
+  endpoint name so shared dispatch targets can demultiplex,
+* merges every endpoint's ``next_event_time`` into one timer so the caller
+  (simulator or wall-clock serving loop) runs a single clock,
+* exposes aggregated and per-endpoint ``stats``/``snapshot``/``restore``.
+
+The frontend is clock-free like the policies beneath it: callers pass
+``now`` into every method.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+from repro.core.batch_queue import DispatchFn, Policy
+from repro.core.config import SLAConfig
+from repro.core.request import Batch, Request
+
+
+@dataclasses.dataclass
+class Endpoint:
+    """One named endpoint: its policy, SLA, and dispatch target."""
+
+    name: str
+    policy: Policy
+    sla: SLAConfig
+    dispatch_fn: DispatchFn  # the unwrapped target (platform, pool, ...)
+
+
+class ProxyFrontend:
+    """Routes requests across N endpoints, each with its own policy + SLA."""
+
+    def __init__(self) -> None:
+        self._endpoints: Dict[str, Endpoint] = {}
+
+    # ------------------------------------------------------------- topology
+    def add_endpoint(
+        self,
+        name: str,
+        *,
+        sla: SLAConfig,
+        dispatch_fn: DispatchFn,
+        policy: str = "mlproxy",
+        policy_kwargs: Optional[dict] = None,
+    ) -> Endpoint:
+        """Register an endpoint; ``policy`` is a :func:`make_policy` name.
+
+        The policy's dispatch path is wrapped so every batch is stamped
+        with the endpoint name before it reaches ``dispatch_fn``.
+        """
+        # deferred import: policies imports proxy which imports batch_queue
+        from repro.core.policies import make_policy
+
+        if name in self._endpoints:
+            raise ValueError(f"endpoint {name!r} already registered")
+
+        def stamped_dispatch(batch: Batch, _name=name, _fn=dispatch_fn) -> None:
+            batch.endpoint = _name
+            for r in batch.requests:
+                r.endpoint = _name
+            _fn(batch)
+
+        pol = make_policy(policy, sla, stamped_dispatch, **(policy_kwargs or {}))
+        ep = Endpoint(name=name, policy=pol, sla=sla, dispatch_fn=dispatch_fn)
+        self._endpoints[name] = ep
+        return ep
+
+    def endpoint(self, name: str) -> Endpoint:
+        return self._endpoints[name]
+
+    @property
+    def names(self) -> List[str]:
+        return list(self._endpoints)
+
+    def __len__(self) -> int:
+        return len(self._endpoints)
+
+    # -------------------------------------------------------------- routing
+    def _resolve(self, key: Optional[str]) -> Endpoint:
+        if key is None:
+            if len(self._endpoints) == 1:
+                return next(iter(self._endpoints.values()))
+            raise KeyError(
+                "request has no endpoint key and the frontend serves "
+                f"{len(self._endpoints)} endpoints"
+            )
+        try:
+            return self._endpoints[key]
+        except KeyError:
+            raise KeyError(
+                f"unknown endpoint {key!r}; registered: {sorted(self._endpoints)}"
+            ) from None
+
+    def on_request(self, request: Request, now: float,
+                   endpoint: Optional[str] = None) -> None:
+        """Route one arrival to its endpoint's policy."""
+        ep = self._resolve(endpoint or request.endpoint)
+        request.endpoint = ep.name
+        ep.policy.on_request(request, now)
+
+    def on_response(self, batch: Batch, upstream_latency: float, now: float) -> None:
+        """Route a completed upstream batch back to the owning policy."""
+        self._resolve(batch.endpoint).policy.on_response(batch, upstream_latency, now)
+
+    # --------------------------------------------------------------- timers
+    def on_timer(self, now: float) -> None:
+        """Fire every endpoint's timer; each policy guards its own deadline."""
+        for ep in self._endpoints.values():
+            ep.policy.on_timer(now)
+
+    def next_event_time(self, now: float) -> Optional[float]:
+        """Merged timer: the earliest ``next_event_time`` across endpoints."""
+        times = [
+            t for ep in self._endpoints.values()
+            if (t := ep.policy.next_event_time(now)) is not None
+        ]
+        return min(times) if times else None
+
+    def flush(self, now: float) -> None:
+        for ep in self._endpoints.values():
+            ep.policy.flush(now)
+
+    # -------------------------------------------------------------- metrics
+    def stats(self, now: float) -> dict:
+        """Per-endpoint stats plus a fleet-level aggregate."""
+        per = {name: ep.policy.stats(now) for name, ep in self._endpoints.items()}
+        agg_batches = sum(s["dispatched_batches"] for s in per.values())
+        agg_requests = sum(s["dispatched_requests"] for s in per.values())
+        return {
+            "endpoints": per,
+            "aggregate": {
+                "n_endpoints": len(per),
+                "queue_len": sum(s["queue_len"] for s in per.values()),
+                "dispatched_batches": agg_batches,
+                "dispatched_requests": agg_requests,
+                "avg_batch_size": agg_requests / agg_batches if agg_batches else 0.0,
+            },
+        }
+
+    # ------------------------------------------------------ fault tolerance
+    def snapshot(self) -> dict:
+        return {name: ep.policy.snapshot() for name, ep in self._endpoints.items()}
+
+    def restore(self, state: dict) -> None:
+        for name, sub in state.items():
+            self._endpoints[name].policy.restore(sub)

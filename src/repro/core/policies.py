@@ -1,9 +1,15 @@
 """Batching policies: MLProxy plus the baselines it is compared against.
 
-Every policy exposes the same event-driven surface as :class:`MLProxy`
-(`on_request`, `on_response`, `on_timer`, `next_event_time`, `flush`,
-`stats`, `snapshot`/`restore`), so the simulator and the serving engine can
-swap them freely:
+Every policy implements the formal :class:`~repro.core.batch_queue.Policy`
+protocol (`on_request`, `on_response`, `on_timer`, `next_event_time`,
+`flush`, `stats`, `snapshot`/`restore`, `max_bs`), so the simulator, the
+serving engine, and the multi-endpoint
+:class:`~repro.core.frontend.ProxyFrontend` can swap them freely.
+
+All queue/dispatch mechanics (pending FIFO, first-arrival anchor, deadline,
+bucketing, counters, snapshot of that state) live in the one shared
+:class:`~repro.core.batch_queue.BatchQueue`; each policy here contributes
+only its decision logic — a target batch size and a queue timeout:
 
 * ``PassthroughPolicy`` — the paper's "MLProxy off" baseline: every request
   is forwarded upstream immediately as a batch of one (what a stock API
@@ -23,27 +29,22 @@ from __future__ import annotations
 
 from typing import Callable, Optional
 
-from repro.core.config import MonitorConfig, ProxyConfig, SLAConfig, bucket_of
+from repro.core.batch_queue import BatchQueue
+from repro.core.config import MonitorConfig, ProxyConfig, SLAConfig
 from repro.core.monitor import SmartMonitor
 from repro.core.proxy import MLProxy
 from repro.core.request import Batch, Request
 
 
 class BatchingPolicy:
-    """Common bookkeeping for non-MLProxy policies."""
+    """Decision logic + shared :class:`BatchQueue` for non-MLProxy policies."""
 
     def __init__(self, sla: SLAConfig, dispatch_fn: Callable[[Batch], None],
                  monitor_config: Optional[MonitorConfig] = None,
                  bucketing: Optional[str] = None) -> None:
         self.sla = sla
-        self.dispatch_fn = dispatch_fn
         self.monitor = SmartMonitor(monitor_config or MonitorConfig(), sla)
-        self.bucketing = bucketing
-        self._queue = []
-        self._first_arrival: Optional[float] = None
-        self.next_deadline: Optional[float] = None
-        self.dispatched_batches = 0
-        self.dispatched_requests = 0
+        self.queue = BatchQueue(dispatch_fn, self.monitor, bucketing=bucketing)
 
     # -------- subclass interface ------------------------------------------
     def target_batch_size(self, now: float) -> int:
@@ -54,29 +55,41 @@ class BatchingPolicy:
         raise NotImplementedError
 
     # -------- shared machinery --------------------------------------------
+    @property
+    def next_deadline(self) -> Optional[float]:
+        return self.queue.next_deadline
+
+    @property
+    def dispatched_batches(self) -> int:
+        return self.queue.dispatched_batches
+
+    @property
+    def dispatched_requests(self) -> int:
+        return self.queue.dispatched_requests
+
     def on_request(self, request: Request, now: float) -> None:
-        if not self._queue:
-            self._first_arrival = now
-        self._queue.append(request)
-        if len(self._queue) >= max(1, self.target_batch_size(now)):
-            self._dispatch(now, "full")
+        self.queue.append(request, now)
+        if self.queue.queue_len >= max(1, self.target_batch_size(now)):
+            self.queue._dispatch(now, "full")
             return
         to = self.queue_timeout(now)
         if to is None:
-            self.next_deadline = None
+            self.queue.next_deadline = None
         else:
-            deadline = (self._first_arrival or now) + to
+            # anchor on the oldest queued request (frt handles the
+            # first_arrival == 0.0 case an `or now` fallback would drop)
+            deadline = (now - self.queue.frt(now)) + to
             if deadline <= now:
-                self._dispatch(now, "timeout")
+                self.queue._dispatch(now, "timeout")
             else:
-                self.next_deadline = deadline
+                self.queue.next_deadline = deadline
 
     def on_timer(self, now: float) -> None:
-        if self.next_deadline is not None and now + 1e-12 >= self.next_deadline:
-            if self._queue:
-                self._dispatch(now, "timeout")
+        if self.queue.next_deadline is not None and now + 1e-12 >= self.queue.next_deadline:
+            if self.queue.queue_len:
+                self.queue._dispatch(now, "timeout")
             else:
-                self.next_deadline = None
+                self.queue.next_deadline = None
 
     def on_response(self, batch: Batch, upstream_latency: float, now: float) -> None:
         self.monitor.record_upstream(batch.effective_size, upstream_latency, now)
@@ -85,25 +98,11 @@ class BatchingPolicy:
             self.monitor.record_e2e(r.e2e_latency, now)
 
     def next_event_time(self, now: float) -> Optional[float]:
-        return self.next_deadline
+        return self.queue.next_deadline
 
     def flush(self, now: float) -> None:
-        if self._queue:
-            self._dispatch(now, "flush")
-
-    def _dispatch(self, now: float, cause: str) -> None:
-        batch = Batch(requests=self._queue, dispatch_time=now, cause=cause)
-        if self.bucketing is not None:
-            batch.bucket_size = bucket_of(batch.size, self.bucketing)
-        for r in batch.requests:
-            r.dispatch_time = now
-        self._queue = []
-        self._first_arrival = None
-        self.next_deadline = None
-        self.dispatched_batches += 1
-        self.dispatched_requests += batch.size
-        self.monitor.record_dispatch(batch.size, cause)
-        self.dispatch_fn(batch)
+        if self.queue.queue_len:
+            self.queue._dispatch(now, "flush")
 
     @property
     def max_bs(self) -> int:
@@ -112,13 +111,10 @@ class BatchingPolicy:
     def stats(self, now: float) -> dict:
         return {
             "max_bs": self.target_batch_size(now),
-            "queue_len": len(self._queue),
-            "dispatched_batches": self.dispatched_batches,
-            "dispatched_requests": self.dispatched_requests,
-            "avg_batch_size": (
-                self.dispatched_requests / self.dispatched_batches
-                if self.dispatched_batches else 0.0
-            ),
+            "queue_len": self.queue.queue_len,
+            "dispatched_batches": self.queue.dispatched_batches,
+            "dispatched_requests": self.queue.dispatched_requests,
+            "avg_batch_size": self.queue.avg_batch_size,
             "e2e_p": self.monitor.e2e_percentile(now),
             "violation_rate": self.monitor.violation_rate(),
             "timeout_ratio": self.monitor.timeout_ratio(),
@@ -127,18 +123,21 @@ class BatchingPolicy:
     def snapshot(self) -> dict:
         return {
             "monitor": self.monitor.snapshot(),
-            "queue": list(self._queue),
-            "first_arrival": self._first_arrival,
-            "next_deadline": self.next_deadline,
-            "counts": (self.dispatched_batches, self.dispatched_requests),
+            "queue": self.queue.snapshot(),
         }
 
     def restore(self, state: dict) -> None:
         self.monitor.restore(state["monitor"])
-        self._queue = list(state["queue"])
-        self._first_arrival = state["first_arrival"]
-        self.next_deadline = state["next_deadline"]
-        self.dispatched_batches, self.dispatched_requests = state["counts"]
+        if "counts" in state:  # pre-BatchQueue snapshot layout
+            self.queue.restore({
+                "queue": state["queue"],
+                "first_arrival": state["first_arrival"],
+                "next_deadline": state["next_deadline"],
+                "dispatched_batches": state["counts"][0],
+                "dispatched_requests": state["counts"][1],
+            })
+        else:
+            self.queue.restore(state["queue"])
 
 
 class PassthroughPolicy(BatchingPolicy):
@@ -209,9 +208,19 @@ class ClipperAIMDPolicy(BatchingPolicy):
         nxt = (self._last_update + self.update_interval
                if self._last_update is not None
                else now + self.update_interval)
-        if self.next_deadline is not None:
-            return min(self.next_deadline, nxt)
+        if self.queue.next_deadline is not None:
+            return min(self.queue.next_deadline, nxt)
         return nxt
+
+    def snapshot(self) -> dict:
+        state = super().snapshot()
+        state["aimd"] = (self._bs, self._last_update)
+        return state
+
+    def restore(self, state: dict) -> None:
+        super().restore(state)
+        if "aimd" in state:
+            self._bs, self._last_update = state["aimd"]
 
 
 class OracleStaticPolicy(BatchingPolicy):
@@ -241,7 +250,7 @@ class OracleStaticPolicy(BatchingPolicy):
 
 
 def make_policy(name: str, sla: SLAConfig, dispatch_fn, **kwargs):
-    """Factory used by the simulator and benchmarks."""
+    """Factory used by the simulator, the frontend, and benchmarks."""
     if name == "mlproxy":
         proxy_cfg = kwargs.pop("proxy_config", None) or ProxyConfig(sla=sla, **kwargs)
         return MLProxy(proxy_cfg, dispatch_fn)

@@ -1,6 +1,7 @@
 """MLProxy — the adaptive reverse proxy (Smart Proxy + Smart Monitor).
 
-Wires together the three paper components behind a small event-driven API:
+Wires together the three paper components behind the event-driven
+:class:`~repro.core.batch_queue.Policy` protocol:
 
     proxy = MLProxy(config, dispatch_fn=send_upstream)
     proxy.on_request(req, now)             # arrival path (Algorithm 1)
@@ -8,9 +9,16 @@ Wires together the three paper components behind a small event-driven API:
     proxy.on_timer(now)                    # timeout + AIMD ticks
     proxy.next_event_time(now)             # earliest time on_timer is needed
 
+The queue/dispatch mechanics under the scheduler live in the shared
+:class:`~repro.core.batch_queue.BatchQueue` — the same primitive every
+baseline in :mod:`repro.core.policies` runs on — so MLProxy differs from
+the baselines only in its decision logic (Algorithms 1 + 2).
+
 ``dispatch_fn(batch)`` is the only outbound dependency — the simulator sends
 the batch to the modeled serverless platform; the real serving path sends it
-to the JAX :class:`~repro.serving.engine.InferenceEngine`.
+to the JAX :class:`~repro.serving.engine.InferenceEngine`. Multiple MLProxy
+instances (or baselines) are composed behind one
+:class:`~repro.core.frontend.ProxyFrontend` for multi-endpoint serving.
 """
 from __future__ import annotations
 
@@ -85,11 +93,7 @@ class MLProxy:
             "queue_len": self.scheduler.queue_len,
             "dispatched_batches": self.scheduler.dispatched_batches,
             "dispatched_requests": self.scheduler.dispatched_requests,
-            "avg_batch_size": (
-                self.scheduler.dispatched_requests / self.scheduler.dispatched_batches
-                if self.scheduler.dispatched_batches
-                else 0.0
-            ),
+            "avg_batch_size": self.scheduler.queue.avg_batch_size,
             "e2e_p": self.monitor.e2e_percentile(now),
             "violation_rate": self.monitor.violation_rate(),
             "timeout_ratio": self.monitor.timeout_ratio(),

@@ -15,6 +15,9 @@ class Request:
     arrival_time: float
     payload: Any = None
     req_id: int = dataclasses.field(default_factory=lambda: next(_req_counter))
+    # Routing key used by the multi-endpoint frontend (None on the
+    # single-endpoint path).
+    endpoint: Optional[str] = None
     # Filled in on completion:
     dispatch_time: Optional[float] = None
     completion_time: Optional[float] = None
@@ -40,6 +43,9 @@ class Batch:
     dispatch_time: float
     cause: str  # 'full' | 'timeout' | 'flush'
     bucket_size: Optional[int] = None  # padded size on fixed-shape backends
+    # Stamped by the frontend so shared dispatch targets (and shared
+    # platforms) know which endpoint's model a batch belongs to.
+    endpoint: Optional[str] = None
 
     @property
     def size(self) -> int:

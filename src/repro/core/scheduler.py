@@ -11,19 +11,22 @@ and the batch is dispatched when (a) it reaches ``Max_BS``, (b) the timeout
 fires, or (c) ``TO ≤ 0`` at recomputation time (the paper's "negative DTO →
 dispatch immediately" rule, which also covers negative DTO).
 
+The queue/dispatch mechanics (FIFO, FRT anchor, bucketing, counters,
+snapshot) live in the shared :class:`~repro.core.batch_queue.BatchQueue`;
+this module holds only the Algorithm-1 decision logic on top of it.
+
 The scheduler is clock-free: callers pass ``now`` into every method, and read
 ``next_deadline`` to know when to call :meth:`on_timer`. This makes the same
 object usable from the discrete-event simulator and from a wall-clock loop.
 """
 from __future__ import annotations
 
-from typing import Callable, List, Optional
+from typing import Callable, Optional
 
-from repro.core.config import ProxyConfig, bucket_of
+from repro.core.batch_queue import BatchQueue, DispatchFn
+from repro.core.config import ProxyConfig
 from repro.core.monitor import SmartMonitor
-from repro.core.request import Batch, Request
-
-DispatchFn = Callable[[Batch], None]
+from repro.core.request import Request
 
 
 class QueueScheduler:
@@ -38,88 +41,66 @@ class QueueScheduler:
     ) -> None:
         self.config = config
         self.monitor = monitor
-        self.dispatch_fn = dispatch_fn
         self.max_bs_fn = max_bs_fn
-        self._queue: List[Request] = []
-        self._first_arrival: Optional[float] = None  # FRT reference point
-        self.next_deadline: Optional[float] = None
-        # counters for introspection / tests
-        self.dispatched_batches = 0
-        self.dispatched_requests = 0
+        self.queue = BatchQueue(dispatch_fn, monitor, bucketing=config.bucketing)
 
     # ------------------------------------------------------------------ api
     @property
     def queue_len(self) -> int:
-        return len(self._queue)
+        return self.queue.queue_len
+
+    @property
+    def next_deadline(self) -> Optional[float]:
+        return self.queue.next_deadline
+
+    @property
+    def dispatched_batches(self) -> int:
+        return self.queue.dispatched_batches
+
+    @property
+    def dispatched_requests(self) -> int:
+        return self.queue.dispatched_requests
 
     def on_arrival(self, request: Request, now: float) -> None:
         """Handle one request arrival (lines 5–20 of Algorithm 1)."""
-        if self._queue:
+        if self.queue.queue_len:
             # A pending timeout exists; arrival cancels and recomputes it.
-            self.next_deadline = None
-        else:
-            self._first_arrival = now  # "if BS=0 then FRT ← reset"
-        self._queue.append(request)
+            self.queue.next_deadline = None
+        self.queue.append(request, now)
 
         max_bs = max(1, self.max_bs_fn())
-        if len(self._queue) >= max_bs:
-            self._dispatch(now, cause="full")
+        if self.queue.queue_len >= max_bs:
+            self.queue._dispatch(now, cause="full")
             return
 
         # DTO = SLO − RT95[N_q + 1]; probing one size larger guards against
         # the latency of the batch after one more arrival (paper eq. 1).
-        est = self.monitor.upstream_percentile(len(self._queue) + 1, now)
+        est = self.monitor.upstream_percentile(self.queue.queue_len + 1, now)
         dto = self.config.sla.slo_target - est - self.config.dispatch_overhead
-        frt = now - (self._first_arrival if self._first_arrival is not None else now)
-        to = dto - frt
+        to = dto - self.queue.frt(now)
         if to <= 0:
             # Negative timeout: the queue is already at risk → dispatch now.
-            self._dispatch(now, cause="timeout")
+            self.queue._dispatch(now, cause="timeout")
         else:
-            self.next_deadline = now + to
+            self.queue.next_deadline = now + to
 
     def on_timer(self, now: float) -> None:
         """Fire the dispatch timeout if due (lines 21–24 of Algorithm 1)."""
-        if self.next_deadline is None or now + 1e-12 < self.next_deadline:
+        if self.queue.next_deadline is None or now + 1e-12 < self.queue.next_deadline:
             return
-        if self._queue:
-            self._dispatch(now, cause="timeout")
+        if self.queue.queue_len:
+            self.queue._dispatch(now, cause="timeout")
         else:  # stale timer
-            self.next_deadline = None
+            self.queue.next_deadline = None
 
     def flush(self, now: float) -> None:
         """Dispatch whatever is queued (shutdown / checkpoint barrier)."""
-        if self._queue:
-            self._dispatch(now, cause="flush")
-
-    # ------------------------------------------------------------- internals
-    def _dispatch(self, now: float, cause: str) -> None:
-        batch = Batch(requests=self._queue, dispatch_time=now, cause=cause)
-        if self.config.bucketing is not None:
-            batch.bucket_size = bucket_of(batch.size, self.config.bucketing)
-        for r in batch.requests:
-            r.dispatch_time = now
-        self._queue = []
-        self._first_arrival = None
-        self.next_deadline = None
-        self.dispatched_batches += 1
-        self.dispatched_requests += batch.size
-        self.monitor.record_dispatch(batch.size, cause)
-        self.dispatch_fn(batch)
+        if self.queue.queue_len:
+            self.queue._dispatch(now, cause="flush")
 
     # ------------------------------------------------------ fault tolerance
     def snapshot(self) -> dict:
-        return {
-            "queue": list(self._queue),
-            "first_arrival": self._first_arrival,
-            "next_deadline": self.next_deadline,
-            "dispatched_batches": self.dispatched_batches,
-            "dispatched_requests": self.dispatched_requests,
-        }
+        return self.queue.snapshot()
 
     def restore(self, state: dict) -> None:
-        self._queue = list(state["queue"])
-        self._first_arrival = state["first_arrival"]
-        self.next_deadline = state["next_deadline"]
-        self.dispatched_batches = state["dispatched_batches"]
-        self.dispatched_requests = state["dispatched_requests"]
+        self.queue.restore(state)

@@ -1,0 +1,9 @@
+"""Pallas API compatibility across jax versions.
+
+``pltpu.TPUCompilerParams`` was renamed to ``pltpu.CompilerParams`` in
+newer jax releases; the kernels import the name from here so they run on
+both.
+"""
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 NEG_INF = -1e30
 
 
@@ -103,7 +105,7 @@ def ssd_scan_bhsd(x, dt, a, b, c, *, chunk: int = 128, interpret: bool = True):
         out_specs=pl.BlockSpec((1, chunk, p), lambda bh_, ci: (bh_, ci, 0)),
         out_shape=jax.ShapeDtypeStruct((bh, nc * chunk, p), x.dtype),
         scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(x, dt, a.astype(jnp.float32), b, c)

@@ -23,6 +23,22 @@ import jax.numpy as jnp
 
 from repro.models.layers import GATED_ACTIVATIONS, activation_fn, dense_init
 
+# jax.shard_map landed after 0.4.x (older releases ship it under
+# jax.experimental.shard_map), and the check_rep→check_vma kwarg rename
+# happened in a separate release — so detect the kwarg on whichever
+# function exists rather than keying one off the other.
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+else:  # pragma: no cover - exercised only on older jax
+    from jax.experimental.shard_map import shard_map as _shard_map
+import inspect as _inspect
+
+_SHARD_MAP_KW = (
+    {"check_vma": False}
+    if "check_vma" in _inspect.signature(_shard_map).parameters
+    else {"check_rep": False}
+)
+
 
 def init_moe(key, d_model: int, num_experts: int, expert_d_ff: int,
              activation: str, dtype, router_dtype=jnp.float32) -> dict:
@@ -241,9 +257,9 @@ def _moe_shard_map(p, x, *, mesh, dp_axes, top_k, capacity_factor,
 
     in_specs = (P(dp, None), P(None, None), wi_spec, wo_spec)
     out_specs = (P(dp, None), P())
-    y, aux = jax.shard_map(
+    y, aux = _shard_map(
         local_fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-        check_vma=False)(xf, p["router"], p["wi"], p["wo"])
+        **_SHARD_MAP_KW)(xf, p["router"], p["wi"], p["wo"])
     return y.reshape(b, s, d).astype(x.dtype), aux
 
 

@@ -48,6 +48,15 @@ class LatencyModel:
         noise = rng.lognormal(mean=-sigma2 / 2.0, sigma=math.sqrt(sigma2))
         return s * noise
 
+    # Batch-aware hooks: the platform calls these so multi-model latency
+    # models (one shared container fleet serving several endpoints) can
+    # route on the batch's endpoint stamp; the default ignores it.
+    def mean_batch(self, batch) -> float:
+        return self.mean(batch.effective_size)
+
+    def sample_batch(self, batch, rng: np.random.Generator) -> float:
+        return self.sample(batch.effective_size, rng)
+
     def percentile(self, batch_size: int, q: float) -> float:
         """Analytic percentile of the noisy model (for oracle baselines)."""
         s = self.mean(batch_size)
@@ -129,6 +138,48 @@ class MeasuredLatency(LatencyModel):
         y0, y1 = ys[i - 1], ys[i]
         t = (batch_size - x0) / (x1 - x0)
         return y0 + t * (y1 - y0)
+
+
+class EndpointRoutedLatency(LatencyModel):
+    """Multi-model service times for a *shared* container fleet.
+
+    Maps each batch's ``endpoint`` stamp (set by the
+    :class:`~repro.core.frontend.ProxyFrontend`) to that endpoint's own
+    latency model — one Knative service hosting several models. Size-only
+    queries (``mean``/``sample``) fall back to the slowest member model,
+    which keeps hedging and capacity estimates conservative.
+    """
+
+    name = "endpoint-routed"
+    noise_cv = 0.0  # member models carry their own noise
+
+    def __init__(self, models: Dict[str, LatencyModel]) -> None:
+        if not models:
+            raise ValueError("EndpointRoutedLatency needs at least one model")
+        self.models = dict(models)
+
+    def _model_for(self, batch) -> LatencyModel:
+        if batch.endpoint is None:
+            raise KeyError("batch has no endpoint stamp; route it through a "
+                           "ProxyFrontend before a shared platform")
+        try:
+            return self.models[batch.endpoint]
+        except KeyError:
+            raise KeyError(f"no latency model for endpoint {batch.endpoint!r}; "
+                           f"registered: {sorted(self.models)}") from None
+
+    def mean(self, batch_size: int) -> float:
+        return max(m.mean(batch_size) for m in self.models.values())
+
+    def sample(self, batch_size: int, rng: np.random.Generator) -> float:
+        worst = max(self.models.values(), key=lambda m: m.mean(batch_size))
+        return worst.sample(batch_size, rng)
+
+    def mean_batch(self, batch) -> float:
+        return self._model_for(batch).mean(batch.effective_size)
+
+    def sample_batch(self, batch, rng: np.random.Generator) -> float:
+        return self._model_for(batch).sample(batch.effective_size, rng)
 
 
 # --------------------------------------------------------------------------

@@ -162,6 +162,15 @@ class ServerlessPlatform:
             self._scale_to(max(1, self.config.min_scale), now)
         self._try_assign(now)
 
+    @property
+    def billable_count(self) -> int:
+        """Containers currently billed (provisioned or draining)."""
+        return self._billable_count()
+
+    def ready_count(self, now: float) -> int:
+        """Containers ready to accept work at ``now``."""
+        return self._ready_count(now)
+
     # ------------------------------------------------------------- internals
     def _provisioned_count(self) -> int:
         return sum(1 for c in self.containers if not c.terminated and not c.draining)
@@ -227,7 +236,7 @@ class ServerlessPlatform:
         cfg = self.config
         c.inflight += 1
         item.attempts += 1
-        service = self.latency.sample(item.batch.effective_size, self.rng)
+        service = self.latency.sample_batch(item.batch, self.rng)
         if cfg.ps_slowdown > 0 and c.inflight > 1:
             service *= 1.0 + cfg.ps_slowdown * (c.inflight - 1)
         if cfg.straggler_prob > 0 and self.rng.random() < cfg.straggler_prob:
@@ -240,7 +249,7 @@ class ServerlessPlatform:
         else:
             self.events.push(now + service, lambda t, c=c, item=item: self._complete(c, item, t))
             if cfg.hedge_factor > 0:
-                est = self.latency.mean(item.batch.effective_size)
+                est = self.latency.mean_batch(item.batch)
                 self.events.push(
                     now + cfg.hedge_factor * est,
                     lambda t, item=item: self._maybe_hedge(item, t),

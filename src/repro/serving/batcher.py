@@ -1,4 +1,4 @@
-"""Glue between MLProxy and the JAX engine.
+"""Glue between the MLProxy control plane and the JAX engine.
 
 ``EngineBackedLatency`` turns the real engine into a
 :class:`~repro.serverless.latency.LatencyModel`: ``sample(batch_size)``
@@ -6,15 +6,24 @@ executes a real bucketed prefill+decode on this host and returns measured
 wall seconds. Plugging it into the Simulator gives the hybrid loop used by
 ``examples/serve_engine.py``: simulated arrivals + real MLProxy decisions +
 real JAX execution (service times measured, not modeled).
+
+``ReplicaPoolTarget`` is the real-serving dispatch target: it adapts a
+:class:`~repro.serving.engine.ReplicaPool` to the ``dispatch_fn(batch)``
+contract of the shared :class:`~repro.core.batch_queue.BatchQueue`, so a
+:class:`~repro.core.frontend.ProxyFrontend` can give each endpoint its own
+pool (one model per endpoint) while every policy dispatches through the
+same code path.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+import time
+from typing import Callable, Dict, Optional
 
 import numpy as np
 
+from repro.core.request import Batch
 from repro.serverless.latency import LatencyModel
-from repro.serving.engine import InferenceEngine, next_bucket
+from repro.serving.engine import InferenceEngine, ReplicaPool, next_bucket
 
 
 class EngineBackedLatency(LatencyModel):
@@ -50,3 +59,51 @@ class EngineBackedLatency(LatencyModel):
         prev = self._ema.get(bucket)
         self._ema[bucket] = dt if prev is None else 0.8 * prev + 0.2 * dt
         return dt
+
+
+class ReplicaPoolTarget:
+    """Per-endpoint dispatch target backed by a :class:`ReplicaPool`.
+
+    Callable with the ``dispatch_fn(batch)`` signature the shared
+    ``BatchQueue`` expects: builds the prompt array from each request's
+    payload (token-id arrays; missing payloads become zero prompts), runs
+    the pool with round-robin failover, and reports the measured wall-clock
+    back through ``on_done(batch, latency_s, now)`` — typically the owning
+    policy's ``on_response`` — closing the monitor feedback loop on real
+    hardware.
+    """
+
+    def __init__(self, pool: ReplicaPool, prompt_len: int = 16,
+                 gen_len: Optional[int] = None,
+                 on_done: Optional[Callable[[Batch, float, float], None]] = None,
+                 clock: Callable[[], float] = time.monotonic) -> None:
+        self.pool = pool
+        self.prompt_len = prompt_len
+        self.gen_len = gen_len
+        self.on_done = on_done
+        self.clock = clock
+        self.batches = 0
+        self.requests = 0
+
+    def _prompts(self, batch: Batch) -> np.ndarray:
+        prompts = np.zeros((batch.size, self.prompt_len), np.int32)
+        for i, req in enumerate(batch.requests):
+            if req.payload is None:
+                continue
+            # keep the LAST prompt_len tokens: with left-padding the engine
+            # continues from the trailing context, not the prompt's head
+            toks = np.asarray(req.payload, np.int32).ravel()[-self.prompt_len:]
+            prompts[i, self.prompt_len - len(toks):] = toks  # left-pad
+        return prompts
+
+    def __call__(self, batch: Batch):
+        t0 = self.clock()
+        out, timing = self.pool.generate(self._prompts(batch), gen_len=self.gen_len)
+        latency = self.clock() - t0
+        self.batches += 1
+        self.requests += batch.size
+        for req, tokens in zip(batch.requests, out):
+            req.payload = tokens
+        if self.on_done is not None:
+            self.on_done(batch, latency, t0 + latency)
+        return out, timing

@@ -149,13 +149,24 @@ class ReplicaPool:
         self.scale_to(n_replicas)
 
     def scale_to(self, n: int) -> None:
+        """Grow or shrink the pool to exactly ``n`` replicas.
+
+        Shrinking removes the tail replicas outright (freeing their compile
+        caches) instead of merely marking them unhealthy — otherwise a later
+        scale-up appends fresh replicas while the dead ones keep consuming
+        round-robin slots and ``n_healthy`` drifts from the pool size.
+        """
+        if n < 0:
+            raise ValueError(f"replica count must be >= 0, got {n}")
+        if n < len(self.replicas):
+            del self.replicas[n:]
+            del self.healthy[n:]
+            self._rr = self._rr % len(self.replicas) if self.replicas else 0
         while len(self.replicas) < n:
             eng = InferenceEngine(self.cfg, self.engine_cfg,
                                   params=self._template.params)
             self.replicas.append(eng)
             self.healthy.append(True)
-        for i in range(n, len(self.replicas)):
-            self.healthy[i] = False
 
     @property
     def n_healthy(self) -> int:
@@ -169,6 +180,8 @@ class ReplicaPool:
 
     def generate(self, prompts: np.ndarray, gen_len: Optional[int] = None):
         """Round-robin dispatch with failover (at-least-once)."""
+        if not self.replicas:
+            raise RuntimeError("no healthy replicas")
         attempts = 0
         while attempts <= len(self.replicas):
             self._rr = (self._rr + 1) % max(len(self.replicas), 1)

@@ -9,6 +9,17 @@ Outputs match the paper's reporting: average container count (cost),
 SLO-violation percentage, average batch size (Table 3), the CCDF of
 response times (Fig. 6) and time series of P95 / containers / miss rate /
 Max_BS (Fig. 7).
+
+Two drivers share the event machinery:
+
+* :class:`Simulator` — the paper's single-endpoint pipeline (one policy,
+  one platform).
+* :class:`MultiEndpointSimulator` — beyond paper: drives a
+  :class:`~repro.core.frontend.ProxyFrontend` with per-endpoint arrival
+  processes, per-endpoint SLAs/policies, and per-endpoint *or shared*
+  :class:`~repro.serverless.platform.ServerlessPlatform` fleets (shared
+  fleets use :class:`~repro.serverless.latency.EndpointRoutedLatency` to
+  give each endpoint its own service-time model).
 """
 from __future__ import annotations
 
@@ -19,10 +30,10 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.core import ProxyConfig, SLAConfig
+from repro.core import ProxyFrontend, ProxyConfig, SLAConfig
 from repro.core.policies import make_policy
 from repro.core.request import Batch, Request
-from repro.serverless.latency import LatencyModel
+from repro.serverless.latency import EndpointRoutedLatency, LatencyModel
 from repro.serverless.platform import PlatformConfig, ServerlessPlatform
 from repro.simulation.arrivals import ArrivalProcess
 from repro.simulation.events import EventQueue
@@ -46,7 +57,66 @@ class SimResult:
         return lat, ccdf
 
 
-class Simulator:
+class _EventLoopDriver:
+    """Timer wiring + run/flush/drain loop shared by both simulators.
+
+    Subclasses provide ``events``/``now``/``duration``/``drain_grace`` and
+    :meth:`_control` returning the Policy-like front object
+    (``next_event_time``/``on_timer``/``flush``).
+    """
+
+    events: EventQueue
+    now: float
+    duration: float
+    drain_grace: float
+    _timer_scheduled_at: Optional[float]
+
+    def _control(self):
+        raise NotImplementedError
+
+    def _on_policy_timer(self, now: float) -> None:
+        self._timer_scheduled_at = None
+        self._control().on_timer(now)
+        self._reschedule_policy_timer(min_time=now + 1e-6)
+
+    def _reschedule_policy_timer(self, min_time: float = 0.0) -> None:
+        t = self._control().next_event_time(self.now)
+        if t is None:
+            return
+        # min_time guards against zero-progress loops when a policy keeps
+        # requesting the instant a timer just served
+        t = max(t, self.now, min_time)
+        if self._timer_scheduled_at is None or t < self._timer_scheduled_at - 1e-12:
+            self._timer_scheduled_at = t
+            self.events.push(t, self._on_policy_timer)
+
+    def _drive(self) -> float:
+        """Run events through duration + drain grace, flushing queued
+        batches at end-of-run; returns the hard-stop time."""
+        hard_stop = self.duration + self.drain_grace
+        flushed = False
+        while self.events:
+            t, fn = self.events.pop()
+            if t > hard_stop:
+                break
+            self.now = t
+            if not flushed and t >= self.duration:
+                self._control().flush(self.now)
+                flushed = True
+            fn(t)
+        if not flushed:
+            self._control().flush(self.now)
+        # drain remaining completions
+        while self.events:
+            t, fn = self.events.pop()
+            if t > hard_stop:
+                break
+            self.now = t
+            fn(t)
+        return hard_stop
+
+
+class Simulator(_EventLoopDriver):
     def __init__(
         self,
         *,
@@ -110,21 +180,8 @@ class Simulator:
             self.events.push(nxt, self._on_arrival)
         self._reschedule_policy_timer()
 
-    def _on_policy_timer(self, now: float) -> None:
-        self._timer_scheduled_at = None
-        self.policy.on_timer(now)
-        self._reschedule_policy_timer(min_time=now + 1e-6)
-
-    def _reschedule_policy_timer(self, min_time: float = 0.0) -> None:
-        t = self.policy.next_event_time(self.now)
-        if t is None:
-            return
-        # min_time guards against zero-progress loops when a policy keeps
-        # requesting the instant a timer just served
-        t = max(t, self.now, min_time)
-        if self._timer_scheduled_at is None or t < self._timer_scheduled_at - 1e-12:
-            self._timer_scheduled_at = t
-            self.events.push(t, self._on_policy_timer)
+    def _control(self):
+        return self.policy
 
     # --------------------------------------------------------------- metrics
     def _on_sample(self, now: float) -> None:
@@ -143,8 +200,8 @@ class Simulator:
                 "t": now,
                 "p95": p95,
                 "miss_rate": miss,
-                "containers": self.platform._billable_count(),
-                "ready": self.platform._ready_count(now),
+                "containers": self.platform.billable_count,
+                "ready": self.platform.ready_count(now),
                 "queued_batches": len(self.platform.pending),
                 "max_bs": float(self.policy.max_bs),
                 "proxy_queue": self.policy.stats(now).get("queue_len", 0),
@@ -163,26 +220,7 @@ class Simulator:
         if self.warmup > 0:
             self.events.push(self.warmup, self.platform.reset_billing)
 
-        hard_stop = self.duration + self.drain_grace
-        flushed = False
-        while self.events:
-            t, fn = self.events.pop()
-            if t > hard_stop:
-                break
-            self.now = t
-            if not flushed and t >= self.duration:
-                self.policy.flush(self.now)
-                flushed = True
-            fn(t)
-        if not flushed:
-            self.policy.flush(self.now)
-        # drain remaining completions
-        while self.events:
-            t, fn = self.events.pop()
-            if t > hard_stop:
-                break
-            self.now = t
-            fn(t)
+        hard_stop = self._drive()
         self.platform.finalize(min(self.now, hard_stop))
         return self._result()
 
@@ -225,3 +263,197 @@ class Simulator:
 def run_simulation(**kwargs) -> SimResult:
     """Convenience wrapper: ``run_simulation(policy=..., sla=..., ...)``."""
     return Simulator(**kwargs).run()
+
+
+# ---------------------------------------------------------------------------
+# Multi-endpoint scenario layer (beyond paper)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class EndpointSpec:
+    """Everything one endpoint needs in a multi-endpoint scenario.
+
+    ``platform`` names a shared-fleet group: endpoints with the same key
+    run on one :class:`ServerlessPlatform` (multi-model serving); ``None``
+    gives the endpoint a dedicated fleet. ``platform_config`` is taken from
+    the first group member that sets one.
+    """
+
+    policy: str
+    sla: SLAConfig
+    workload: LatencyModel
+    arrivals: ArrivalProcess
+    policy_kwargs: Optional[dict] = None
+    platform: Optional[str] = None
+    platform_config: Optional[PlatformConfig] = None
+
+
+@dataclasses.dataclass
+class MultiSimResult:
+    summary: Dict[str, float]                    # fleet-level aggregate
+    endpoints: Dict[str, Dict[str, float]]       # per-endpoint summaries
+    e2e_latencies: Dict[str, np.ndarray]         # per-endpoint latencies
+    frontend_stats: dict
+
+
+class MultiEndpointSimulator(_EventLoopDriver):
+    """Drives one :class:`ProxyFrontend` over N endpoints in one event loop.
+
+    Each endpoint has its own arrival process, SLA, policy, and (dedicated
+    or shared) platform; the frontend merges every policy's timer into one
+    clock, exactly as a single proxy process would in production.
+    """
+
+    def __init__(
+        self,
+        endpoints: Dict[str, EndpointSpec],
+        *,
+        duration: float = 600.0,
+        warmup: float = 0.0,
+        drain_grace: float = 120.0,
+        seed: int = 0,
+    ) -> None:
+        if not endpoints:
+            raise ValueError("need at least one endpoint")
+        self.specs = dict(endpoints)
+        self.duration = duration
+        self.warmup = warmup
+        self.drain_grace = drain_grace
+        self.rng = np.random.default_rng(seed)
+        self.events = EventQueue()
+        self.now = 0.0
+
+        # platform groups: shared key → one fleet; None → dedicated fleet
+        groups: Dict[str, List[str]] = {}
+        for name, spec in self.specs.items():
+            key = spec.platform if spec.platform is not None else f"dedicated:{name}"
+            groups.setdefault(key, []).append(name)
+        self.platforms: Dict[str, ServerlessPlatform] = {}
+        self._platform_of: Dict[str, str] = {}
+        for key, members in groups.items():
+            if len(members) == 1:
+                latency: LatencyModel = self.specs[members[0]].workload
+            else:
+                latency = EndpointRoutedLatency(
+                    {m: self.specs[m].workload for m in members}
+                )
+            pc = next(
+                (self.specs[m].platform_config for m in members
+                 if self.specs[m].platform_config is not None),
+                None,
+            )
+            self.platforms[key] = ServerlessPlatform(
+                config=pc or PlatformConfig(),
+                latency_model=latency,
+                events=self.events,
+                rng=self.rng,
+                on_batch_done=self._on_batch_done,
+            )
+            for m in members:
+                self._platform_of[m] = key
+
+        self.frontend = ProxyFrontend()
+        for name, spec in self.specs.items():
+            plat = self.platforms[self._platform_of[name]]
+            self.frontend.add_endpoint(
+                name,
+                sla=spec.sla,
+                dispatch_fn=lambda batch, _p=plat: _p.submit(batch, self.now),
+                policy=spec.policy,
+                policy_kwargs=spec.policy_kwargs,
+            )
+
+        self.completed: Dict[str, List[Request]] = {n: [] for n in self.specs}
+        self._timer_scheduled_at: Optional[float] = None
+
+    # --------------------------------------------------------------- wiring
+    def _control(self):
+        return self.frontend
+
+    def _on_batch_done(self, batch: Batch, upstream_latency: float, now: float) -> None:
+        self.frontend.on_response(batch, upstream_latency, now)
+        for r in batch.requests:
+            self.completed[batch.endpoint].append(r)
+        self._reschedule_policy_timer()
+
+    def _on_arrival(self, name: str, now: float) -> None:
+        req = Request(arrival_time=now, endpoint=name)
+        self.frontend.on_request(req, now)
+        nxt = self.specs[name].arrivals.next_arrival(now, self.rng)
+        if nxt is not None:
+            self.events.push(nxt, lambda t, _n=name: self._on_arrival(_n, t))
+        self._reschedule_policy_timer()
+
+    # ------------------------------------------------------------------ run
+    def run(self) -> MultiSimResult:
+        for name, spec in self.specs.items():
+            first = spec.arrivals.next_arrival(0.0, self.rng)
+            if first is not None:
+                self.events.push(first, lambda t, _n=name: self._on_arrival(_n, t))
+        for plat in self.platforms.values():
+            plat.start(0.0)
+            if self.warmup > 0:
+                self.events.push(self.warmup, plat.reset_billing)
+
+        hard_stop = self._drive()
+        for plat in self.platforms.values():
+            plat.finalize(min(self.now, hard_stop))
+        return self._result()
+
+    def _result(self) -> MultiSimResult:
+        billing_window = max(self.now, self.duration) - self.warmup
+        fstats = self.frontend.stats(self.now)
+        endpoints: Dict[str, Dict[str, float]] = {}
+        latencies: Dict[str, np.ndarray] = {}
+        for name, spec in self.specs.items():
+            done = [r for r in self.completed[name] if r.arrival_time >= self.warmup]
+            e2e = np.asarray([r.e2e_latency for r in done], dtype=np.float64)
+            latencies[name] = e2e
+            viol = float(np.mean(e2e > spec.sla.slo_target)) if len(e2e) else 0.0
+            ep_stats = fstats["endpoints"][name]
+            endpoints[name] = {
+                "completed": float(len(e2e)),
+                "slo_target": spec.sla.slo_target,
+                "violation_rate": viol,
+                "violation_pct": 100.0 * viol,
+                "avg_batch_size": ep_stats.get("avg_batch_size", 0.0),
+                "max_bs": float(ep_stats.get("max_bs", 1)),
+                "p50": float(np.percentile(e2e, 50)) if len(e2e) else math.nan,
+                "p95": float(np.percentile(e2e, 95)) if len(e2e) else math.nan,
+                "mean_latency": float(e2e.mean()) if len(e2e) else math.nan,
+            }
+        total_containers = sum(
+            p.avg_containers(billing_window) for p in self.platforms.values()
+        )
+        all_completed = sum(s["completed"] for s in endpoints.values())
+        # fleet violation rate weighted by each endpoint's completed count
+        agg_viol = (
+            sum(s["violation_rate"] * s["completed"] for s in endpoints.values())
+            / all_completed
+            if all_completed
+            else 0.0
+        )
+        summary = {
+            "completed": all_completed,
+            "violation_rate": agg_viol,
+            "violation_pct": 100.0 * agg_viol,
+            "avg_containers": total_containers,
+            "peak_containers": float(
+                sum(p.peak_containers for p in self.platforms.values())
+            ),
+            "cold_starts": float(sum(p.cold_starts for p in self.platforms.values())),
+            "n_platforms": float(len(self.platforms)),
+            "n_endpoints": float(len(self.specs)),
+        }
+        return MultiSimResult(
+            summary=summary,
+            endpoints=endpoints,
+            e2e_latencies=latencies,
+            frontend_stats=fstats,
+        )
+
+
+def run_multi_simulation(endpoints: Dict[str, EndpointSpec], **kwargs) -> MultiSimResult:
+    """Convenience wrapper: ``run_multi_simulation({"a": EndpointSpec(...)})``."""
+    return MultiEndpointSimulator(endpoints, **kwargs).run()

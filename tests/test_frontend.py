@@ -1,0 +1,314 @@
+"""Tests for the three refactored control-plane layers.
+
+* Queue layer — every policy (MLProxy + four baselines) conforms to the
+  :class:`~repro.core.batch_queue.Policy` protocol, dispatches through the
+  one shared :class:`~repro.core.batch_queue.BatchQueue`, and survives a
+  snapshot/restore round-trip.
+* Routing layer — :class:`~repro.core.frontend.ProxyFrontend` routes by
+  endpoint key, stamps batches, merges timers, and two endpoints with
+  different SLOs converge to different ``max_bs``.
+* Scenario layer — :class:`MultiEndpointSimulator` runs N endpoints with
+  per-endpoint arrivals over dedicated or shared platforms.
+"""
+import pytest
+
+from repro.core import (
+    BatchQueue,
+    MLProxy,
+    MonitorConfig,
+    OptimizerConfig,
+    Policy,
+    ProxyFrontend,
+    Request,
+    SLAConfig,
+)
+from repro.core.policies import make_policy
+from repro.serverless.latency import EndpointRoutedLatency, get_workload
+from repro.serverless.platform import PlatformConfig
+from repro.simulation.arrivals import PoissonProcess
+from repro.simulation.simulator import EndpointSpec, run_multi_simulation
+
+SLA = SLAConfig(slo_target=1.0)
+
+POLICY_SPECS = [
+    ("mlproxy", {"monitor": MonitorConfig(min_samples=1)}),
+    ("passthrough", {}),
+    ("static", {"batch_size": 4, "timeout": 0.2}),
+    ("clipper", {}),
+    # step model leaves real timeout slack (0.9 − 0.3) after picking bs=4
+    ("oracle", {"latency_model": lambda bs: 0.3 if bs <= 4 else 10.0}),
+]
+
+
+def _make(name, kwargs, sink):
+    return make_policy(name, SLA, sink.append, **kwargs)
+
+
+# ------------------------------------------------------------ protocol layer
+@pytest.mark.parametrize("name,kwargs", POLICY_SPECS, ids=[p[0] for p in POLICY_SPECS])
+def test_policy_protocol_conformance(name, kwargs):
+    pol = _make(name, kwargs, [])
+    assert isinstance(pol, Policy)
+    assert isinstance(pol.max_bs, int)
+
+
+@pytest.mark.parametrize("name,kwargs", POLICY_SPECS, ids=[p[0] for p in POLICY_SPECS])
+def test_policy_dispatch_causes_through_shared_queue(name, kwargs):
+    """Every policy dispatches via BatchQueue: full-batch, timeout, flush."""
+    out = []
+    pol = _make(name, kwargs, out)
+
+    # cause="full": saturate the current target batch size in one instant
+    bs = max(1, pol.max_bs)
+    for _ in range(bs):
+        pol.on_request(Request(arrival_time=0.0), now=0.0)
+    assert out and out[0].cause in ("full", "timeout")
+    assert out[0].size == bs
+
+    # cause="timeout"/"flush": a lone request must eventually leave
+    out.clear()
+    pol.on_request(Request(arrival_time=10.0), now=10.0)
+    if not out:  # not dispatched synchronously → a deadline must exist
+        t = pol.next_event_time(10.0)
+        assert t is not None and t >= 10.0
+        pol.on_timer(t)
+    if not out:  # e.g. clipper's AIMD tick fired first — flush drains it
+        pol.flush(now=50.0)
+        assert out and out[-1].cause == "flush"
+    total = sum(b.size for b in out)
+    assert total == 1
+
+
+@pytest.mark.parametrize("name,kwargs", POLICY_SPECS, ids=[p[0] for p in POLICY_SPECS])
+def test_policy_snapshot_restore_roundtrip(name, kwargs):
+    """Queued requests and counters survive restore into a fresh policy."""
+    out = []
+    pol = _make(name, kwargs, out)
+    # complete one batch so monitors/counters hold state
+    pol.on_request(Request(arrival_time=0.0), now=0.0)
+    pol.flush(now=0.1)
+    assert out
+    pol.on_response(out[0], upstream_latency=0.05, now=0.2)
+    # leave one request queued across the snapshot (passthrough never queues)
+    queued_before = 0
+    if pol.max_bs > 1:
+        pol.on_request(Request(arrival_time=1.0), now=1.0)
+        queued_before = pol.stats(1.0)["queue_len"]
+    state = pol.snapshot()
+
+    out2 = []
+    pol2 = _make(name, kwargs, out2)
+    pol2.restore(state)
+    s1, s2 = pol.stats(1.0), pol2.stats(1.0)
+    assert s2["dispatched_batches"] == s1["dispatched_batches"]
+    assert s2["dispatched_requests"] == s1["dispatched_requests"]
+    assert s2["queue_len"] == queued_before
+    assert pol2.max_bs == pol.max_bs
+    # the restored queue drains through the restored policy's dispatcher
+    pol2.flush(now=2.0)
+    assert sum(b.size for b in out2) == queued_before
+
+
+def test_batch_queue_is_the_single_dispatcher():
+    q = BatchQueue(dispatch_fn=(out := []).append)
+    q.append(Request(arrival_time=0.0), now=0.0)
+    q.append(Request(arrival_time=0.3), now=0.3)
+    assert q.first_arrival == 0.0
+    assert q.frt(1.0) == pytest.approx(1.0)
+    batch = q._dispatch(1.0, "flush")
+    assert batch.size == 2 and out == [batch]
+    assert q.queue_len == 0 and q.first_arrival is None
+    assert (q.dispatched_batches, q.dispatched_requests) == (1, 2)
+    assert q.avg_batch_size == pytest.approx(2.0)
+
+
+def test_static_policy_timeout_anchors_on_first_arrival_at_t0():
+    """first_arrival == 0.0 is falsy; the deadline must still anchor there
+    instead of re-anchoring on every later arrival (which would starve the
+    oldest request under a steady trickle)."""
+    out = []
+    pol = make_policy("static", SLA, out.append, batch_size=8, timeout=0.1)
+    pol.on_request(Request(arrival_time=0.0), now=0.0)
+    assert pol.next_deadline == pytest.approx(0.1)
+    pol.on_request(Request(arrival_time=0.05), now=0.05)
+    assert pol.next_deadline == pytest.approx(0.1)  # not 0.15
+
+
+def test_batching_policy_restores_pre_refactor_snapshot():
+    """Checkpoints written before the BatchQueue refactor (flat keys +
+    `counts` tuple) still restore — the warm-restart path in launch/serve.py
+    loads JSON snapshots from older runs."""
+    out = []
+    pol = make_policy("static", SLA, out.append, batch_size=8, timeout=0.1)
+    legacy = {
+        "monitor": pol.monitor.snapshot(),
+        "queue": [Request(arrival_time=1.0)],
+        "first_arrival": 1.0,
+        "next_deadline": 1.1,
+        "counts": (3, 12),
+    }
+    pol.restore(legacy)
+    assert pol.dispatched_batches == 3 and pol.dispatched_requests == 12
+    assert pol.next_deadline == 1.1
+    pol.flush(2.0)
+    assert out[-1].size == 1
+
+
+def test_batch_queue_bucketing():
+    q = BatchQueue(dispatch_fn=(out := []).append, bucketing="pow2")
+    for i in range(5):
+        q.append(Request(arrival_time=0.0), now=0.0)
+    q._dispatch(0.0, "full")
+    assert out[0].size == 5 and out[0].bucket_size == 8
+
+
+# ------------------------------------------------------------- routing layer
+def _frontend_two_endpoints(sinks):
+    # initial Max_BS > 1 so arrivals queue instead of dispatching instantly
+    kw = {
+        "monitor": MonitorConfig(min_samples=1),
+        "optimizer": OptimizerConfig(initial_max_bs=8),
+    }
+    fe = ProxyFrontend()
+    fe.add_endpoint("tight", sla=SLAConfig(slo_target=0.3),
+                    dispatch_fn=sinks["tight"].append, policy_kwargs=dict(kw))
+    fe.add_endpoint("loose", sla=SLAConfig(slo_target=5.0),
+                    dispatch_fn=sinks["loose"].append, policy_kwargs=dict(kw))
+    return fe
+
+
+def test_frontend_routes_and_stamps_batches():
+    sinks = {"tight": [], "loose": []}
+    fe = _frontend_two_endpoints(sinks)
+    fe.on_request(Request(arrival_time=0.0, endpoint="tight"), now=0.0)
+    fe.on_request(Request(arrival_time=0.0), now=0.0, endpoint="loose")
+    fe.flush(now=0.1)
+    assert len(sinks["tight"]) == 1 and len(sinks["loose"]) == 1
+    assert sinks["tight"][0].endpoint == "tight"
+    assert sinks["loose"][0].endpoint == "loose"
+    # responses route back by the batch stamp
+    fe.on_response(sinks["tight"][0], upstream_latency=0.05, now=0.2)
+    stats = fe.stats(0.2)
+    assert stats["endpoints"]["tight"]["dispatched_requests"] == 1
+    assert stats["aggregate"]["dispatched_requests"] == 2
+
+
+def test_frontend_rejects_unroutable_requests():
+    fe = _frontend_two_endpoints({"tight": [], "loose": []})
+    with pytest.raises(KeyError):
+        fe.on_request(Request(arrival_time=0.0), now=0.0)  # ambiguous
+    with pytest.raises(KeyError):
+        fe.on_request(Request(arrival_time=0.0, endpoint="nope"), now=0.0)
+    with pytest.raises(ValueError):
+        fe.add_endpoint("tight", sla=SLA, dispatch_fn=lambda b: None)
+
+
+def test_frontend_merges_timers_across_endpoints():
+    sinks = {"tight": [], "loose": []}
+    fe = _frontend_two_endpoints(sinks)
+    fe.on_request(Request(arrival_time=0.0, endpoint="tight"), now=0.0)
+    fe.on_request(Request(arrival_time=0.0, endpoint="loose"), now=0.0)
+    t_tight = fe.endpoint("tight").policy.next_event_time(0.0)
+    t_loose = fe.endpoint("loose").policy.next_event_time(0.0)
+    assert fe.next_event_time(0.0) == min(t_tight, t_loose) == t_tight
+    # firing the merged timer dispatches only the due endpoint
+    fe.on_timer(t_tight)
+    assert len(sinks["tight"]) == 1 and len(sinks["loose"]) == 0
+
+
+def test_frontend_endpoints_converge_to_different_max_bs():
+    """Two SLO classes behind one frontend: the loose endpoint's AIMD grows
+    Max_BS while the tight endpoint (upstream barely fits its SLO) stays
+    pinned at 1 — per-endpoint SLA awareness through a single proxy."""
+    sinks = {"tight": [], "loose": []}
+    fe = _frontend_two_endpoints(sinks)
+    lat = {"tight": 0.28, "loose": 0.05}  # tight: > 0.8 × 0.3 compliance cut
+    for k in range(12):
+        t = 30.0 * k
+        for name in ("tight", "loose"):
+            fe.on_request(Request(arrival_time=t, endpoint=name), now=t)
+        fe.flush(t + 0.01)
+        for name in ("tight", "loose"):
+            fe.on_response(sinks[name][-1], upstream_latency=lat[name],
+                           now=t + 0.01 + lat[name])
+        fe.on_timer(t + 29.0)  # AIMD interval tick (30 s default)
+    stats = fe.stats(360.0)["endpoints"]
+    assert stats["tight"]["max_bs"] == 1
+    assert stats["loose"]["max_bs"] >= 5
+    assert stats["loose"]["max_bs"] > stats["tight"]["max_bs"]
+
+
+def test_frontend_snapshot_restore_roundtrip():
+    sinks = {"tight": [], "loose": []}
+    fe = _frontend_two_endpoints(sinks)
+    fe.on_request(Request(arrival_time=0.0, endpoint="loose"), now=0.0)
+    fe.flush(0.1)
+    fe.on_response(sinks["loose"][0], upstream_latency=0.05, now=0.2)
+    state = fe.snapshot()
+    fe2 = _frontend_two_endpoints({"tight": [], "loose": []})
+    fe2.restore(state)
+    assert (fe2.stats(0.2)["endpoints"]["loose"]["dispatched_requests"]
+            == fe.stats(0.2)["endpoints"]["loose"]["dispatched_requests"])
+
+
+# ------------------------------------------------------------ scenario layer
+def _two_endpoint_specs(shared):
+    return {
+        "iris": EndpointSpec(
+            policy="mlproxy", sla=SLAConfig(slo_target=0.2),
+            workload=get_workload("sklearn-iris"),
+            arrivals=PoissonProcess(rate=40.0, duration=240.0),
+            platform="fleet" if shared else None,
+            platform_config=PlatformConfig(initial_scale=1),
+        ),
+        "resnet": EndpointSpec(
+            policy="mlproxy", sla=SLAConfig(slo_target=1.5),
+            workload=get_workload("tfserving-resnet"),
+            arrivals=PoissonProcess(rate=8.0, duration=240.0),
+            platform="fleet" if shared else None,
+            platform_config=PlatformConfig(initial_scale=1),
+        ),
+    }
+
+
+def test_multi_sim_dedicated_platforms():
+    res = run_multi_simulation(_two_endpoint_specs(shared=False),
+                               duration=240.0, warmup=60.0, seed=2)
+    assert res.summary["n_platforms"] == 2.0
+    assert set(res.endpoints) == {"iris", "resnet"}
+    for name, s in res.endpoints.items():
+        assert s["completed"] > 100, name
+        assert s["violation_pct"] < 10.0, name
+    # each class is judged against its OWN SLO
+    assert res.endpoints["iris"]["slo_target"] == 0.2
+    assert res.endpoints["resnet"]["slo_target"] == 1.5
+    assert res.summary["avg_containers"] > 0
+
+
+def test_multi_sim_shared_platform_routes_latency_per_endpoint():
+    res = run_multi_simulation(_two_endpoint_specs(shared=True),
+                               duration=240.0, warmup=60.0, seed=2)
+    assert res.summary["n_platforms"] == 1.0
+    for name, s in res.endpoints.items():
+        assert s["completed"] > 100, name
+    # the small model must still be far faster than the big one — i.e. the
+    # shared fleet sampled each endpoint's own latency model
+    assert res.endpoints["iris"]["p50"] < res.endpoints["resnet"]["p50"]
+
+
+def test_multi_sim_deterministic_given_seed():
+    a = run_multi_simulation(_two_endpoint_specs(False), duration=120.0, seed=5)
+    b = run_multi_simulation(_two_endpoint_specs(False), duration=120.0, seed=5)
+    assert a.summary == b.summary
+    assert a.endpoints == b.endpoints
+
+
+def test_routed_latency_requires_endpoint_stamp():
+    from repro.core.request import Batch
+    routed = EndpointRoutedLatency({"a": get_workload("sklearn-iris")})
+    b = Batch(requests=[Request(arrival_time=0.0)], dispatch_time=0.0,
+              cause="full")
+    with pytest.raises(KeyError):
+        routed.mean_batch(b)
+    b.endpoint = "a"
+    assert routed.mean_batch(b) > 0
