@@ -18,7 +18,7 @@ def main() -> None:
     args = p.parse_args()
 
     from benchmarks.common import Timer
-    from benchmarks import (bench_batch_scaling, bench_ccdf,
+    from benchmarks import (bench_batch_scaling, bench_ccdf, bench_chaos,
                             bench_multi_endpoint, bench_policies,
                             bench_proxy_overhead, bench_table3,
                             bench_timeseries)
@@ -43,6 +43,11 @@ def main() -> None:
             bench_multi_endpoint.run,
             lambda rows: min(r["containers_total"] for r in rows
                              if r["policy"] == "mlproxy")),
+        # derived = conservation violations across the whole sweep; any
+        # value other than 0.0 means the platform lost or duplicated work
+        "chaos_scenarios": (
+            bench_chaos.run,
+            lambda rows: sum(r["lost"] + r["duplicates"] for r in rows)),
     }
     print("name,us_per_call,derived")
     for name, (fn, derive) in benches.items():

@@ -1,0 +1,5 @@
+"""Make the repo root importable in tests (experiments/, benchmarks/)."""
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

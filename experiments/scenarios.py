@@ -1,0 +1,236 @@
+"""Named chaos scenarios for the serverless platform's fault path.
+
+Each :class:`ChaosScenario` is a reproducible fault regime — platform
+config (crash probability, stragglers, hedging, scaling knobs), arrival
+shape, workload and SLO — that can be run against any batching policy via
+:func:`run_scenario`. Every run ends by asserting the platform's
+conservation invariant (see
+:meth:`~repro.serverless.platform.ServerlessPlatform.assert_conserved`):
+every submitted batch completes exactly once, nothing lost, nothing
+duplicated, regardless of how many crashes/hedges/drains happened on the
+way.
+
+The five regimes target the failure modes the attempt ledger exists for:
+
+* ``crash-storm`` — frequent container crashes with co-resident batches
+  (``container_concurrency > 1``): the lost-batch path.
+* ``cold-start-storm`` — on/off traffic with slow cold starts and an eager
+  scale-to-zero, so work repeatedly lands on an empty fleet.
+* ``flash-crowd`` — a 10×-in-minutes ramp that drives panic-mode scaling
+  while crashes churn the fleet.
+* ``straggler-heavy`` — heavy-tailed service times with hedged duplicates:
+  the hedge-storm / duplicate-completion path.
+* ``drain-under-load`` — aggressive scale-down under sustained load plus
+  crashes, so draining containers die with work in flight.
+
+``benchmarks/bench_chaos.py`` sweeps these scenarios over every policy and
+reports violation-rate / cost deltas versus the same scenario with fault
+injection disabled.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core import SLAConfig, ms
+from repro.serverless.latency import get_workload
+from repro.serverless.platform import PlatformConfig
+from repro.simulation.arrivals import (
+    ArrivalProcess,
+    PoissonProcess,
+    TraceModulatedPoisson,
+)
+from repro.simulation.simulator import SimResult, Simulator
+from repro.simulation.traces import Trace, synthetic_trace
+
+POLICIES = ("passthrough", "static", "clipper", "oracle", "mlproxy")
+
+
+@dataclasses.dataclass(frozen=True)
+class ChaosScenario:
+    """One named fault regime: platform knobs + arrival shape + workload."""
+
+    name: str
+    description: str
+    platform: PlatformConfig
+    workload: str = "pytorch-fashion-mnist"
+    slo_ms: float = 500.0
+    arrival: str = "trace-wc"  # poisson | trace-wc | ramp | onoff
+    rate: float = 25.0
+    duration: float = 600.0
+    drain_grace: float = 240.0
+    seed: int = 11
+
+    def baseline_platform(self) -> PlatformConfig:
+        """The same scaling regime with fault injection switched off."""
+        return dataclasses.replace(
+            self.platform,
+            failure_prob_per_batch=0.0,
+            straggler_prob=0.0,
+            hedge_factor=0.0,
+        )
+
+
+def _ramp_trace(duration: float, rate: float) -> Trace:
+    """Flash crowd: 10% base load, then a fast ramp to 100% that holds."""
+    times = np.linspace(0.0, duration, 25)
+    fracs = []
+    for t in times[:-1]:
+        x = t / duration
+        if x < 0.4:
+            fracs.append(0.1)
+        elif x < 0.6:
+            fracs.append(0.1 + 0.9 * (x - 0.4) / 0.2)
+        else:
+            fracs.append(1.0)
+    return Trace(times=times, rates=np.asarray(fracs) * rate)
+
+
+def _onoff_trace(duration: float, rate: float, period: float = 120.0,
+                 duty: float = 0.5) -> Trace:
+    """Square-wave traffic: bursts separated by silence (scale-to-zero bait)."""
+    edges = [0.0]
+    rates = []
+    t = 0.0
+    while t < duration - 1e-9:
+        on_end = min(t + period * duty, duration)
+        edges.append(on_end)
+        rates.append(rate)
+        if on_end >= duration - 1e-9:
+            break
+        off_end = min(t + period, duration)
+        edges.append(off_end)
+        rates.append(0.0)
+        t = off_end
+    return Trace(times=np.asarray(edges), rates=np.asarray(rates))
+
+
+def make_arrivals(sc: ChaosScenario, duration: float) -> ArrivalProcess:
+    """Fresh arrival process for one run of ``sc`` (processes are stateful)."""
+    if sc.arrival == "poisson":
+        return PoissonProcess(rate=sc.rate, duration=duration)
+    if sc.arrival == "trace-wc":
+        trace = synthetic_trace("wc", duration=duration, seed=3).scaled(sc.rate)
+        return TraceModulatedPoisson(trace)
+    if sc.arrival == "ramp":
+        return TraceModulatedPoisson(_ramp_trace(duration, sc.rate))
+    if sc.arrival == "onoff":
+        return TraceModulatedPoisson(_onoff_trace(duration, sc.rate))
+    raise ValueError(f"unknown arrival shape {sc.arrival!r}")
+
+
+SCENARIOS: Dict[str, ChaosScenario] = {
+    sc.name: sc
+    for sc in (
+        ChaosScenario(
+            name="crash-storm",
+            description="frequent crashes with co-resident batches",
+            platform=PlatformConfig(
+                initial_scale=2,
+                container_concurrency=4,
+                ps_slowdown=0.25,
+                failure_prob_per_batch=0.08,
+            ),
+            arrival="trace-wc",
+        ),
+        ChaosScenario(
+            name="cold-start-storm",
+            description="bursty on/off traffic, slow cold starts, eager "
+                        "scale-to-zero",
+            platform=PlatformConfig(
+                cold_start=8.0,
+                scale_to_zero_grace=10.0,
+                container_concurrency=2,
+                ps_slowdown=0.25,
+                failure_prob_per_batch=0.01,
+            ),
+            arrival="onoff",
+            slo_ms=1000.0,  # cold starts dominate; sub-second is unreachable
+        ),
+        ChaosScenario(
+            name="flash-crowd",
+            description="10x ramp in minutes under crash churn",
+            platform=PlatformConfig(
+                initial_scale=1,
+                container_concurrency=2,
+                ps_slowdown=0.25,
+                failure_prob_per_batch=0.02,
+            ),
+            arrival="ramp",
+            rate=40.0,
+        ),
+        ChaosScenario(
+            name="straggler-heavy",
+            description="heavy-tailed service times with capped hedging",
+            platform=PlatformConfig(
+                initial_scale=2,
+                container_concurrency=2,
+                ps_slowdown=0.25,
+                straggler_prob=0.15,
+                straggler_mult=8.0,
+                hedge_factor=3.0,
+                max_hedges=2,
+                failure_prob_per_batch=0.005,
+            ),
+            arrival="poisson",
+        ),
+        ChaosScenario(
+            name="drain-under-load",
+            description="aggressive scale-down drains containers that then "
+                        "crash with work in flight",
+            platform=PlatformConfig(
+                initial_scale=2,
+                container_concurrency=2,
+                ps_slowdown=0.25,
+                max_scale_down_rate=4.0,
+                scale_to_zero_grace=10.0,
+                failure_prob_per_batch=0.03,
+            ),
+            arrival="onoff",
+        ),
+    )
+}
+
+
+def run_scenario(
+    scenario: ChaosScenario | str,
+    policy: str = "mlproxy",
+    *,
+    faults: bool = True,
+    quick: bool = False,
+    seed: Optional[int] = None,
+) -> Tuple[SimResult, dict]:
+    """Run one policy through one scenario and enforce conservation.
+
+    Returns ``(SimResult, conservation_dict)``. Raises ``AssertionError``
+    if any submitted batch is lost, duplicated, or left undrained.
+    """
+    if isinstance(scenario, str):
+        scenario = SCENARIOS[scenario]
+    duration = max(120.0, scenario.duration * 0.25) if quick else scenario.duration
+    workload = get_workload(scenario.workload)
+    policy_kwargs = {}
+    if policy == "static":
+        policy_kwargs = {"batch_size": 8, "timeout": 0.2}
+    elif policy == "oracle":
+        policy_kwargs = {
+            "latency_model": lambda bs, _w=workload: _w.percentile(bs, 95)
+        }
+    sim = Simulator(
+        policy=policy,
+        sla=SLAConfig(slo_target=ms(scenario.slo_ms)),
+        workload=workload,
+        arrivals=make_arrivals(scenario, duration),
+        platform_config=(
+            scenario.platform if faults else scenario.baseline_platform()
+        ),
+        policy_kwargs=policy_kwargs,
+        duration=duration,
+        drain_grace=scenario.drain_grace,
+        seed=scenario.seed if seed is None else seed,
+    )
+    result = sim.run()
+    conservation = sim.platform.assert_conserved(require_drained=True)
+    return result, conservation

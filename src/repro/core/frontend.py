@@ -136,6 +136,8 @@ class ProxyFrontend:
         per = {name: ep.policy.stats(now) for name, ep in self._endpoints.items()}
         agg_batches = sum(s["dispatched_batches"] for s in per.values())
         agg_requests = sum(s["dispatched_requests"] for s in per.values())
+        agg_retried = sum(s.get("retried_batches", 0) for s in per.values())
+        agg_upstream = sum(s.get("upstream_batches", 0) for s in per.values())
         return {
             "endpoints": per,
             "aggregate": {
@@ -144,6 +146,11 @@ class ProxyFrontend:
                 "dispatched_batches": agg_batches,
                 "dispatched_requests": agg_requests,
                 "avg_batch_size": agg_requests / agg_batches if agg_batches else 0.0,
+                # platform-side crash retries / hedges, observed through
+                # Batch.attempts on the completion path; rate is over
+                # *completed* upstream batches, same as per-endpoint stats
+                "retried_batches": agg_retried,
+                "retry_rate": agg_retried / agg_upstream if agg_upstream else 0.0,
             },
         }
 

@@ -223,12 +223,27 @@ class SmartMonitor:
         self.lifetime_dispatches = 0
         self.lifetime_requests = 0
         self.lifetime_violations = 0
+        # retry-aware upstream accounting (platform-side crash retries and
+        # hedges, reported via Batch.attempts)
+        self.lifetime_upstream_batches = 0
+        self.lifetime_upstream_attempts = 0
+        self.lifetime_retried_batches = 0
 
     # ---------------------------------------------------------------- record
-    def record_upstream(self, batch_size: int, latency: float, now: float) -> None:
-        """Record one upstream batch completion."""
+    def record_upstream(self, batch_size: int, latency: float, now: float,
+                        attempts: int = 1) -> None:
+        """Record one upstream batch completion.
+
+        ``attempts`` is how many platform-side dispatches (crash retries +
+        hedges) the batch took; values > 1 feed the retry-aware counters
+        surfaced in :meth:`stats` plumbing (``retry_rate``).
+        """
         if batch_size <= 0:
             raise ValueError("batch_size must be >= 1")
+        self.lifetime_upstream_batches += 1
+        self.lifetime_upstream_attempts += max(1, attempts)
+        if attempts > 1:
+            self.lifetime_retried_batches += 1
         win = self._upstream.get(batch_size)
         if win is None:
             win = LatencyWindow(self.config.window_size, self.config.window_horizon)
@@ -296,8 +311,11 @@ class SmartMonitor:
             return points[0][1]
         a, b = _theil_sen_fit(points)
         est = a + b * batch_size
+        # Extrapolation floor: never negative, and never below half the
+        # cheapest observed percentile — a downhill fit extrapolated far
+        # past the data must not promise near-free large batches.
         lo = min(y for _, y in points)
-        return max(est, 0.0 if est >= 0 else 0.0, 0.5 * lo)
+        return max(est, 0.5 * lo, 0.0)
 
     def e2e_percentile(self, now: float) -> Optional[float]:
         return self._e2e.percentile(self.sla.percentile, now)
@@ -321,6 +339,12 @@ class SmartMonitor:
             return 0.0
         return self.lifetime_violations / self.lifetime_requests
 
+    def retry_rate(self) -> float:
+        """Fraction of completed upstream batches that needed > 1 attempt."""
+        if self.lifetime_upstream_batches == 0:
+            return 0.0
+        return self.lifetime_retried_batches / self.lifetime_upstream_batches
+
     def observed_batch_sizes(self) -> List[int]:
         return sorted(self._upstream)
 
@@ -337,6 +361,11 @@ class SmartMonitor:
                 self.lifetime_requests,
                 self.lifetime_violations,
             ),
+            "lifetime_upstream": (
+                self.lifetime_upstream_batches,
+                self.lifetime_upstream_attempts,
+                self.lifetime_retried_batches,
+            ),
         }
 
     def restore(self, state: dict) -> None:
@@ -352,3 +381,8 @@ class SmartMonitor:
             self.lifetime_requests,
             self.lifetime_violations,
         ) = state["lifetime"]
+        (
+            self.lifetime_upstream_batches,
+            self.lifetime_upstream_attempts,
+            self.lifetime_retried_batches,
+        ) = state.get("lifetime_upstream", (0, 0, 0))

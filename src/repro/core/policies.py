@@ -92,7 +92,8 @@ class BatchingPolicy:
                 self.queue.next_deadline = None
 
     def on_response(self, batch: Batch, upstream_latency: float, now: float) -> None:
-        self.monitor.record_upstream(batch.effective_size, upstream_latency, now)
+        self.monitor.record_upstream(batch.effective_size, upstream_latency, now,
+                                     attempts=batch.attempts)
         batch.complete(now)
         for r in batch.requests:
             self.monitor.record_e2e(r.e2e_latency, now)
@@ -118,6 +119,9 @@ class BatchingPolicy:
             "e2e_p": self.monitor.e2e_percentile(now),
             "violation_rate": self.monitor.violation_rate(),
             "timeout_ratio": self.monitor.timeout_ratio(),
+            "upstream_batches": self.monitor.lifetime_upstream_batches,
+            "retried_batches": self.monitor.lifetime_retried_batches,
+            "retry_rate": self.monitor.retry_rate(),
         }
 
     def snapshot(self) -> dict:

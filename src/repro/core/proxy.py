@@ -59,7 +59,8 @@ class MLProxy:
         # Monitor keys by the *effective* (padded) size on bucketed backends:
         # that is the size whose latency the next dispatch decision must
         # predict.
-        self.monitor.record_upstream(batch.effective_size, upstream_latency, now)
+        self.monitor.record_upstream(batch.effective_size, upstream_latency, now,
+                                     attempts=batch.attempts)
         batch.complete(now)
         for r in batch.requests:
             assert r.e2e_latency is not None
@@ -97,6 +98,9 @@ class MLProxy:
             "e2e_p": self.monitor.e2e_percentile(now),
             "violation_rate": self.monitor.violation_rate(),
             "timeout_ratio": self.monitor.timeout_ratio(),
+            "upstream_batches": self.monitor.lifetime_upstream_batches,
+            "retried_batches": self.monitor.lifetime_retried_batches,
+            "retry_rate": self.monitor.retry_rate(),
         }
 
     # ------------------------------------------------------ fault tolerance

@@ -46,6 +46,10 @@ class Batch:
     # Stamped by the frontend so shared dispatch targets (and shared
     # platforms) know which endpoint's model a batch belongs to.
     endpoint: Optional[str] = None
+    # Stamped by the platform on completion: how many dispatch attempts
+    # (crash retries + hedges) this batch took before it finished. The
+    # monitor uses it for retry-aware upstream statistics.
+    attempts: int = 1
 
     @property
     def size(self) -> int:

@@ -18,6 +18,30 @@ Models the pieces of Knative that the paper's evaluation depends on:
   container crashes with at-least-once re-dispatch, straggler service
   times, and optional hedged duplicates for straggler mitigation.
 
+Execution is organised around an explicit **attempt ledger**: every
+:class:`_WorkItem` (one upstream batch) owns the set of its live
+:class:`_Attempt` records — (container, start time, scheduled completion) —
+and every state transition (crash, completion, hedge, drain, scale-down)
+resolves through the ledger:
+
+* a container crash cancels and requeues *every* live attempt on the dead
+  container, so co-resident batches are never lost when
+  ``container_concurrency > 1``;
+* the first completed attempt wins; sibling attempts are cancelled on the
+  spot, freeing their concurrency slots immediately (no phantom occupancy
+  until a stale completion timer fires);
+* hedged duplicates are capped per item (``max_hedges``) and placed
+  anti-affine to the item's live attempts, so one straggler cannot fan out
+  into a duplicate storm on the same doomed container;
+* the autoscaler's concurrency signal is derived from the ledger (live
+  attempts + queued-not-done items), so completed items lingering in the
+  queue never inflate it.
+
+The ledger makes the conservation invariant checkable at any instant:
+``submitted == completed + queued + inflight`` with zero lost and zero
+duplicate completions — see :meth:`ServerlessPlatform.conservation` and
+:meth:`ServerlessPlatform.assert_conserved`.
+
 The platform is clock-free like the proxy: it schedules itself on the
 shared :class:`~repro.simulation.events.EventQueue`.
 """
@@ -63,6 +87,7 @@ class PlatformConfig:
     straggler_prob: float = 0.0
     straggler_mult: float = 5.0
     hedge_factor: float = 0.0  # >0 enables hedged re-dispatch at f×E[s]
+    max_hedges: int = 1  # cap on hedged duplicates per work item
 
 
 class _Container:
@@ -74,6 +99,7 @@ class _Container:
         self.terminated = False
         self.draining = False  # finish in-flight work then terminate
         self.inflight: int = 0
+        self.attempts: List["_Attempt"] = []  # live attempts hosted here
 
     def is_ready(self, now: float) -> bool:
         return not self.terminated and now >= self.ready_at
@@ -84,6 +110,27 @@ class _Container:
         return max(0, concurrency - self.inflight)
 
 
+class _Attempt:
+    """One dispatch of a work item onto a container.
+
+    ``resolved`` flips exactly once — on completion, cancellation (a
+    sibling won), or crash — so the completion/crash/hedge events queued
+    against this attempt become no-ops the moment it leaves the ledger.
+    """
+
+    _ids = itertools.count()
+    __slots__ = ("attempt_id", "item", "container", "start", "eta", "resolved")
+
+    def __init__(self, item: "_WorkItem", container: _Container,
+                 start: float, eta: float) -> None:
+        self.attempt_id = next(_Attempt._ids)
+        self.item = item
+        self.container = container
+        self.start = start
+        self.eta = eta  # scheduled completion (or crash instant if doomed)
+        self.resolved = False
+
+
 class _WorkItem:
     _ids = itertools.count()
 
@@ -92,7 +139,10 @@ class _WorkItem:
         self.batch = batch
         self.submit_time = submit_time
         self.done = False
-        self.attempts = 0
+        self.attempts = 0  # total attempts ever started
+        self.hedges = 0  # hedged duplicates issued (capped by max_hedges)
+        self.live: List[_Attempt] = []  # unresolved attempts
+        self.queued = False  # logically in the pending queue
 
 
 class ServerlessPlatform:
@@ -115,6 +165,9 @@ class ServerlessPlatform:
 
         self.containers: List[_Container] = []
         self.pending: Deque[_WorkItem] = collections.deque()
+        self._queued_count = 0  # live (not-done) items in ``pending``
+        self._live_attempts = 0  # unresolved attempts across all containers
+        self._open: Dict[int, _WorkItem] = {}  # item_id → not-yet-done item
         # time-weighted concurrency (Knative's queue-proxy reports average
         # concurrency over each reporting period, not point samples —
         # point-sampling misses sub-second batches and flaps the panic mode)
@@ -129,9 +182,15 @@ class ServerlessPlatform:
         self.container_seconds = 0.0
         self._billing_last_t = 0.0
         self._billing_last_n = 0
+        self.submitted_batches = 0
+        self.submitted_requests = 0
         self.completed_batches = 0
+        self.completed_requests = 0
         self.failed_attempts = 0
+        self.requeued_batches = 0  # crash-driven at-least-once requeues
         self.hedged_dispatches = 0
+        self.cancelled_attempts = 0  # sibling attempts cancelled by a winner
+        self.duplicate_completions = 0  # must stay 0: exactly-once guard
         self.cold_starts = 0
         self.peak_containers = 0
         self.timeline: List[Tuple[float, int, int, int]] = []  # (t, provisioned, ready, queued)
@@ -155,7 +214,10 @@ class ServerlessPlatform:
         self._accrue_conc(now)
         self._last_traffic = now
         item = _WorkItem(batch, now)
-        self.pending.append(item)
+        self.submitted_batches += 1
+        self.submitted_requests += batch.size
+        self._open[item.item_id] = item
+        self._enqueue(item)
         # Reactive fast-path: Knative's activator pokes the autoscaler on
         # traffic from zero; model that by an immediate scale check.
         if self._ready_count(now) == 0 and self._provisioned_count() == 0:
@@ -171,6 +233,51 @@ class ServerlessPlatform:
         """Containers ready to accept work at ``now``."""
         return self._ready_count(now)
 
+    @property
+    def queued_batches(self) -> int:
+        """Live (not-yet-done) work items waiting in the platform queue."""
+        return self._queued_count
+
+    # --------------------------------------------------------------- ledger
+    def _enqueue(self, item: _WorkItem, front: bool = False) -> None:
+        """Put ``item`` (back) into the pending queue exactly once."""
+        if item.queued or item.done:
+            return
+        item.queued = True
+        self._queued_count += 1
+        if front:
+            self.pending.appendleft(item)
+        else:
+            self.pending.append(item)
+
+    def _mark_dequeued(self, item: _WorkItem) -> None:
+        """Logically remove ``item`` from pending (deque entry goes stale)."""
+        if item.queued:
+            item.queued = False
+            self._queued_count -= 1
+
+    def _resolve_attempt(self, a: _Attempt, now: float,
+                         container_dead: bool = False) -> None:
+        """Take one attempt out of the ledger, freeing its slot.
+
+        ``container_dead`` skips per-slot bookkeeping when the whole
+        container just crashed (its occupancy is zeroed wholesale).
+        """
+        if a.resolved:
+            return
+        a.resolved = True
+        self._live_attempts -= 1
+        a.item.live.remove(a)
+        c = a.container
+        if a in c.attempts:
+            c.attempts.remove(a)
+        if not container_dead and not c.terminated:
+            c.inflight = max(0, c.inflight - 1)
+            if c.draining and c.inflight == 0:
+                self._accrue_billing(now)
+                c.terminated = True
+                self._billing_last_n = self._billable_count()
+
     # ------------------------------------------------------------- internals
     def _provisioned_count(self) -> int:
         return sum(1 for c in self.containers if not c.terminated and not c.draining)
@@ -182,8 +289,10 @@ class ServerlessPlatform:
         return sum(1 for c in self.containers if c.is_ready(now) and not c.draining)
 
     def _concurrency(self) -> float:
-        inflight = sum(c.inflight for c in self.containers if not c.terminated)
-        return float(inflight + len(self.pending))
+        # Ledger-derived: live attempts + queued live items. Items that
+        # completed while a stale copy sat in ``pending`` are excluded, so
+        # crash/hedge churn cannot inflate the autoscaler signal.
+        return float(self._live_attempts + self._queued_count)
 
     def _accrue_conc(self, now: float) -> None:
         """Advance the time-weighted concurrency integral to ``now``."""
@@ -213,7 +322,7 @@ class ServerlessPlatform:
     def _terminate(self, c: _Container, now: float) -> None:
         self._accrue_billing(now)
         if c.inflight > 0:
-            c.draining = True  # terminates in _complete
+            c.draining = True  # terminates when its last live attempt resolves
         else:
             c.terminated = True
         self._billing_last_n = self._billable_count()
@@ -222,15 +331,26 @@ class ServerlessPlatform:
         self._accrue_conc(now)
         conc = self.config.container_concurrency
         for c in self.containers:
-            if not self.pending:
+            if self._queued_count == 0:
                 break
             slots = c.available_slots(now, conc)
+            if slots <= 0:
+                continue
+            deferred: List[_WorkItem] = []
             while slots > 0 and self.pending:
                 item = self.pending.popleft()
-                if item.done:
+                if not item.queued or item.done:
+                    continue  # stale deque entry; already resolved elsewhere
+                if any(a.container is c for a in item.live):
+                    # anti-affinity: a hedge/retry must not land next to its
+                    # own live sibling — it would share the sibling's fate
+                    deferred.append(item)
                     continue
+                self._mark_dequeued(item)
                 self._execute(c, item, now)
                 slots -= 1
+            for it in reversed(deferred):
+                self.pending.appendleft(it)
 
     def _execute(self, c: _Container, item: _WorkItem, now: float) -> None:
         cfg = self.config
@@ -242,54 +362,140 @@ class ServerlessPlatform:
         if cfg.straggler_prob > 0 and self.rng.random() < cfg.straggler_prob:
             service *= cfg.straggler_mult
         fail = cfg.failure_prob_per_batch > 0 and self.rng.random() < cfg.failure_prob_per_batch
+        a = _Attempt(item, c, start=now, eta=now + service)
+        item.live.append(a)
+        c.attempts.append(a)
+        self._live_attempts += 1
         if fail:
-            # crash at a uniform point during service; batch re-queued
-            crash_after = service * float(self.rng.random())
-            self.events.push(now + crash_after, lambda t, c=c, item=item: self._crash(c, item, t))
+            # crash at a uniform point during service; every live attempt
+            # on the container is requeued in _crash
+            a.eta = now + service * float(self.rng.random())
+            self.events.push(a.eta, lambda t, a=a: self._crash(a, t))
         else:
-            self.events.push(now + service, lambda t, c=c, item=item: self._complete(c, item, t))
-            if cfg.hedge_factor > 0:
+            self.events.push(a.eta, lambda t, a=a: self._complete(a, t))
+            if cfg.hedge_factor > 0 and item.hedges < cfg.max_hedges:
                 est = self.latency.mean_batch(item.batch)
                 self.events.push(
                     now + cfg.hedge_factor * est,
-                    lambda t, item=item: self._maybe_hedge(item, t),
+                    lambda t, a=a: self._maybe_hedge(a, t),
                 )
 
-    def _maybe_hedge(self, item: _WorkItem, now: float) -> None:
-        if item.done:
+    def _maybe_hedge(self, a: _Attempt, now: float) -> None:
+        item = a.item
+        if item.done or a.resolved or item.queued:
+            return  # finished, superseded, or already awaiting re-dispatch
+        if item.hedges >= self.config.max_hedges:
             return
-        # straggler suspected: re-dispatch a duplicate; first finisher wins
+        # straggler suspected: re-dispatch a duplicate; first finisher wins.
+        # _try_assign places it anti-affine to the straggling attempt.
+        self._accrue_conc(now)  # charge the pre-hedge interval at the old level
+        item.hedges += 1
         self.hedged_dispatches += 1
-        self.pending.appendleft(item)
+        self._enqueue(item, front=True)
         self._try_assign(now)
 
-    def _crash(self, c: _Container, item: _WorkItem, now: float) -> None:
+    def _crash(self, a: _Attempt, now: float) -> None:
+        if a.resolved:
+            return  # attempt was cancelled/completed before the fault hit
+        c = a.container
         if c.terminated:
             return
         self._accrue_conc(now)
         self.failed_attempts += 1
         self._accrue_billing(now)
         c.terminated = True
+        # resolve EVERY live attempt on the dead container — co-resident
+        # batches crash with it and must be requeued, not leaked
+        victims = list(c.attempts)
+        for v in victims:
+            self._resolve_attempt(v, now, container_dead=True)
         c.inflight = 0
         self._billing_last_n = self._billable_count()
-        if not item.done:
-            self.pending.appendleft(item)  # at-least-once re-dispatch
+        for v in reversed(victims):  # appendleft keeps oldest-first order
+            it = v.item
+            if not it.done and not it.queued and not it.live:
+                self.requeued_batches += 1
+                self._enqueue(it, front=True)  # at-least-once re-dispatch
         self._try_assign(now)
 
-    def _complete(self, c: _Container, item: _WorkItem, now: float) -> None:
-        if c.terminated:
-            return  # crashed while running; handled in _crash
+    def _complete(self, a: _Attempt, now: float) -> None:
+        if a.resolved:
+            return  # sibling won or container crashed under this attempt
+        item = a.item
         self._accrue_conc(now)
-        c.inflight = max(0, c.inflight - 1)
-        if c.draining and c.inflight == 0:
-            self._accrue_billing(now)
-            c.terminated = True
-            self._billing_last_n = self._billable_count()
-        if not item.done:
+        self._resolve_attempt(a, now)
+        if item.done:
+            # unreachable by construction (winning completion resolves all
+            # siblings); counted defensively so a regression is loud
+            self.duplicate_completions += 1
+        else:
             item.done = True
+            # first finisher wins: cancel sibling attempts immediately so
+            # their slots free now, not when their stale timers fire
+            for sib in list(item.live):
+                self._resolve_attempt(sib, now)
+                self.cancelled_attempts += 1
+            self._mark_dequeued(item)
+            self._open.pop(item.item_id, None)
             self.completed_batches += 1
+            self.completed_requests += item.batch.size
+            item.batch.attempts = item.attempts
             self.on_batch_done(item.batch, now - item.submit_time, now)
         self._try_assign(now)
+
+    # --------------------------------------------------------- conservation
+    def conservation(self) -> dict:
+        """Point-in-time conservation ledger.
+
+        Invariants (asserted by :meth:`assert_conserved`): every submitted
+        batch is either completed, queued, or in flight (``lost == 0``) and
+        no batch ever completes twice (``duplicate_completions == 0``).
+        """
+        queued = sum(1 for it in self._open.values() if it.queued)
+        inflight = sum(
+            1 for it in self._open.values() if not it.queued and it.live
+        )
+        lost = sum(
+            1 for it in self._open.values() if not it.queued and not it.live
+        )
+        return {
+            "submitted_batches": self.submitted_batches,
+            "submitted_requests": self.submitted_requests,
+            "completed_batches": self.completed_batches,
+            "completed_requests": self.completed_requests,
+            "queued_batches": queued,
+            "inflight_batches": inflight,
+            "outstanding_batches": len(self._open),
+            "lost_batches": lost,
+            "duplicate_completions": self.duplicate_completions,
+            "requeued_batches": self.requeued_batches,
+            "hedged_dispatches": self.hedged_dispatches,
+            "cancelled_attempts": self.cancelled_attempts,
+        }
+
+    def assert_conserved(self, require_drained: bool = False) -> dict:
+        """Raise ``AssertionError`` if any conservation invariant is broken.
+
+        ``require_drained`` additionally demands that nothing is left
+        outstanding — i.e. every submitted request completed exactly once
+        (the end-of-run form of the invariant).
+        """
+        c = self.conservation()
+        if c["lost_batches"] != 0:
+            raise AssertionError(f"lost batches: {c}")
+        if c["duplicate_completions"] != 0:
+            raise AssertionError(f"duplicate completions: {c}")
+        accounted = (
+            c["completed_batches"] + c["queued_batches"] + c["inflight_batches"]
+        )
+        if accounted != c["submitted_batches"]:
+            raise AssertionError(f"conservation imbalance: {c}")
+        if require_drained:
+            if c["outstanding_batches"] != 0:
+                raise AssertionError(f"undrained work at end of run: {c}")
+            if c["completed_requests"] != c["submitted_requests"]:
+                raise AssertionError(f"request count mismatch: {c}")
+        return c
 
     # ------------------------------------------------------------ autoscaler
     def _metric_tick(self, now: float) -> None:
@@ -303,7 +509,7 @@ class ServerlessPlatform:
         while self._conc_samples and self._conc_samples[0][0] < cutoff:
             self._conc_samples.popleft()
         self.timeline.append(
-            (now, self._billable_count(), self._ready_count(now), len(self.pending))
+            (now, self._billable_count(), self._ready_count(now), self._queued_count)
         )
         self.events.push(now + self.config.metric_tick, self._metric_tick)
 
@@ -313,11 +519,17 @@ class ServerlessPlatform:
             return 0.0
         t_end, i_end = self._conc_samples[-1]
         target = now - window
-        t_start, i_start = self._conc_samples[0]
+        start: Optional[Tuple[float, float]] = None
         for (t, i) in self._conc_samples:
             if t >= target:
-                t_start, i_start = t, i
+                start = (t, i)
                 break
+        if start is None:
+            # every sample predates the window: the buffer only holds stale
+            # history, so report the instantaneous signal instead of the
+            # average over the whole (out-of-window) buffer
+            return self._concurrency()
+        t_start, i_start = start
         if t_end <= t_start:
             return self._concurrency()
         return (i_end - i_start) / (t_end - t_start)

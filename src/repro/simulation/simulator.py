@@ -202,7 +202,7 @@ class Simulator(_EventLoopDriver):
                 "miss_rate": miss,
                 "containers": self.platform.billable_count,
                 "ready": self.platform.ready_count(now),
-                "queued_batches": len(self.platform.pending),
+                "queued_batches": self.platform.queued_batches,
                 "max_bs": float(self.policy.max_bs),
                 "proxy_queue": self.policy.stats(now).get("queue_len", 0),
             }
@@ -247,6 +247,21 @@ class Simulator(_EventLoopDriver):
             "hedged_dispatches": float(self.platform.hedged_dispatches),
             "throughput": float(len(e2e)) / max(self.now, 1e-9),
         }
+        # conservation ledger: every submitted batch must be completed or
+        # still accounted for (queued/in-flight); lost and duplicate must
+        # stay 0 in every run, faults or not
+        cons = self.platform.conservation()
+        summary.update(
+            {
+                "submitted_batches": float(cons["submitted_batches"]),
+                "completed_batches": float(cons["completed_batches"]),
+                "outstanding_batches": float(cons["outstanding_batches"]),
+                "lost_batches": float(cons["lost_batches"]),
+                "duplicate_completions": float(cons["duplicate_completions"]),
+                "requeued_batches": float(cons["requeued_batches"]),
+                "cancelled_attempts": float(cons["cancelled_attempts"]),
+            }
+        )
         timeline = {
             k: np.asarray([s[k] for s in self._samples], dtype=np.float64)
             for k in (self._samples[0].keys() if self._samples else [])
@@ -446,6 +461,18 @@ class MultiEndpointSimulator(_EventLoopDriver):
             "n_platforms": float(len(self.platforms)),
             "n_endpoints": float(len(self.specs)),
         }
+        # fleet-wide conservation ledger (summed over every platform)
+        cons = [p.conservation() for p in self.platforms.values()]
+        for key in (
+            "submitted_batches",
+            "completed_batches",
+            "outstanding_batches",
+            "lost_batches",
+            "duplicate_completions",
+            "requeued_batches",
+            "cancelled_attempts",
+        ):
+            summary[key] = float(sum(c[key] for c in cons))
         return MultiSimResult(
             summary=summary,
             endpoints=endpoints,

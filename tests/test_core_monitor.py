@@ -80,6 +80,35 @@ def test_monitor_regression_fallback_for_unseen_size():
     assert est8 == pytest.approx(0.05 + 0.01 * 8, rel=0.05)
 
 
+def test_monitor_extrapolation_floor():
+    # A downhill fit (big batches measured cheaper, e.g. during a cold-start
+    # storm at bs=8) extrapolated far past the data must floor at half the
+    # cheapest observed percentile — never go to zero or negative.
+    mon = SmartMonitor(MonitorConfig(min_samples=1), SLA)
+    for i in range(5):
+        mon.record_upstream(8, 1.0, now=float(i))
+        mon.record_upstream(16, 0.5, now=float(i))
+    # fit: slope -0.0625, intercept 1.5 → raw estimate at bs=40 is -1.0
+    est = mon.upstream_percentile(40, now=10.0)
+    assert est == pytest.approx(0.5 * 0.5)  # 0.5 × min observed percentile
+    # interpolation between the observed sizes is untouched by the floor
+    assert mon.upstream_percentile(12, now=10.0) == pytest.approx(0.75)
+
+
+def test_monitor_retry_accounting():
+    mon = SmartMonitor(MonitorConfig(), SLA)
+    mon.record_upstream(2, 0.1, now=0.0)                 # clean
+    mon.record_upstream(2, 0.3, now=1.0, attempts=3)     # crash-retried
+    assert mon.lifetime_upstream_batches == 2
+    assert mon.lifetime_upstream_attempts == 4
+    assert mon.lifetime_retried_batches == 1
+    assert mon.retry_rate() == pytest.approx(0.5)
+    state = mon.snapshot()
+    mon2 = SmartMonitor(MonitorConfig(), SLA)
+    mon2.restore(state)
+    assert mon2.retry_rate() == pytest.approx(0.5)
+
+
 def test_monitor_optimistic_default_before_any_data():
     mon = SmartMonitor(MonitorConfig(optimistic_default=0.0), SLA)
     assert mon.upstream_percentile(5, now=0.0) == 0.0

@@ -1,0 +1,326 @@
+"""Regression tests for the attempt-ledger fault path of the platform.
+
+Covers the three bug classes the ledger fixes — lost co-resident batches
+on crash, unbounded hedge storms, and phantom concurrency from completed
+items stuck in the queue — plus the conservation invariant end-to-end
+across every policy, and a fast slice of the chaos scenario suite.
+"""
+import numpy as np
+import pytest
+
+from repro.core import SLAConfig
+from repro.core.request import Batch, Request
+from repro.serverless.latency import AffineLatency, get_workload
+from repro.serverless.platform import PlatformConfig, ServerlessPlatform
+from repro.simulation.arrivals import PoissonProcess
+from repro.simulation.simulator import (
+    EndpointSpec,
+    MultiEndpointSimulator,
+    Simulator,
+)
+
+from experiments.scenarios import POLICIES, SCENARIOS, run_scenario
+
+
+def _mk_platform(**cfg_kw):
+    events_done = []
+    from repro.simulation.events import EventQueue
+
+    events = EventQueue()
+    plat = ServerlessPlatform(
+        config=PlatformConfig(**cfg_kw),
+        latency_model=AffineLatency(a=0.1, c=0.0, noise_cv=0.0),
+        events=events,
+        rng=np.random.default_rng(0),
+        on_batch_done=lambda b, lat, t: events_done.append((b, lat, t)),
+    )
+    return plat, events, events_done
+
+
+def _drain(events, until=1e9):
+    now = 0.0
+    while events:
+        t, fn = events.pop()
+        if t > until:
+            break
+        now = t
+        fn(t)
+    return now
+
+
+def _one_batch(t=0.0):
+    return Batch(requests=[Request(arrival_time=t)], dispatch_time=t, cause="full")
+
+
+# ----------------------------------------------------- crash: co-resident loss
+def test_crash_requeues_all_coresident_batches():
+    # Four batches share one container (concurrency 4); the container dies
+    # mid-service. Pre-ledger, only the crashing batch was requeued and the
+    # other three vanished (their completions early-returned on terminated).
+    plat, events, done = _mk_platform(
+        initial_scale=1, min_scale=1, max_scale=1,
+        container_concurrency=4, ps_slowdown=0.0,
+    )
+    for _ in range(4):
+        plat.submit(_one_batch(), 0.0)
+    c = plat.containers[0]
+    assert c.inflight == 4 and len(c.attempts) == 4
+    plat._crash(c.attempts[0], 0.05)
+    assert plat.failed_attempts == 1
+    cons = plat.assert_conserved()
+    assert cons["queued_batches"] == 4  # all four requeued, none lost
+    assert cons["lost_batches"] == 0
+    _drain(events, until=120.0)
+    assert len(done) == 4
+    plat.assert_conserved(require_drained=True)
+
+
+def test_crash_requeue_preserves_fifo_order():
+    plat, events, done = _mk_platform(
+        initial_scale=1, min_scale=1, max_scale=1,
+        container_concurrency=3, ps_slowdown=0.0,
+    )
+    batches = [_one_batch() for _ in range(3)]
+    for b in batches:
+        plat.submit(b, 0.0)
+    c = plat.containers[0]
+    started_order = [a.item.batch for a in c.attempts]
+    plat._crash(c.attempts[0], 0.05)
+    requeued = [it.batch for it in plat.pending if it.queued]
+    assert requeued == started_order  # oldest attempt re-dispatches first
+
+
+def test_stochastic_crashes_never_lose_work():
+    plat, events, done = _mk_platform(
+        initial_scale=2, min_scale=1, container_concurrency=4,
+        ps_slowdown=0.25, failure_prob_per_batch=0.3,
+    )
+    for i in range(50):
+        plat.submit(_one_batch(i * 0.05), i * 0.05)
+    _drain(events, until=600.0)
+    assert len(done) == 50
+    assert plat.failed_attempts > 0  # the fault path actually fired
+    cons = plat.assert_conserved(require_drained=True)
+    assert cons["requeued_batches"] >= plat.failed_attempts
+
+
+# -------------------------------------------------------------- hedge storms
+def test_hedge_capped_and_anti_affine():
+    # One guaranteed straggler; hedge timer fires long before it finishes.
+    # The duplicate must land on a DIFFERENT container, and max_hedges=1
+    # must keep one straggler from fanning out further.
+    plat, events, done = _mk_platform(
+        initial_scale=2, min_scale=2, container_concurrency=2,
+        ps_slowdown=0.0, straggler_prob=1.0, straggler_mult=50.0,
+        hedge_factor=2.0, max_hedges=1,
+    )
+    plat.submit(_one_batch(), 0.0)
+    _drain(events, until=1.0)  # hedge fires at 0.2; service runs 5s
+    assert plat.hedged_dispatches == 1
+    (item,) = plat._open.values()
+    assert len(item.live) == 2
+    c0, c1 = (a.container for a in item.live)
+    assert c0 is not c1  # anti-affinity: duplicate avoids the original's host
+    _drain(events, until=60.0)
+    assert len(done) == 1  # first finisher wins, exactly once
+    assert plat.hedged_dispatches == 1  # capped: no storm off the duplicate
+    assert plat.cancelled_attempts == 1  # loser cancelled on the spot
+    plat.assert_conserved(require_drained=True)
+
+
+def test_hedge_storm_bounded_by_max_hedges():
+    # Pre-ledger, every hedged duplicate re-armed its own hedge timer, so a
+    # slow item spawned duplicates without bound. Now: ≤ max_hedges each.
+    plat, events, done = _mk_platform(
+        initial_scale=4, min_scale=4, container_concurrency=2,
+        ps_slowdown=0.0, straggler_prob=1.0, straggler_mult=100.0,
+        hedge_factor=1.5, max_hedges=2,
+    )
+    n = 5
+    for _ in range(n):
+        plat.submit(_one_batch(), 0.0)
+    _drain(events, until=300.0)
+    assert len(done) == n
+    assert plat.hedged_dispatches <= n * 2
+    plat.assert_conserved(require_drained=True)
+
+
+def test_winner_frees_sibling_slot_immediately():
+    # Straggler on c0, hedge on c1 finishes first → c0's slot must free the
+    # instant the winner completes, not when the straggler's timer fires.
+    plat, events, done = _mk_platform(
+        initial_scale=2, min_scale=2, container_concurrency=1,
+        ps_slowdown=0.0, straggler_prob=0.5, straggler_mult=100.0,
+        hedge_factor=2.0, max_hedges=1,
+    )
+    plat.submit(_one_batch(), 0.0)  # rng: first straggler draw hits (0.5)
+    t = _drain(events, until=2.0)
+    if plat.hedged_dispatches:  # hedge completed; straggler still "running"
+        assert len(done) == 1
+        total_inflight = sum(
+            c.inflight for c in plat.containers if not c.terminated
+        )
+        assert total_inflight == 0  # straggler's slot already reclaimed
+    plat.assert_conserved()
+
+
+# ------------------------------------------------------- drain / scale-down
+def test_drain_then_crash_requeues_inflight_work():
+    plat, events, done = _mk_platform(
+        initial_scale=2, min_scale=1, max_scale=2,
+        container_concurrency=1, ps_slowdown=0.0,
+    )
+    plat.submit(_one_batch(), 0.0)
+    plat.submit(_one_batch(), 0.0)
+    plat._scale_to(1, 0.01)  # both busy → one container drains
+    draining = [c for c in plat.containers if c.draining]
+    assert len(draining) == 1
+    plat._crash(draining[0].attempts[0], 0.05)  # dies before finishing drain
+    _drain(events, until=60.0)
+    assert len(done) == 2  # the draining container's batch was not lost
+    plat.assert_conserved(require_drained=True)
+
+
+def test_drain_completes_then_terminates():
+    plat, events, done = _mk_platform(
+        initial_scale=2, min_scale=1, max_scale=2,
+        container_concurrency=1, ps_slowdown=0.0,
+    )
+    plat.submit(_one_batch(), 0.0)
+    plat.submit(_one_batch(), 0.0)
+    plat._scale_to(1, 0.01)
+    draining = [c for c in plat.containers if c.draining]
+    _drain(events, until=30.0)
+    assert len(done) == 2
+    assert all(c.terminated for c in draining)
+    plat.assert_conserved(require_drained=True)
+
+
+# ------------------------------------------------------ phantom concurrency
+def test_completed_item_leaves_autoscaler_signal():
+    # concurrency 1, one container: the hedge can never be placed (anti-
+    # affine, no second host), so the item sits queued until the original
+    # finishes. Pre-ledger the done item stayed in `pending` and kept
+    # feeding concurrency=1 to the autoscaler forever.
+    plat, events, done = _mk_platform(
+        initial_scale=1, min_scale=1, max_scale=1,
+        container_concurrency=1, ps_slowdown=0.0,
+        straggler_prob=1.0, straggler_mult=30.0,
+        hedge_factor=0.5, max_hedges=1,
+    )
+    plat.submit(_one_batch(), 0.0)
+    _drain(events, until=10.0)
+    assert len(done) == 1
+    assert plat.hedged_dispatches == 1
+    assert plat.queued_batches == 0
+    assert plat._concurrency() == 0.0  # no phantom KPA signal
+    plat.assert_conserved(require_drained=True)
+
+
+def test_window_avg_ignores_stale_buffer():
+    plat, _, _ = _mk_platform(initial_scale=0)
+    plat._conc_samples.extend([(0.0, 0.0), (1.0, 5.0)])
+    # every sample predates the window → fall back to the instantaneous
+    # signal (0 here), not the average over the whole stale buffer (5.0)
+    assert plat._window_avg(100.0, 5.0) == 0.0
+
+
+# ------------------------------------------------- conservation, end to end
+FAULT_PC = PlatformConfig(
+    initial_scale=2, container_concurrency=4, ps_slowdown=0.25,
+    failure_prob_per_batch=0.05, straggler_prob=0.05, straggler_mult=8.0,
+    hedge_factor=3.0, max_hedges=1,
+)
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_conservation_invariant_every_policy(policy):
+    wl = get_workload("sklearn-iris")
+    kw = {}
+    if policy == "static":
+        kw = {"batch_size": 8, "timeout": 0.2}
+    elif policy == "oracle":
+        kw = {"latency_model": lambda bs: wl.percentile(bs, 95)}
+    sim = Simulator(
+        policy=policy, sla=SLAConfig(slo_target=0.5), workload=wl,
+        arrivals=PoissonProcess(rate=40.0, duration=120.0),
+        platform_config=FAULT_PC, policy_kwargs=kw,
+        duration=120.0, drain_grace=120.0, seed=7,
+    )
+    res = sim.run()
+    cons = sim.platform.assert_conserved(require_drained=True)
+    s = res.summary
+    assert s["lost_batches"] == 0.0
+    assert s["duplicate_completions"] == 0.0
+    assert s["completed_batches"] == s["submitted_batches"]
+    assert cons["completed_requests"] == cons["submitted_requests"]
+    # every arrival came back out exactly once
+    assert s["completed"] == cons["submitted_requests"]
+
+
+def test_conservation_deterministic_given_seed():
+    def one():
+        sim = Simulator(
+            policy="mlproxy", sla=SLAConfig(slo_target=0.5),
+            workload=get_workload("sklearn-iris"),
+            arrivals=PoissonProcess(rate=40.0, duration=90.0),
+            platform_config=FAULT_PC,
+            duration=90.0, drain_grace=120.0, seed=13,
+        )
+        sim.run()
+        return sim.platform.conservation()
+
+    assert one() == one()
+
+
+def test_multi_endpoint_fleet_conserves_and_reports_retries():
+    # shared fleet under faults: the frontend's aggregate stats must see the
+    # platform-side retries (Batch.attempts plumbing) and the fleet summary
+    # must balance
+    spec = dict(
+        sla=SLAConfig(slo_target=0.5),
+        workload=get_workload("sklearn-iris"),
+        platform="shared",
+        platform_config=FAULT_PC,
+    )
+    sim = MultiEndpointSimulator(
+        {
+            "a": EndpointSpec(policy="mlproxy",
+                              arrivals=PoissonProcess(rate=25.0, duration=90.0),
+                              **spec),
+            "b": EndpointSpec(policy="passthrough",
+                              arrivals=PoissonProcess(rate=25.0, duration=90.0),
+                              **spec),
+        },
+        duration=90.0, drain_grace=120.0, seed=5,
+    )
+    res = sim.run()
+    for plat in sim.platforms.values():
+        plat.assert_conserved(require_drained=True)
+    s = res.summary
+    assert s["lost_batches"] == 0.0
+    assert s["duplicate_completions"] == 0.0
+    assert s["completed_batches"] == s["submitted_batches"]
+    agg = res.frontend_stats["aggregate"]
+    assert agg["retried_batches"] > 0  # faults were visible to the proxy
+    assert 0.0 < agg["retry_rate"] <= 1.0
+
+
+# ------------------------------------------------------------ chaos suite
+def test_chaos_scenario_fast_subset():
+    # one scenario end-to-end through experiments.scenarios (CI-fast slice)
+    res, cons = run_scenario("crash-storm", "mlproxy", quick=True)
+    assert cons["lost_batches"] == 0
+    assert cons["duplicate_completions"] == 0
+    assert cons["completed_requests"] == cons["submitted_requests"]
+    assert res.summary["requeued_batches"] > 0  # crashes actually happened
+
+
+@pytest.mark.chaos
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_chaos_scenario_sweep(name):
+    for policy in ("passthrough", "mlproxy"):
+        res, cons = run_scenario(name, policy, quick=True)
+        assert cons["lost_batches"] == 0
+        assert cons["duplicate_completions"] == 0
+        assert cons["completed_requests"] == cons["submitted_requests"]
