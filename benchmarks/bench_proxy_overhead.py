@@ -38,6 +38,24 @@ def scalar_proxy_throughput(n_events: int = 50_000) -> float:
     return n_events / dt
 
 
+def latency_window_throughput(n_ops: int = 200_000) -> float:
+    """add+percentile pairs/sec on one LatencyWindow — the scheduler does
+    exactly this pair on every arrival (Algorithm 1's RT95 probe), so this
+    is the unit cost the sorted-cache optimization targets."""
+    from repro.core.monitor import LatencyWindow
+
+    win = LatencyWindow(maxlen=256, horizon=120.0)
+    lats = np.random.default_rng(0).random(n_ops) * 0.2
+    t0 = time.perf_counter()
+    t = 0.0
+    for i in range(n_ops):
+        t += 0.001
+        win.add(t, float(lats[i]))
+        win.percentile(95.0, now=t, outlier_mult=5.0)
+    dt = time.perf_counter() - t0
+    return n_ops / dt
+
+
 def fleet_controller_throughput(n_endpoints: int = 4096,
                                 iters: int = 50) -> float:
     state = jc.init_fleet(n_endpoints, n_buckets=16, window=64)
@@ -61,6 +79,8 @@ def run(quick: bool = False) -> List[Dict]:
     rows = [
         {"metric": "scalar_proxy_decisions_per_s",
          "value": round(scalar_proxy_throughput(10_000 if quick else 50_000))},
+        {"metric": "latency_window_add_percentile_per_s",
+         "value": round(latency_window_throughput(40_000 if quick else 200_000))},
         {"metric": "fleet_controller_endpoint_updates_per_s",
          "value": round(fleet_controller_throughput(1024 if quick else 4096,
                                                     10 if quick else 50))},

@@ -1,0 +1,128 @@
+"""Event-core throughput: how fast the discrete-event simulator itself runs.
+
+Headline numbers are requests/sec and events/sec of wall time on two
+configurations:
+
+* ``poisson_1m`` — a single-endpoint MLProxy pipeline fed 1M Poisson
+  arrivals (the scale every policy x workload x SLO sweep cell runs at).
+* ``multi_chaos`` — a multi-endpoint shared-fleet configuration with fault
+  injection (crashes, stragglers, hedging), i.e. the chaos-suite hot path.
+
+Every run ends by asserting the platform conservation invariant — the
+speedups must never come at the cost of lost or duplicated work.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List
+
+from benchmarks.common import Timer, write_csv
+
+from repro.core import SLAConfig
+from repro.serverless.latency import get_workload
+from repro.serverless.platform import PlatformConfig
+from repro.simulation.arrivals import MMPP2, PoissonProcess
+from repro.simulation.simulator import (
+    EndpointSpec,
+    MultiEndpointSimulator,
+    Simulator,
+)
+
+# ~2500 req/s for 400 s => 1M requests (quick: 50k)
+POISSON_RATE = 2500.0
+POISSON_DURATION = 400.0
+POISSON_DURATION_QUICK = 20.0
+
+CHAOS_PLATFORM = PlatformConfig(
+    initial_scale=2,
+    container_concurrency=4,
+    ps_slowdown=0.25,
+    failure_prob_per_batch=0.05,
+    straggler_prob=0.05,
+    straggler_mult=8.0,
+    hedge_factor=3.0,
+    max_hedges=1,
+)
+
+
+def _row(case: str, sim, completed: float, wall: float,
+         lost: float, duplicates: float) -> Dict:
+    events = float(getattr(sim, "events_processed", math.nan))
+    return {
+        "case": case,
+        "requests": int(completed),
+        "wall_s": round(wall, 3),
+        "req_per_s": round(completed / wall, 1),
+        "events": events if math.isnan(events) else int(events),
+        "events_per_s": (math.nan if math.isnan(events)
+                         else round(events / wall, 1)),
+        "lost": int(lost),
+        "duplicates": int(duplicates),
+    }
+
+
+def poisson_1m(quick: bool = False) -> Dict:
+    duration = POISSON_DURATION_QUICK if quick else POISSON_DURATION
+    sim = Simulator(
+        policy="mlproxy",
+        sla=SLAConfig(slo_target=0.5),
+        workload=get_workload("sklearn-iris"),
+        arrivals=PoissonProcess(rate=POISSON_RATE, duration=duration),
+        platform_config=PlatformConfig(initial_scale=4),
+        duration=duration,
+        drain_grace=60.0,
+        seed=42,
+    )
+    with Timer() as t:
+        res = sim.run()
+    sim.platform.assert_conserved(require_drained=True)
+    s = res.summary
+    return _row("poisson_1m", sim, s["completed"], t.seconds,
+                s["lost_batches"], s["duplicate_completions"])
+
+
+def multi_chaos(quick: bool = False) -> Dict:
+    duration = 30.0 if quick else 120.0
+    spec = dict(
+        sla=SLAConfig(slo_target=0.5),
+        platform="shared",
+        platform_config=CHAOS_PLATFORM,
+    )
+    sim = MultiEndpointSimulator(
+        {
+            "iris": EndpointSpec(
+                policy="mlproxy",
+                workload=get_workload("sklearn-iris"),
+                arrivals=PoissonProcess(rate=300.0, duration=duration),
+                **spec,
+            ),
+            "toxic": EndpointSpec(
+                policy="clipper",
+                workload=get_workload("keras-toxic"),
+                arrivals=MMPP2(rate_lo=40.0, rate_hi=160.0, mean_lo=20.0,
+                               mean_hi=10.0, duration=duration),
+                **spec,
+            ),
+        },
+        duration=duration,
+        drain_grace=120.0,
+        seed=42,
+    )
+    with Timer() as t:
+        res = sim.run()
+    for plat in sim.platforms.values():
+        plat.assert_conserved(require_drained=True)
+    s = res.summary
+    return _row("multi_chaos", sim, s["completed"], t.seconds,
+                s["lost_batches"], s["duplicate_completions"])
+
+
+def run(quick: bool = False) -> List[Dict]:
+    rows = [poisson_1m(quick=quick), multi_chaos(quick=quick)]
+    write_csv("simcore.csv", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

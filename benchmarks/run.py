@@ -3,11 +3,56 @@
 Prints ``name,us_per_call,derived`` CSV per the harness contract:
 ``us_per_call`` is the wall-time of producing the artifact;
 ``derived`` is the benchmark's headline number.
+
+Bench modules are imported lazily so ``--only <name>`` (e.g. the CI
+perf-smoke step running ``--only simcore``) does not pay for unrelated
+imports (the JAX-backed benches in particular).
 """
 from __future__ import annotations
 
 import argparse
+import importlib
+import inspect
 import sys
+
+# name -> (module under benchmarks/, derive(rows) -> headline)
+BENCHES = {
+    "fig3_fig4_batch_scaling": (
+        "bench_batch_scaling",
+        lambda rows: min(r["relative_per_inference"] for r in rows
+                         if r["batch_size"] == 16
+                         and "linear" not in r["workload"])),
+    "table3_experiments": (
+        "bench_table3",
+        lambda rows: sum(r["cont_reduction_pct"] for r in rows) / len(rows)),
+    "fig6_ccdf": ("bench_ccdf", lambda rows: len(rows)),
+    "fig7_timeseries": ("bench_timeseries", lambda rows: len(rows)),
+    "policy_comparison": (
+        "bench_policies",
+        lambda rows: min(r["containers"] for r in rows if not r["faults"])),
+    "proxy_overhead": (
+        "bench_proxy_overhead", lambda rows: rows[0]["value"]),
+    "multi_endpoint": (
+        "bench_multi_endpoint",
+        lambda rows: min(r["containers_total"] for r in rows
+                         if r["policy"] == "mlproxy")),
+    # derived = conservation violations across the whole sweep; any
+    # value other than 0.0 means the platform lost or duplicated work
+    "chaos_scenarios": (
+        "bench_chaos",
+        lambda rows: sum(r["lost"] + r["duplicates"] for r in rows)),
+    # event-core throughput: derived = requests/sec on the 1M-request
+    # Poisson configuration (the scale target every sweep cell runs at)
+    "simcore": (
+        "bench_simcore",
+        lambda rows: max(r["req_per_s"] for r in rows
+                         if r["case"] == "poisson_1m")),
+    # parallel policy x scenario grid; derived = conservation violations
+    # across every cell (0.0 or the sweep is broken)
+    "policy_sweep": (
+        "sweep",
+        lambda rows: sum(r["lost"] + r["duplicates"] for r in rows)),
+}
 
 
 def main() -> None:
@@ -15,46 +60,23 @@ def main() -> None:
     p.add_argument("--quick", action="store_true",
                    help="shorter simulations (CI-scale)")
     p.add_argument("--only", default=None, help="run a single benchmark")
+    p.add_argument("--jobs", type=int, default=1,
+                   help="worker processes for benches that fan out "
+                        "(currently: policy_sweep)")
     args = p.parse_args()
 
     from benchmarks.common import Timer
-    from benchmarks import (bench_batch_scaling, bench_ccdf, bench_chaos,
-                            bench_multi_endpoint, bench_policies,
-                            bench_proxy_overhead, bench_table3,
-                            bench_timeseries)
 
-    benches = {
-        "fig3_fig4_batch_scaling": (
-            bench_batch_scaling.run,
-            lambda rows: min(r["relative_per_inference"] for r in rows
-                             if r["batch_size"] == 16
-                             and "linear" not in r["workload"])),
-        "table3_experiments": (
-            bench_table3.run,
-            lambda rows: sum(r["cont_reduction_pct"] for r in rows) / len(rows)),
-        "fig6_ccdf": (bench_ccdf.run, lambda rows: len(rows)),
-        "fig7_timeseries": (bench_timeseries.run, lambda rows: len(rows)),
-        "policy_comparison": (
-            bench_policies.run,
-            lambda rows: min(r["containers"] for r in rows if not r["faults"])),
-        "proxy_overhead": (
-            bench_proxy_overhead.run, lambda rows: rows[0]["value"]),
-        "multi_endpoint": (
-            bench_multi_endpoint.run,
-            lambda rows: min(r["containers_total"] for r in rows
-                             if r["policy"] == "mlproxy")),
-        # derived = conservation violations across the whole sweep; any
-        # value other than 0.0 means the platform lost or duplicated work
-        "chaos_scenarios": (
-            bench_chaos.run,
-            lambda rows: sum(r["lost"] + r["duplicates"] for r in rows)),
-    }
     print("name,us_per_call,derived")
-    for name, (fn, derive) in benches.items():
+    for name, (module, derive) in BENCHES.items():
         if args.only and args.only != name:
             continue
+        fn = importlib.import_module(f"benchmarks.{module}").run
+        kwargs = {"quick": args.quick}
+        if "jobs" in inspect.signature(fn).parameters:
+            kwargs["jobs"] = args.jobs
         with Timer() as t:
-            rows = fn(quick=args.quick)
+            rows = fn(**kwargs)
         try:
             derived = derive(rows)
         except Exception:

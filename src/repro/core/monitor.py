@@ -23,24 +23,53 @@ from repro.core.config import MonitorConfig, SLAConfig
 
 
 class LatencyWindow:
-    """Sliding window of (timestamp, latency) with lazy horizon eviction."""
+    """Sliding window of (timestamp, latency) with lazy horizon eviction.
 
-    __slots__ = ("maxlen", "horizon", "_buf")
+    Percentile queries run off a lazily-built sorted cache that is kept
+    incrementally consistent: ``add`` insorts the new sample (removing the
+    one the bounded deque evicts), horizon eviction removes aged samples,
+    and the winsorized rank is computed with bisection on the cache — so
+    the window is sorted once, not on every ``percentile`` call (the
+    scheduler queries it on every arrival).
+    """
+
+    __slots__ = ("maxlen", "horizon", "_buf", "_sorted")
 
     def __init__(self, maxlen: int, horizon: float) -> None:
         self.maxlen = maxlen
         self.horizon = horizon
         self._buf: Deque[Tuple[float, float]] = collections.deque(maxlen=maxlen)
+        self._sorted: Optional[List[float]] = None  # built on first query
 
     def add(self, now: float, latency: float) -> None:
+        srt = self._sorted
+        if srt is not None:
+            if len(self._buf) == self.maxlen:  # deque evicts its oldest
+                del srt[bisect.bisect_left(srt, self._buf[0][1])]
+            bisect.insort(srt, latency)
         self._buf.append((now, latency))
 
     def _evict(self, now: float) -> None:
         cutoff = now - self.horizon
-        while self._buf and self._buf[0][0] < cutoff:
-            self._buf.popleft()
+        buf = self._buf
+        srt = self._sorted
+        while buf and buf[0][0] < cutoff:
+            _, v = buf.popleft()
+            if srt is not None:
+                del srt[bisect.bisect_left(srt, v)]
+
+    def _sorted_values(self) -> List[float]:
+        if self._sorted is None:
+            self._sorted = sorted(v for (_, v) in self._buf)
+        return self._sorted
 
     def __len__(self) -> int:
+        return len(self._buf)
+
+    def count(self, now: Optional[float] = None) -> int:
+        """Number of in-horizon samples (no list materialization)."""
+        if now is not None:
+            self._evict(now)
         return len(self._buf)
 
     def values(self, now: Optional[float] = None) -> List[float]:
@@ -56,16 +85,19 @@ class LatencyWindow:
         median`` are dropped before ranking (robustness to cold-start
         storms; see MonitorConfig.outlier_mult).
         """
-        vals = sorted(self.values(now))
-        if not vals:
+        if now is not None:
+            self._evict(now)
+        vals = self._sorted_values()
+        n = len(vals)
+        if not n:
             return None
-        if outlier_mult > 0 and len(vals) >= 4:
-            med = vals[len(vals) // 2]
-            kept = [v for v in vals if v <= outlier_mult * med]
-            if kept:
-                vals = kept
+        if outlier_mult > 0 and n >= 4:
+            # kept == vals[:k] because vals is sorted; no list rebuild
+            k = bisect.bisect_right(vals, outlier_mult * vals[n // 2])
+            if k > 0:
+                n = k
         # Higher interpolation keeps the estimate conservative for SLOs.
-        rank = min(len(vals) - 1, max(0, math.ceil(q / 100.0 * len(vals)) - 1))
+        rank = min(n - 1, max(0, math.ceil(q / 100.0 * n) - 1))
         return vals[rank]
 
     def mean(self, now: Optional[float] = None) -> Optional[float]:
@@ -289,8 +321,9 @@ class SmartMonitor:
                     return v
         else:
             win = self._upstream.get(batch_size)
-            if win is not None and len(win.values(now)) >= cfg.min_samples:
-                v = win.percentile(self.sla.percentile, now,
+            if win is not None and win.count(now) >= cfg.min_samples:
+                # count(now) already evicted: query without re-evicting
+                v = win.percentile(self.sla.percentile,
                                    outlier_mult=cfg.outlier_mult)
                 if v is not None:
                     return v
@@ -299,7 +332,7 @@ class SmartMonitor:
     def _regression_estimate(self, batch_size: int, now: float) -> float:
         points: List[Tuple[float, float]] = []
         for bs, win in self._upstream.items():
-            if len(win.values(now)) > 0:
+            if win.count(now) > 0:
                 p = win.percentile(self.sla.percentile, now)
                 if p is not None:
                     points.append((float(bs), p))

@@ -72,12 +72,13 @@ class MLProxy:
 
     def next_event_time(self, now: float) -> Optional[float]:
         """Earliest future time at which :meth:`on_timer` must run."""
-        candidates = []
-        if self.scheduler.next_deadline is not None:
-            candidates.append(self.scheduler.next_deadline)
-        if self._started:
-            candidates.append(self.optimizer.next_update_time(now))
-        return min(candidates) if candidates else None
+        deadline = self.scheduler.queue.next_deadline
+        if not self._started:
+            return deadline
+        update = self.optimizer.next_update_time(now)
+        if deadline is None or update < deadline:
+            return update
+        return deadline
 
     def flush(self, now: float) -> None:
         self.scheduler.flush(now)

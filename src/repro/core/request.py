@@ -8,13 +8,18 @@ from typing import Any, List, Optional
 _req_counter = itertools.count()
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class Request:
-    """One inference request as seen by the proxy."""
+    """One inference request as seen by the proxy.
+
+    ``slots=True``: requests are created once per simulated arrival — on
+    million-request runs the per-instance dict is measurable in both time
+    and memory on the event-core hot path.
+    """
 
     arrival_time: float
     payload: Any = None
-    req_id: int = dataclasses.field(default_factory=lambda: next(_req_counter))
+    req_id: int = dataclasses.field(default_factory=_req_counter.__next__)
     # Routing key used by the multi-endpoint frontend (None on the
     # single-endpoint path).
     endpoint: Optional[str] = None
@@ -35,7 +40,7 @@ class Request:
         return self.dispatch_time - self.arrival_time
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class Batch:
     """A dispatched batch of requests."""
 

@@ -49,8 +49,10 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import heapq
 import itertools
 import math
+from functools import partial
 from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 import numpy as np
@@ -92,6 +94,8 @@ class PlatformConfig:
 
 class _Container:
     _ids = itertools.count()
+    __slots__ = ("cid", "ready_at", "terminated", "draining", "inflight",
+                 "attempts", "counted_ready", "in_heap")
 
     def __init__(self, ready_at: float) -> None:
         self.cid = next(_Container._ids)
@@ -100,6 +104,11 @@ class _Container:
         self.draining = False  # finish in-flight work then terminate
         self.inflight: int = 0
         self.attempts: List["_Attempt"] = []  # live attempts hosted here
+        # Bookkeeping for the O(1) counters / free-heap (see platform):
+        # counted_ready mirrors "ready and not draining" exactly as of the
+        # last state transition; in_heap marks membership in the free-heap.
+        self.counted_ready = False
+        self.in_heap = False
 
     def is_ready(self, now: float) -> bool:
         return not self.terminated and now >= self.ready_at
@@ -133,6 +142,8 @@ class _Attempt:
 
 class _WorkItem:
     _ids = itertools.count()
+    __slots__ = ("item_id", "batch", "submit_time", "done", "attempts",
+                 "hedges", "live", "queued")
 
     def __init__(self, batch: Batch, submit_time: float) -> None:
         self.item_id = next(_WorkItem._ids)
@@ -155,16 +166,31 @@ class ServerlessPlatform:
         events: EventQueue,
         rng: np.random.Generator,
         on_batch_done: Callable[[Batch, float, float], None],
+        fault_rng: Optional[np.random.Generator] = None,
     ) -> None:
-        """``on_batch_done(batch, upstream_latency, now)`` fires once per batch."""
+        """``on_batch_done(batch, upstream_latency, now)`` fires once per batch.
+
+        ``rng`` draws service times; ``fault_rng`` (defaulting to the same
+        stream) draws crash/straggler outcomes. The simulator passes two
+        spawned streams so fault injection cannot shift service-time draws
+        (and vice versa) when either path changes.
+        """
         self.config = config
         self.latency = latency_model
         self.events = events
         self.rng = rng
+        self.fault_rng = fault_rng if fault_rng is not None else rng
         self.on_batch_done = on_batch_done
 
         self.containers: List[_Container] = []
         self.pending: Deque[_WorkItem] = collections.deque()
+        # O(1) fleet counters (maintained at every container transition;
+        # replaces the per-event list scans that dominated large runs) and
+        # the cid-ordered heap of containers that may have a free slot.
+        self._n_provisioned = 0
+        self._n_billable = 0
+        self._n_ready = 0
+        self._free_heap: List[Tuple[int, _Container]] = []
         self._queued_count = 0  # live (not-done) items in ``pending``
         self._live_attempts = 0  # unresolved attempts across all containers
         self._open: Dict[int, _WorkItem] = {}  # item_id → not-yet-done item
@@ -220,7 +246,7 @@ class ServerlessPlatform:
         self._enqueue(item)
         # Reactive fast-path: Knative's activator pokes the autoscaler on
         # traffic from zero; model that by an immediate scale check.
-        if self._ready_count(now) == 0 and self._provisioned_count() == 0:
+        if self._n_ready == 0 and self._n_provisioned == 0:
             self._scale_to(max(1, self.config.min_scale), now)
         self._try_assign(now)
 
@@ -273,20 +299,41 @@ class ServerlessPlatform:
             c.attempts.remove(a)
         if not container_dead and not c.terminated:
             c.inflight = max(0, c.inflight - 1)
-            if c.draining and c.inflight == 0:
-                self._accrue_billing(now)
-                c.terminated = True
-                self._billing_last_n = self._billable_count()
+            if c.draining:
+                if c.inflight == 0:
+                    self._mark_terminated(c, now)
+            else:
+                self._heap_push(c)  # a slot just freed
 
     # ------------------------------------------------------------- internals
     def _provisioned_count(self) -> int:
-        return sum(1 for c in self.containers if not c.terminated and not c.draining)
+        return self._n_provisioned
 
     def _billable_count(self) -> int:
-        return sum(1 for c in self.containers if not c.terminated)
+        return self._n_billable
 
     def _ready_count(self, now: float) -> int:
-        return sum(1 for c in self.containers if c.is_ready(now) and not c.draining)
+        return self._n_ready
+
+    def _heap_push(self, c: _Container) -> None:
+        """Offer ``c`` to the free-heap (cid order == creation order, so
+        assignment prefers the oldest free container, as the old full scan
+        did). Entries are lazily invalidated on pop."""
+        if not c.in_heap and not c.terminated and not c.draining:
+            c.in_heap = True
+            heapq.heappush(self._free_heap, (c.cid, c))
+
+    def _mark_terminated(self, c: _Container, now: float) -> None:
+        """Centralized terminate transition: billing + counters."""
+        self._accrue_billing(now)
+        c.terminated = True
+        self._n_billable -= 1
+        if not c.draining:
+            self._n_provisioned -= 1
+        if c.counted_ready:
+            c.counted_ready = False
+            self._n_ready -= 1
+        self._billing_last_n = self._n_billable
 
     def _concurrency(self) -> float:
         # Ledger-derived: live attempts + queued live items. Items that
@@ -310,47 +357,81 @@ class ServerlessPlatform:
         delay = self.config.cold_start if cold else 0.0
         c = _Container(ready_at=now + delay)
         self.containers.append(c)
+        self._n_provisioned += 1
+        self._n_billable += 1
         if cold:
             self.cold_starts += 1
-            self.events.push(c.ready_at, self._on_container_ready)
-        self._billing_last_n = self._billable_count()
-        self.peak_containers = max(self.peak_containers, self._billable_count())
+            self.events.push(c.ready_at, partial(self._on_container_ready, c))
+        else:
+            c.counted_ready = True
+            self._n_ready += 1
+            self._heap_push(c)
+        self._billing_last_n = self._n_billable
+        if self._n_billable > self.peak_containers:
+            self.peak_containers = self._n_billable
 
-    def _on_container_ready(self, now: float) -> None:
+    def _on_container_ready(self, c: _Container, now: float) -> None:
+        if c.terminated:
+            return  # scaled down (or crashed) before it ever became ready
+        if not c.draining:
+            c.counted_ready = True
+            self._n_ready += 1
+            self._heap_push(c)
         self._try_assign(now)
 
     def _terminate(self, c: _Container, now: float) -> None:
-        self._accrue_billing(now)
         if c.inflight > 0:
-            c.draining = True  # terminates when its last live attempt resolves
+            # drains, then terminates when its last live attempt resolves
+            self._accrue_billing(now)
+            c.draining = True
+            self._n_provisioned -= 1
+            if c.counted_ready:
+                c.counted_ready = False
+                self._n_ready -= 1
+            self._billing_last_n = self._n_billable
         else:
-            c.terminated = True
-        self._billing_last_n = self._billable_count()
+            self._mark_terminated(c, now)
 
     def _try_assign(self, now: float) -> None:
         self._accrue_conc(now)
+        if self._queued_count == 0:
+            return
         conc = self.config.container_concurrency
-        for c in self.containers:
-            if self._queued_count == 0:
-                break
-            slots = c.available_slots(now, conc)
-            if slots <= 0:
+        heap = self._free_heap
+        pending = self.pending
+        # Containers that still have a free slot but whose slot no queued
+        # item may use (anti-affinity): parked aside, restored afterwards.
+        blocked: List[Tuple[int, _Container]] = []
+        while self._queued_count > 0 and heap:
+            cid_c = heap[0]
+            c = cid_c[1]
+            if c.terminated or c.draining or c.inflight >= conc:
+                heapq.heappop(heap)  # stale entry
+                c.in_heap = False
                 continue
             deferred: List[_WorkItem] = []
-            while slots > 0 and self.pending:
-                item = self.pending.popleft()
-                if not item.queued or item.done:
+            item = None
+            while pending:
+                it = pending.popleft()
+                if not it.queued or it.done:
                     continue  # stale deque entry; already resolved elsewhere
-                if any(a.container is c for a in item.live):
+                if any(a.container is c for a in it.live):
                     # anti-affinity: a hedge/retry must not land next to its
                     # own live sibling — it would share the sibling's fate
-                    deferred.append(item)
+                    deferred.append(it)
                     continue
-                self._mark_dequeued(item)
-                self._execute(c, item, now)
-                slots -= 1
-            for it in reversed(deferred):
-                self.pending.appendleft(it)
+                item = it
+                break
+            for d in reversed(deferred):
+                pending.appendleft(d)
+            if item is None:
+                heapq.heappop(heap)  # free, but unusable for this queue
+                blocked.append(cid_c)
+                continue
+            self._mark_dequeued(item)
+            self._execute(c, item, now)
+        for entry in blocked:
+            heapq.heappush(heap, entry)
 
     def _execute(self, c: _Container, item: _WorkItem, now: float) -> None:
         cfg = self.config
@@ -359,9 +440,10 @@ class ServerlessPlatform:
         service = self.latency.sample_batch(item.batch, self.rng)
         if cfg.ps_slowdown > 0 and c.inflight > 1:
             service *= 1.0 + cfg.ps_slowdown * (c.inflight - 1)
-        if cfg.straggler_prob > 0 and self.rng.random() < cfg.straggler_prob:
+        if cfg.straggler_prob > 0 and self.fault_rng.random() < cfg.straggler_prob:
             service *= cfg.straggler_mult
-        fail = cfg.failure_prob_per_batch > 0 and self.rng.random() < cfg.failure_prob_per_batch
+        fail = (cfg.failure_prob_per_batch > 0
+                and self.fault_rng.random() < cfg.failure_prob_per_batch)
         a = _Attempt(item, c, start=now, eta=now + service)
         item.live.append(a)
         c.attempts.append(a)
@@ -369,15 +451,15 @@ class ServerlessPlatform:
         if fail:
             # crash at a uniform point during service; every live attempt
             # on the container is requeued in _crash
-            a.eta = now + service * float(self.rng.random())
-            self.events.push(a.eta, lambda t, a=a: self._crash(a, t))
+            a.eta = now + service * float(self.fault_rng.random())
+            self.events.push(a.eta, partial(self._crash, a))
         else:
-            self.events.push(a.eta, lambda t, a=a: self._complete(a, t))
+            self.events.push(a.eta, partial(self._complete, a))
             if cfg.hedge_factor > 0 and item.hedges < cfg.max_hedges:
                 est = self.latency.mean_batch(item.batch)
                 self.events.push(
                     now + cfg.hedge_factor * est,
-                    lambda t, a=a: self._maybe_hedge(a, t),
+                    partial(self._maybe_hedge, a),
                 )
 
     def _maybe_hedge(self, a: _Attempt, now: float) -> None:
@@ -402,15 +484,13 @@ class ServerlessPlatform:
             return
         self._accrue_conc(now)
         self.failed_attempts += 1
-        self._accrue_billing(now)
-        c.terminated = True
+        self._mark_terminated(c, now)
         # resolve EVERY live attempt on the dead container — co-resident
         # batches crash with it and must be requeued, not leaked
         victims = list(c.attempts)
         for v in victims:
             self._resolve_attempt(v, now, container_dead=True)
         c.inflight = 0
-        self._billing_last_n = self._billable_count()
         for v in reversed(victims):  # appendleft keeps oldest-first order
             it = v.item
             if not it.done and not it.queued and not it.live:
@@ -500,16 +580,16 @@ class ServerlessPlatform:
     # ------------------------------------------------------------ autoscaler
     def _metric_tick(self, now: float) -> None:
         self._accrue_conc(now)
-        # prune terminated containers — _try_assign scans this list on every
-        # completion; without pruning long churny runs go quadratic
-        if len(self.containers) > 4 * max(self._provisioned_count(), 1):
+        # prune terminated containers — _scale_to and the crash path still
+        # walk this list; without pruning long churny runs leak memory
+        if len(self.containers) > 2 * max(self._n_provisioned, 1):
             self.containers = [c for c in self.containers if not c.terminated]
         self._conc_samples.append((now, self._conc_integral))
         cutoff = now - self.config.stable_window - 2 * self.config.metric_tick
         while self._conc_samples and self._conc_samples[0][0] < cutoff:
             self._conc_samples.popleft()
         self.timeline.append(
-            (now, self._billable_count(), self._ready_count(now), self._queued_count)
+            (now, self._n_billable, self._n_ready, self._queued_count)
         )
         self.events.push(now + self.config.metric_tick, self._metric_tick)
 

@@ -1,5 +1,21 @@
 """Arrival processes (the paper generates clients with a Poisson process
-modulated by real-world traces; §3.1, §3.5)."""
+modulated by real-world traces; §3.1, §3.5).
+
+Two APIs per process:
+
+* ``next_arrival(now, rng)`` — the original scalar protocol: the next
+  arrival strictly after ``now``, or ``None`` when the process is done.
+* ``next_arrivals(now, rng, horizon)`` — the vectorized protocol: every
+  arrival in the half-open window ``(now, now + horizon]`` as one numpy
+  array, presampled in blocks. Callers sweep contiguous windows
+  (successive calls advance ``now`` by exactly ``horizon``); processes may
+  keep internal state across windows (e.g. the MMPP2 modulating chain),
+  which :meth:`reset` clears before a fresh run.
+
+The simulator feeds its event loop from ``next_arrivals`` through a cursor
+(see ``repro.simulation.simulator._ArrivalPump``), which replaces one RNG
+call + one closure per request with one amortized numpy block draw.
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -9,12 +25,77 @@ import numpy as np
 
 from repro.simulation.traces import Trace
 
+_EMPTY = np.empty(0, dtype=np.float64)
+
+
+def _poisson_window(start: float, end: float, rate: float,
+                    rng: np.random.Generator) -> np.ndarray:
+    """All homogeneous-Poisson arrivals in ``(start, end]`` at ``rate``.
+
+    Draws exponential gaps in blocks sized to the expected count; the
+    overshoot draws past ``end`` are discarded (memorylessness makes the
+    restart at the next window boundary exact).
+    """
+    if rate <= 0 or end <= start:
+        return _EMPTY
+    chunks = []
+    t = start
+    while True:
+        n = max(16, int(rate * (end - t) * 1.2) + 8)
+        times = t + np.cumsum(rng.exponential(1.0 / rate, n))
+        last = float(times[-1])
+        if last > end:
+            chunks.append(times[: int(np.searchsorted(times, end, side="right"))])
+            break
+        chunks.append(times)
+        if last == end:
+            break
+        t = last
+    return chunks[0] if len(chunks) == 1 else np.concatenate(chunks)
+
 
 class ArrivalProcess:
-    """Protocol: next arrival strictly after ``now``, or None when done."""
+    """Protocol: scalar ``next_arrival`` plus vectorized ``next_arrivals``."""
 
     def next_arrival(self, now: float, rng: np.random.Generator) -> Optional[float]:
         raise NotImplementedError
+
+    def reset(self) -> None:
+        """Clear internal window-sweep state before a fresh run.
+
+        Subclasses with their own state (e.g. :class:`MMPP2`) must call
+        ``super().reset()`` or clear everything themselves.
+        """
+        self._pending = None  # overshoot buffer of the generic fallback
+
+    def next_arrivals(self, now: float, rng: np.random.Generator,
+                      horizon: float) -> np.ndarray:
+        """Every arrival in ``(now, now + horizon]`` as a float64 array.
+
+        Generic fallback loops the scalar API and buffers the one draw
+        that overshoots the window so no arrival is lost between windows;
+        subclasses override with true block sampling.
+        """
+        end = now + horizon
+        out = []
+        t = getattr(self, "_pending", None)
+        if t is not None:
+            self._pending = None
+            if t > end:
+                self._pending = t
+                return _EMPTY
+            out.append(t)
+        else:
+            t = now
+        while True:
+            t = self.next_arrival(out[-1] if out else t, rng)
+            if t is None:
+                break
+            if t > end:
+                self._pending = t  # carried into the next window
+                break
+            out.append(t)
+        return np.asarray(out, dtype=np.float64)
 
 
 @dataclasses.dataclass
@@ -30,6 +111,11 @@ class PoissonProcess(ArrivalProcess):
         t = now + rng.exponential(1.0 / self.rate)
         return t if t < self.duration else None
 
+    def next_arrivals(self, now: float, rng: np.random.Generator,
+                      horizon: float) -> np.ndarray:
+        return _poisson_window(now, min(now + horizon, self.duration),
+                               self.rate, rng)
+
 
 @dataclasses.dataclass
 class DeterministicProcess(ArrivalProcess):
@@ -42,6 +128,27 @@ class DeterministicProcess(ArrivalProcess):
         t = now + self.gap
         return t if t < self.duration else None
 
+    def next_arrivals(self, now: float, rng: np.random.Generator,
+                      horizon: float) -> np.ndarray:
+        # Arrivals sit on the exact lattice k*gap (k >= 1), computed
+        # directly so the sweep is stateless. This matches a scalar chain
+        # started at t=0 except at the duration boundary: when duration is
+        # an exact multiple of gap, the chain's accumulated rounding can
+        # land its last arrival a few ulps below duration, while the
+        # lattice correctly excludes k*gap == duration.
+        end = min(now + horizon, self.duration)
+        k0 = int(np.floor(now / self.gap)) + 1
+        while k0 * self.gap <= now:  # strictly after `now`
+            k0 += 1
+        k1 = int(np.floor(end / self.gap))
+        while k1 * self.gap > end:
+            k1 -= 1
+        if k1 * self.gap >= self.duration:  # duration boundary is exclusive
+            k1 -= 1
+        if k1 < k0:
+            return _EMPTY
+        return np.arange(k0, k1 + 1, dtype=np.float64) * self.gap
+
 
 @dataclasses.dataclass
 class TraceModulatedPoisson(ArrivalProcess):
@@ -49,7 +156,9 @@ class TraceModulatedPoisson(ArrivalProcess):
 
     λ(t) comes from a :class:`Trace`; proposals are generated at λ_max and
     accepted with probability λ(t)/λ_max — exact for piecewise-constant
-    rate profiles and O(1) per proposal.
+    rate profiles and O(1) per proposal. The vectorized path draws the
+    proposal gaps and acceptance uniforms in paired blocks and evaluates
+    λ(t) for the whole block with one searchsorted.
     """
 
     trace: Trace
@@ -67,13 +176,40 @@ class TraceModulatedPoisson(ArrivalProcess):
             if rng.random() * lam_max <= self.trace.rate_at(t):
                 return t
 
+    def next_arrivals(self, now: float, rng: np.random.Generator,
+                      horizon: float) -> np.ndarray:
+        lam_max = self.trace.max_rate
+        if lam_max <= 0:
+            return _EMPTY
+        end = min(now + horizon, float(self.trace.times[-1]))
+        accepted = []
+        t = now
+        while t < end:
+            n = max(16, int(lam_max * (end - t) * 1.2) + 8)
+            props = t + np.cumsum(rng.exponential(1.0 / lam_max, n))
+            u = rng.random(n)  # paired acceptance draws, same block order
+            cut = int(np.searchsorted(props, end, side="right"))
+            if cut:
+                within = props[:cut]
+                keep = u[:cut] * lam_max <= self.trace.rate_at_many(within)
+                accepted.append(within[keep])
+            last = float(props[-1])
+            if last >= end:
+                break
+            t = last
+        if not accepted:
+            return _EMPTY
+        return accepted[0] if len(accepted) == 1 else np.concatenate(accepted)
+
 
 @dataclasses.dataclass
 class MMPP2(ArrivalProcess):
     """2-state Markov-modulated Poisson process (bursty-load stress tests).
 
     State 0: rate ``rate_lo``; state 1: rate ``rate_hi``; exponential
-    sojourn times with means ``mean_lo`` / ``mean_hi``.
+    sojourn times with means ``mean_lo`` / ``mean_hi``. The modulating
+    chain is internal state that persists across windows; :meth:`reset`
+    rewinds it for a fresh run.
     """
 
     rate_lo: float
@@ -83,6 +219,10 @@ class MMPP2(ArrivalProcess):
     duration: float
     _state: int = 0
     _switch_at: Optional[float] = None
+
+    def reset(self) -> None:
+        self._state = 0
+        self._switch_at = None
 
     def next_arrival(self, now: float, rng: np.random.Generator) -> Optional[float]:
         t = now
@@ -102,3 +242,28 @@ class MMPP2(ArrivalProcess):
                 return None
             self._state ^= 1
             self._switch_at = None
+
+    def next_arrivals(self, now: float, rng: np.random.Generator,
+                      horizon: float) -> np.ndarray:
+        end = min(now + horizon, self.duration)
+        out = []
+        t = now
+        while t < end:
+            if self._switch_at is None:
+                mean = self.mean_lo if self._state == 0 else self.mean_hi
+                self._switch_at = t + rng.exponential(mean)
+            rate = self.rate_lo if self._state == 0 else self.rate_hi
+            seg_end = min(self._switch_at, end)
+            if rate > 0:
+                seg = _poisson_window(t, seg_end, rate, rng)
+                if len(seg):
+                    out.append(seg)
+            if self._switch_at <= end:
+                t = self._switch_at
+                self._state ^= 1
+                self._switch_at = None
+            else:
+                t = end
+        if not out:
+            return _EMPTY
+        return out[0] if len(out) == 1 else np.concatenate(out)

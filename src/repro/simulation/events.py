@@ -14,6 +14,8 @@ Callback = Callable[[float], None]
 
 
 class EventQueue:
+    __slots__ = ("_heap", "_seq")
+
     def __init__(self) -> None:
         self._heap = []
         self._seq = itertools.count()

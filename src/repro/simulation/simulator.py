@@ -20,12 +20,28 @@ Two drivers share the event machinery:
   :class:`~repro.serverless.platform.ServerlessPlatform` fleets (shared
   fleets use :class:`~repro.serverless.latency.EndpointRoutedLatency` to
   give each endpoint its own service-time model).
+
+Event-core design notes (the scale hot path):
+
+* Arrivals are presampled in numpy blocks through
+  :class:`_ArrivalPump` (one cursor per arrival process) instead of one
+  scalar RNG draw + closure per request.
+* The simulator RNG is split into three named spawned streams —
+  *arrivals*, *service*, *faults* — so block-sampling arrivals can never
+  reorder service-time or fault draws (one-time break in seed
+  compatibility with earlier revisions; per-seed determinism is
+  unaffected).
+* Policy timers are generation-stamped: superseded heap entries are
+  dropped on pop instead of spuriously invoking ``policy.on_timer``.
+* Completion metrics accumulate into growable float buffers
+  (:mod:`repro.simulation.stats`); the sampler's windowed P95 is a binary
+  search + vectorized percentile, not a rebuilt Python list.
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
 import math
+from functools import partial
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -37,6 +53,7 @@ from repro.serverless.latency import EndpointRoutedLatency, LatencyModel
 from repro.serverless.platform import PlatformConfig, ServerlessPlatform
 from repro.simulation.arrivals import ArrivalProcess
 from repro.simulation.events import EventQueue
+from repro.simulation.stats import CompletionLog
 
 
 @dataclasses.dataclass
@@ -57,12 +74,63 @@ class SimResult:
         return lat, ccdf
 
 
+class _ArrivalPump:
+    """Cursor over :meth:`ArrivalProcess.next_arrivals` windows.
+
+    Sweeps contiguous ``(clock, clock + horizon]`` windows, buffering each
+    block as plain Python floats; :meth:`next` hands out one arrival at a
+    time to the event loop. The horizon adapts so blocks stay in a
+    cache-friendly size band regardless of arrival rate.
+    """
+
+    __slots__ = ("proc", "rng", "end", "clock", "horizon", "buf", "idx")
+
+    _MIN_H, _MAX_H = 0.25, 512.0
+    _TARGET_LO, _TARGET_HI = 4096, 131072
+
+    def __init__(self, proc: ArrivalProcess, rng: np.random.Generator,
+                 duration: float, horizon: float = 8.0) -> None:
+        proc.reset()
+        self.proc = proc
+        self.rng = rng
+        self.end = duration
+        self.clock = 0.0
+        self.horizon = horizon
+        self.buf: List[float] = []
+        self.idx = 0
+
+    def next(self) -> Optional[float]:
+        idx = self.idx
+        buf = self.buf
+        while idx >= len(buf):
+            if self.clock >= self.end:
+                return None
+            h = min(self.horizon, self.end - self.clock)
+            block = self.proc.next_arrivals(self.clock, self.rng, h)
+            self.clock += h
+            n = len(block)
+            if n >= self._TARGET_HI:
+                self.horizon = max(self._MIN_H, self.horizon * 0.5)
+            elif n < self._TARGET_LO:
+                self.horizon = min(self._MAX_H, self.horizon * 2.0)
+            buf = block.tolist()
+            self.buf = buf
+            idx = 0
+        self.idx = idx + 1
+        return buf[idx]
+
+
 class _EventLoopDriver:
     """Timer wiring + run/flush/drain loop shared by both simulators.
 
     Subclasses provide ``events``/``now``/``duration``/``drain_grace`` and
     :meth:`_control` returning the Policy-like front object
     (``next_event_time``/``on_timer``/``flush``).
+
+    Policy timers are generation-stamped: every (re)schedule bumps
+    ``_timer_gen`` and the stamped value rides the heap entry, so an entry
+    superseded by an earlier reschedule is dropped on pop instead of
+    calling ``policy.on_timer`` at a stale deadline.
     """
 
     events: EventQueue
@@ -70,11 +138,15 @@ class _EventLoopDriver:
     duration: float
     drain_grace: float
     _timer_scheduled_at: Optional[float]
+    _timer_gen: int
+    events_processed: int
 
     def _control(self):
         raise NotImplementedError
 
-    def _on_policy_timer(self, now: float) -> None:
+    def _on_policy_timer(self, gen: int, now: float) -> None:
+        if gen != self._timer_gen:
+            return  # superseded heap entry: a later reschedule owns the timer
         self._timer_scheduled_at = None
         self._control().on_timer(now)
         self._reschedule_policy_timer(min_time=now + 1e-6)
@@ -88,15 +160,18 @@ class _EventLoopDriver:
         t = max(t, self.now, min_time)
         if self._timer_scheduled_at is None or t < self._timer_scheduled_at - 1e-12:
             self._timer_scheduled_at = t
-            self.events.push(t, self._on_policy_timer)
+            self._timer_gen += 1
+            self.events.push(t, partial(self._on_policy_timer, self._timer_gen))
 
     def _drive(self) -> float:
         """Run events through duration + drain grace, flushing queued
         batches at end-of-run; returns the hard-stop time."""
         hard_stop = self.duration + self.drain_grace
         flushed = False
-        while self.events:
-            t, fn = self.events.pop()
+        events = self.events
+        n_events = 0
+        while events:
+            t, fn = events.pop()
             if t > hard_stop:
                 break
             self.now = t
@@ -104,16 +179,35 @@ class _EventLoopDriver:
                 self._control().flush(self.now)
                 flushed = True
             fn(t)
+            n_events += 1
         if not flushed:
             self._control().flush(self.now)
         # drain remaining completions
-        while self.events:
-            t, fn = self.events.pop()
+        while events:
+            t, fn = events.pop()
             if t > hard_stop:
                 break
             self.now = t
             fn(t)
+            n_events += 1
+        self.events_processed += n_events
         return hard_stop
+
+
+def _spawn_streams(seed: int):
+    """(arrivals, service, faults) generators from one root seed.
+
+    Named spawned streams keep the three draw categories independent:
+    block-sampling arrivals consumes only the arrivals stream, so service
+    times and fault outcomes for a given seed do not shift when the
+    arrival path (or its chunking) changes.
+    """
+    arr_ss, svc_ss, fault_ss = np.random.SeedSequence(seed).spawn(3)
+    return (
+        np.random.default_rng(arr_ss),
+        np.random.default_rng(svc_ss),
+        np.random.default_rng(fault_ss),
+    )
 
 
 class Simulator(_EventLoopDriver):
@@ -141,24 +235,28 @@ class Simulator(_EventLoopDriver):
         self.drain_grace = drain_grace
         self.sample_interval = sample_interval
         self.p95_window = p95_window
-        self.rng = np.random.default_rng(seed)
+        self.rng_arrivals, self.rng, self.rng_faults = _spawn_streams(seed)
         self.events = EventQueue()
         self.now = 0.0
+        self.events_processed = 0
 
         self.platform = ServerlessPlatform(
             config=platform_config or PlatformConfig(),
             latency_model=workload,
             events=self.events,
             rng=self.rng,
+            fault_rng=self.rng_faults,
             on_batch_done=self._on_batch_done,
         )
         self.policy = make_policy(
             policy, sla, self._dispatch, **(policy_kwargs or {})
         )
 
-        self.completed: List[Request] = []
-        self._recent: collections.deque = collections.deque()  # (t_done, e2e)
+        self.completions = CompletionLog()
+        self._pump = _ArrivalPump(arrivals, self.rng_arrivals, duration)
+        self._on_arrival_cb = self._on_arrival  # bound once, reused per event
         self._timer_scheduled_at: Optional[float] = None
+        self._timer_gen = 0
         self._samples: List[dict] = []
 
     # --------------------------------------------------------------- wiring
@@ -167,17 +265,16 @@ class Simulator(_EventLoopDriver):
 
     def _on_batch_done(self, batch: Batch, upstream_latency: float, now: float) -> None:
         self.policy.on_response(batch, upstream_latency, now)
+        log = self.completions
         for r in batch.requests:
-            self.completed.append(r)
-            self._recent.append((now, r.e2e_latency))
+            log.append(now, now - r.arrival_time, r.arrival_time)
         self._reschedule_policy_timer()
 
     def _on_arrival(self, now: float) -> None:
-        req = Request(arrival_time=now)
-        self.policy.on_request(req, now)
-        nxt = self.arrivals.next_arrival(now, self.rng)
+        self.policy.on_request(Request(arrival_time=now), now)
+        nxt = self._pump.next()
         if nxt is not None:
-            self.events.push(nxt, self._on_arrival)
+            self.events.push(nxt, self._on_arrival_cb)
         self._reschedule_policy_timer()
 
     def _control(self):
@@ -185,16 +282,14 @@ class Simulator(_EventLoopDriver):
 
     # --------------------------------------------------------------- metrics
     def _on_sample(self, now: float) -> None:
-        cutoff = now - self.p95_window
-        while self._recent and self._recent[0][0] < cutoff:
-            self._recent.popleft()
-        lats = [l for (_, l) in self._recent]
-        p95 = float(np.percentile(lats, 95)) if lats else math.nan
-        miss = (
-            sum(1 for l in lats if l > self.sla.slo_target) / len(lats)
-            if lats
-            else math.nan
-        )
+        lats = self.completions.window(now - self.p95_window)
+        n = len(lats)
+        if n:
+            p95 = float(np.percentile(lats, 95))
+            miss = float(np.count_nonzero(lats > self.sla.slo_target)) / n
+        else:
+            p95 = math.nan
+            miss = math.nan
         self._samples.append(
             {
                 "t": now,
@@ -212,9 +307,9 @@ class Simulator(_EventLoopDriver):
 
     # ------------------------------------------------------------------ run
     def run(self) -> SimResult:
-        first = self.arrivals.next_arrival(0.0, self.rng)
+        first = self._pump.next()
         if first is not None:
-            self.events.push(first, self._on_arrival)
+            self.events.push(first, self._on_arrival_cb)
         self.events.push(0.0, self._on_sample)
         self.platform.start(0.0)
         if self.warmup > 0:
@@ -225,9 +320,11 @@ class Simulator(_EventLoopDriver):
         return self._result()
 
     def _result(self) -> SimResult:
-        done = [r for r in self.completed if r.arrival_time >= self.warmup]
-        e2e = np.asarray([r.e2e_latency for r in done], dtype=np.float64)
-        arr = np.asarray([r.arrival_time for r in done], dtype=np.float64)
+        all_e2e = self.completions.e2e.view()
+        all_arr = self.completions.arrival.view()
+        keep = all_arr >= self.warmup
+        e2e = all_e2e[keep]
+        arr = all_arr[keep]
         viol = float(np.mean(e2e > self.sla.slo_target)) if len(e2e) else 0.0
         pstats = self.policy.stats(self.now)
         billing_window = max(self.now, self.duration) - self.warmup
@@ -317,7 +414,9 @@ class MultiEndpointSimulator(_EventLoopDriver):
 
     Each endpoint has its own arrival process, SLA, policy, and (dedicated
     or shared) platform; the frontend merges every policy's timer into one
-    clock, exactly as a single proxy process would in production.
+    clock, exactly as a single proxy process would in production. Each
+    endpoint's arrival pump runs on its own spawned child of the arrivals
+    stream, so per-endpoint block sampling stays order-independent.
     """
 
     def __init__(
@@ -335,9 +434,12 @@ class MultiEndpointSimulator(_EventLoopDriver):
         self.duration = duration
         self.warmup = warmup
         self.drain_grace = drain_grace
-        self.rng = np.random.default_rng(seed)
+        arr_ss, svc_ss, fault_ss = np.random.SeedSequence(seed).spawn(3)
+        self.rng = np.random.default_rng(svc_ss)
+        self.rng_faults = np.random.default_rng(fault_ss)
         self.events = EventQueue()
         self.now = 0.0
+        self.events_processed = 0
 
         # platform groups: shared key → one fleet; None → dedicated fleet
         groups: Dict[str, List[str]] = {}
@@ -363,6 +465,7 @@ class MultiEndpointSimulator(_EventLoopDriver):
                 latency_model=latency,
                 events=self.events,
                 rng=self.rng,
+                fault_rng=self.rng_faults,
                 on_batch_done=self._on_batch_done,
             )
             for m in members:
@@ -379,8 +482,22 @@ class MultiEndpointSimulator(_EventLoopDriver):
                 policy_kwargs=spec.policy_kwargs,
             )
 
-        self.completed: Dict[str, List[Request]] = {n: [] for n in self.specs}
+        # one spawned arrivals stream + one pump + one reusable arrival
+        # callback per endpoint (registration order is deterministic)
+        arr_children = arr_ss.spawn(len(self.specs))
+        self._pumps: Dict[str, _ArrivalPump] = {}
+        self._arrival_cbs: Dict[str, partial] = {}
+        for (name, spec), child in zip(self.specs.items(), arr_children):
+            self._pumps[name] = _ArrivalPump(
+                spec.arrivals, np.random.default_rng(child), duration
+            )
+            self._arrival_cbs[name] = partial(self._on_arrival, name)
+
+        self.completions: Dict[str, CompletionLog] = {
+            n: CompletionLog() for n in self.specs
+        }
         self._timer_scheduled_at: Optional[float] = None
+        self._timer_gen = 0
 
     # --------------------------------------------------------------- wiring
     def _control(self):
@@ -388,24 +505,24 @@ class MultiEndpointSimulator(_EventLoopDriver):
 
     def _on_batch_done(self, batch: Batch, upstream_latency: float, now: float) -> None:
         self.frontend.on_response(batch, upstream_latency, now)
+        log = self.completions[batch.endpoint]
         for r in batch.requests:
-            self.completed[batch.endpoint].append(r)
+            log.append(now, now - r.arrival_time, r.arrival_time)
         self._reschedule_policy_timer()
 
     def _on_arrival(self, name: str, now: float) -> None:
-        req = Request(arrival_time=now, endpoint=name)
-        self.frontend.on_request(req, now)
-        nxt = self.specs[name].arrivals.next_arrival(now, self.rng)
+        self.frontend.on_request(Request(arrival_time=now, endpoint=name), now)
+        nxt = self._pumps[name].next()
         if nxt is not None:
-            self.events.push(nxt, lambda t, _n=name: self._on_arrival(_n, t))
+            self.events.push(nxt, self._arrival_cbs[name])
         self._reschedule_policy_timer()
 
     # ------------------------------------------------------------------ run
     def run(self) -> MultiSimResult:
-        for name, spec in self.specs.items():
-            first = spec.arrivals.next_arrival(0.0, self.rng)
+        for name in self.specs:
+            first = self._pumps[name].next()
             if first is not None:
-                self.events.push(first, lambda t, _n=name: self._on_arrival(_n, t))
+                self.events.push(first, self._arrival_cbs[name])
         for plat in self.platforms.values():
             plat.start(0.0)
             if self.warmup > 0:
@@ -422,8 +539,9 @@ class MultiEndpointSimulator(_EventLoopDriver):
         endpoints: Dict[str, Dict[str, float]] = {}
         latencies: Dict[str, np.ndarray] = {}
         for name, spec in self.specs.items():
-            done = [r for r in self.completed[name] if r.arrival_time >= self.warmup]
-            e2e = np.asarray([r.e2e_latency for r in done], dtype=np.float64)
+            log = self.completions[name]
+            keep = log.arrival.view() >= self.warmup
+            e2e = log.e2e.view()[keep]
             latencies[name] = e2e
             viol = float(np.mean(e2e > spec.sla.slo_target)) if len(e2e) else 0.0
             ep_stats = fstats["endpoints"][name]

@@ -59,6 +59,13 @@ class Trace:
         i = int(np.searchsorted(self.times, t, side="right")) - 1
         return float(self.rates[min(i, len(self.rates) - 1)])
 
+    def rate_at_many(self, t: np.ndarray) -> np.ndarray:
+        """Vectorized :meth:`rate_at` (thinning acceptance hot path)."""
+        t = np.asarray(t, dtype=np.float64)
+        idx = np.searchsorted(self.times, t, side="right") - 1
+        out = self.rates[np.clip(idx, 0, len(self.rates) - 1)]
+        return np.where((t >= self.times[0]) & (t < self.times[-1]), out, 0.0)
+
     def scaled(self, max_rps: float) -> "Trace":
         """Scale so the peak rate equals ``max_rps`` (paper §3.5)."""
         if self.max_rate <= 0:

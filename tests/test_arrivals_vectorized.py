@@ -1,0 +1,165 @@
+"""Statistical and exactness tests for the vectorized arrival paths.
+
+The block-sampling ``next_arrivals`` API must (a) reproduce each process's
+analytic rate within confidence bounds, (b) produce a strictly ordered
+in-range stream across window boundaries (including boundary-aligned
+lattices), and (c) stay bit-deterministic for a fixed seed.
+"""
+import numpy as np
+import pytest
+
+from repro.simulation.arrivals import (
+    ArrivalProcess,
+    DeterministicProcess,
+    MMPP2,
+    PoissonProcess,
+    TraceModulatedPoisson,
+)
+from repro.simulation.traces import Trace
+
+
+def sweep(proc, rng, duration, horizon):
+    """Drive contiguous (clock, clock+h] windows over [0, duration)."""
+    proc.reset()
+    out = []
+    clock = 0.0
+    while clock < duration:
+        h = min(horizon, duration - clock)
+        out.append(proc.next_arrivals(clock, rng, h))
+        clock += h
+    return np.concatenate(out) if out else np.empty(0)
+
+
+def scalar_chain(proc, rng):
+    proc.reset()
+    out = []
+    t = 0.0
+    while True:
+        t = proc.next_arrival(t, rng)
+        if t is None:
+            return np.asarray(out)
+        out.append(t)
+
+
+# ------------------------------------------------------------------ poisson
+def test_poisson_vectorized_rate_within_ci():
+    rate, duration = 50.0, 400.0
+    times = sweep(PoissonProcess(rate=rate, duration=duration),
+                  np.random.default_rng(0), duration, horizon=8.0)
+    expected = rate * duration
+    # 5-sigma band on a Poisson count
+    assert abs(len(times) - expected) < 5 * np.sqrt(expected)
+    assert np.all(np.diff(times) > 0)
+    assert times[0] > 0 and times[-1] < duration
+
+
+def test_poisson_rate_invariant_to_horizon():
+    rate, duration = 80.0, 200.0
+    for horizon in (0.5, 7.0, 200.0):
+        times = sweep(PoissonProcess(rate=rate, duration=duration),
+                      np.random.default_rng(1), duration, horizon)
+        expected = rate * duration
+        assert abs(len(times) - expected) < 5 * np.sqrt(expected)
+
+
+def test_poisson_deterministic_given_seed():
+    p = PoissonProcess(rate=40.0, duration=100.0)
+    a = sweep(p, np.random.default_rng(9), 100.0, 4.0)
+    b = sweep(p, np.random.default_rng(9), 100.0, 4.0)
+    np.testing.assert_array_equal(a, b)
+
+
+# ------------------------------------------------------------ deterministic
+def test_deterministic_vectorized_matches_scalar_chain():
+    proc = DeterministicProcess(gap=0.3, duration=10.0)
+    ref = scalar_chain(proc, np.random.default_rng(0))
+    for horizon in (1.0, 2.7, 10.0):
+        times = sweep(proc, np.random.default_rng(0), 10.0, horizon)
+        assert len(times) == len(ref)
+        np.testing.assert_allclose(times, ref, atol=1e-9)
+
+
+def test_deterministic_duration_boundary_is_exclusive():
+    # duration an exact multiple of gap: the arrival at k*gap == duration
+    # must be excluded (analytic count), even though the scalar chain's
+    # accumulated rounding may sneak its last arrival in a few ulps early
+    times = sweep(DeterministicProcess(gap=0.1, duration=10.0),
+                  np.random.default_rng(0), 10.0, horizon=4.0)
+    assert len(times) == 99  # 0.1 .. 9.9
+    assert times[-1] < 10.0
+
+
+def test_deterministic_boundary_aligned_window_keeps_arrival():
+    # gap divides the horizon: the arrival landing exactly on a window
+    # boundary must appear exactly once (half-open (now, now+h] windows)
+    times = sweep(DeterministicProcess(gap=0.5, duration=10.25),
+                  np.random.default_rng(0), 10.25, horizon=8.0)
+    assert len(times) == 20  # 0.5 .. 10.0
+    assert np.all(np.diff(times) > 0)
+    assert 8.0 in times.tolist()
+
+
+# -------------------------------------------------------------------- mmpp2
+def test_mmpp2_vectorized_rate_within_band():
+    duration = 400.0
+    proc = MMPP2(rate_lo=1.0, rate_hi=100.0, mean_lo=10.0, mean_hi=10.0,
+                 duration=duration)
+    times = sweep(proc, np.random.default_rng(0), duration, horizon=16.0)
+    # stationary mean rate = (1+100)/2; generous band (few sojourn cycles)
+    expected = 50.5 * duration
+    assert 0.6 * expected < len(times) < 1.4 * expected
+    assert np.all(np.diff(times) > 0)
+
+
+def test_mmpp2_reset_makes_sweeps_reproducible():
+    proc = MMPP2(rate_lo=5.0, rate_hi=50.0, mean_lo=5.0, mean_hi=5.0,
+                 duration=100.0)
+    a = sweep(proc, np.random.default_rng(3), 100.0, 8.0)
+    b = sweep(proc, np.random.default_rng(3), 100.0, 8.0)  # reset() in sweep
+    np.testing.assert_array_equal(a, b)
+
+
+# ----------------------------------------------------------------- thinning
+def test_thinning_vectorized_follows_trace():
+    tr = Trace(times=np.array([0.0, 100.0, 200.0]), rates=np.array([5.0, 50.0]))
+    times = sweep(TraceModulatedPoisson(tr), np.random.default_rng(0),
+                  200.0, horizon=16.0)
+    lo = int(np.count_nonzero(times < 100.0))
+    hi = len(times) - lo
+    assert lo == pytest.approx(500, rel=0.2)
+    assert hi == pytest.approx(5000, rel=0.1)
+    assert np.all(np.diff(times) > 0)
+
+
+def test_rate_at_many_matches_scalar():
+    tr = Trace(times=np.array([0.0, 10.0, 20.0]), rates=np.array([1.0, 3.0]))
+    ts = np.array([-1.0, 0.0, 5.0, 10.0, 15.0, 19.999, 20.0, 25.0])
+    np.testing.assert_array_equal(
+        tr.rate_at_many(ts), [tr.rate_at(float(t)) for t in ts]
+    )
+
+
+# --------------------------------------------------------- generic fallback
+class _ScalarOnly(ArrivalProcess):
+    """Process that implements only the scalar API (third-party shape)."""
+
+    def __init__(self, gap, duration):
+        self.gap, self.duration = gap, duration
+
+    def next_arrival(self, now, rng):
+        t = now + self.gap
+        return t if t < self.duration else None
+
+
+def test_generic_fallback_buffers_overshoot_across_windows():
+    proc = _ScalarOnly(gap=1.3, duration=20.0)
+    ref = scalar_chain(proc, np.random.default_rng(0))
+    times = sweep(proc, np.random.default_rng(0), 20.0, horizon=1.0)
+    np.testing.assert_allclose(times, ref, atol=1e-12)
+
+
+def test_generic_fallback_reset_clears_pending():
+    proc = _ScalarOnly(gap=1.5, duration=10.0)
+    first = sweep(proc, np.random.default_rng(0), 10.0, horizon=1.0)
+    second = sweep(proc, np.random.default_rng(0), 10.0, horizon=1.0)
+    np.testing.assert_array_equal(first, second)

@@ -153,3 +153,57 @@ def test_p2_estimator_backend():
         mon.record_upstream(3, x, now=float(i))
     emp = sorted(xs)[int(0.95 * len(xs))]
     assert mon.upstream_percentile(3, now=600.0) == pytest.approx(emp, rel=0.1)
+
+
+# --------------------------------------------------- sorted-cache coherence
+def _reference_percentile(pairs, q, now, horizon, outlier_mult=0.0):
+    """The pre-cache implementation: evict by horizon, full sort per call."""
+    vals = sorted(v for (t, v) in pairs if t >= now - horizon)
+    if not vals:
+        return None
+    if outlier_mult > 0 and len(vals) >= 4:
+        med = vals[len(vals) // 2]
+        kept = [v for v in vals if v <= outlier_mult * med]
+        if kept:
+            vals = kept
+    rank = min(len(vals) - 1, max(0, math.ceil(q / 100.0 * len(vals)) - 1))
+    return vals[rank]
+
+
+def test_latency_window_cache_matches_reference_under_churn():
+    # interleaved add / horizon-evict / maxlen-evict / winsorized queries
+    # must agree with a from-scratch sort every time
+    rng = random.Random(7)
+    w = LatencyWindow(maxlen=16, horizon=5.0)
+    pairs = []
+    t = 0.0
+    for _ in range(3000):
+        t += rng.random() * 0.8
+        v = rng.random() * (10.0 if rng.random() < 0.1 else 1.0)
+        w.add(t, v)
+        pairs.append((t, v))
+        pairs = pairs[-16:]  # mirror maxlen
+        q = rng.choice([50.0, 90.0, 95.0, 99.0])
+        mult = rng.choice([0.0, 3.0, 5.0])
+        assert w.percentile(q, now=t, outlier_mult=mult) == \
+            _reference_percentile(pairs, q, t, 5.0, mult)
+
+
+def test_latency_window_cache_survives_maxlen_eviction():
+    w = LatencyWindow(maxlen=4, horizon=1e9)
+    for i in range(4):
+        w.add(float(i), float(i))
+    assert w.percentile(100) == 3.0  # builds the cache
+    w.add(4.0, 10.0)  # deque evicts value 0.0; cache must drop it too
+    assert w.percentile(1) == 1.0
+    assert w.percentile(100) == 10.0
+    assert sorted(w.values()) == [1.0, 2.0, 3.0, 10.0]
+
+
+def test_latency_window_count_evicts_like_values():
+    w = LatencyWindow(maxlen=100, horizon=10.0)
+    w.add(0.0, 1.0)
+    w.add(5.0, 2.0)
+    w.add(20.0, 3.0)
+    assert w.count(21.0) == 1
+    assert len(w) == 1
