@@ -1,0 +1,160 @@
+"""Sim↔live parity: the same trace + policy through both worlds.
+
+Every policy runs the SAME pre-sampled Poisson schedule twice:
+
+* **sim** — the discrete-event :class:`Simulator` with a *transparent*
+  platform (1 always-warm container, effectively unlimited concurrency,
+  no cold starts, no processor-sharing slowdown), so upstream latency is
+  exactly one service-time draw;
+* **live** — the asyncio runtime (:mod:`repro.runtime`) with a
+  :class:`SyntheticTarget` on the same latency model, under a
+  deterministic :class:`FakeClock`.
+
+Both worlds make their own service-time draws from the same model, so the
+comparison is distributional: per-policy RT95, violation rate, and the
+cost proxies (dispatched upstream batches + average batch size — fewer,
+fuller batches ⇔ lower serverless cost) must agree within tolerance
+(documented in README: RT95 and dispatched-batches within ~10% at full
+scale, ~20% on --quick runs). A systematic gap means the runtime's timer/
+dispatch semantics diverged from the event-driven core.
+
+The second half exercises the calibration bridge round-trip: a live run
+with pow2 bucketing measures per-bucket batch latencies against a ground
+truth model; ``Calibration.from_samples`` fits them; the fitted model's
+simulated draws (the exact ``sample`` call the platform makes) must
+reproduce the measured means within 10% per bucket, and a second live run
+against the *fitted* model must land its bucket means within tolerance of
+the original measurement.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core import SLAConfig, ms
+from repro.runtime import Calibration, run_replay
+from repro.serverless.latency import get_workload
+from repro.serverless.platform import PlatformConfig
+from repro.simulation.arrivals import PoissonProcess, Schedule, sample_schedule
+from repro.simulation.simulator import run_simulation
+
+from benchmarks.common import write_csv
+
+POLICIES = ("passthrough", "static", "clipper", "oracle", "mlproxy")
+
+#: Platform config that makes the simulated upstream a pure service-time
+#: delay (the synthetic target's exact semantics): one always-warm
+#: container with effectively unlimited concurrency and no PS slowdown.
+TRANSPARENT_PLATFORM = PlatformConfig(
+    container_concurrency=10**6,
+    cold_start=0.0,
+    min_scale=1,
+    max_scale=1,
+    initial_scale=1,
+    ps_slowdown=0.0,
+    scale_to_zero_grace=1e12,
+)
+
+
+def _rel_delta_pct(live: float, sim: float) -> float:
+    denom = max(abs(sim), 1e-12)
+    return 100.0 * abs(live - sim) / denom
+
+
+def parity_rows(duration: float, seed: int) -> List[Dict]:
+    wl = get_workload("pytorch-fashion-mnist")
+    sla = SLAConfig(slo_target=ms(500))
+    times = sample_schedule(PoissonProcess(rate=30.0, duration=duration),
+                            seed, duration)
+    rows: List[Dict] = []
+    for policy in POLICIES:
+        kw = {}
+        if policy == "static":
+            kw = {"batch_size": 8, "timeout": 0.2}
+        elif policy == "oracle":
+            kw = {"latency_model": lambda bs: wl.percentile(bs, 95)}
+        sim = run_simulation(
+            policy=policy, sla=sla, workload=wl,
+            arrivals=Schedule(times), platform_config=TRANSPARENT_PLATFORM,
+            duration=duration, seed=seed, policy_kwargs=dict(kw),
+        )
+        live = run_replay(
+            policy=policy, sla=sla, workload=wl, arrivals=Schedule(times),
+            duration=duration, seed=seed, policy_kwargs=dict(kw),
+        )
+        s, l = sim.summary, live.summary
+        sim_batches = sim.policy_stats.get("dispatched_batches", 0.0)
+        rows.append({
+            "kind": "parity",
+            "policy": policy,
+            "requests": int(len(times)),
+            "sim_completed": s["completed"],
+            "live_completed": l["completed"],
+            "sim_p95_ms": round(s["p95"] * 1000, 2),
+            "live_p95_ms": round(l["p95"] * 1000, 2),
+            "rt95_delta_pct": round(_rel_delta_pct(l["p95"], s["p95"]), 2),
+            "sim_viol_pct": round(s["violation_pct"], 3),
+            "live_viol_pct": round(l["violation_pct"], 3),
+            "viol_delta_abs_pct": round(
+                abs(l["violation_pct"] - s["violation_pct"]), 3),
+            "sim_batches": sim_batches,
+            "live_batches": l["dispatched_batches"],
+            "batches_delta_pct": round(
+                _rel_delta_pct(l["dispatched_batches"], sim_batches), 2),
+            "sim_avg_bs": round(s["avg_batch_size"], 3),
+            "live_avg_bs": round(l["avg_batch_size"], 3),
+            "live_rejected": l["rejected"],
+            "live_lost": l["lost"],
+        })
+    return rows
+
+
+def calibration_rows(duration: float, seed: int) -> List[Dict]:
+    """Measure (live) → fit → simulate round-trip, per bucket."""
+    truth = get_workload("tfserving-mobilenet")
+    sla = SLAConfig(slo_target=ms(1000))
+    arrivals = PoissonProcess(rate=40.0, duration=duration)
+    live = run_replay(
+        policy="mlproxy", sla=sla, workload=truth, arrivals=arrivals,
+        duration=duration, seed=seed,
+        policy_kwargs={"bucketing": "pow2"},  # effective sizes = buckets
+    )
+    calib = Calibration.from_samples(live.bucket_samples, source="live:parity")
+    sim_errors = calib.roundtrip_errors(seed=seed)
+
+    # second live leg: replay against the FITTED model; its per-bucket
+    # means must land back on the original measurement
+    refit = run_replay(
+        policy="mlproxy", sla=sla, workload=calib.measured_model(),
+        arrivals=arrivals, duration=duration, seed=seed,
+        policy_kwargs={"bucketing": "pow2"},
+    )
+    rows: List[Dict] = []
+    for stat in calib.buckets:
+        refit_samples = refit.bucket_samples.get(stat.bucket)
+        refit_mean = (sum(refit_samples) / len(refit_samples)
+                      if refit_samples else float("nan"))
+        rows.append({
+            "kind": "calibration",
+            "bucket": stat.bucket,
+            "n_samples": stat.n,
+            "measured_mean_ms": round(stat.mean_s * 1000, 3),
+            "truth_mean_ms": round(truth.mean(stat.bucket) * 1000, 3),
+            "fit_affine_a_ms": round(calib.affine_a * 1000, 3),
+            "fit_affine_c_ms": round(calib.affine_c * 1000, 3),
+            "sim_roundtrip_err_pct": round(100 * sim_errors[stat.bucket], 2),
+            "refit_live_mean_ms": round(refit_mean * 1000, 3),
+        })
+    return rows
+
+
+def run(quick: bool = False) -> List[Dict]:
+    duration = 120.0 if quick else 600.0
+    rows = parity_rows(duration, seed=7)
+    rows += calibration_rows(60.0 if quick else 300.0, seed=7)
+    write_csv("live_parity.csv", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run(quick=True):
+        print(r)

@@ -52,6 +52,13 @@ BENCHES = {
     "policy_sweep": (
         "sweep",
         lambda rows: sum(r["lost"] + r["duplicates"] for r in rows)),
+    # sim vs live-runtime agreement; derived = worst mlproxy delta (%)
+    # across RT95 and the dispatched-batches cost proxy
+    "live_parity": (
+        "bench_live_parity",
+        lambda rows: max(max(r["rt95_delta_pct"], r["batches_delta_pct"])
+                         for r in rows
+                         if r["kind"] == "parity" and r["policy"] == "mlproxy")),
 }
 
 

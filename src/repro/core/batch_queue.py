@@ -69,6 +69,11 @@ class Policy(Protocol):
         """Current target batch size."""
         ...
 
+    @property
+    def queue_len(self) -> int:
+        """Pending requests queued (O(1); cheaper than ``stats()``)."""
+        ...
+
 
 class BatchQueue:
     """The shared queue/dispatch/bucketing/snapshot core under every policy.

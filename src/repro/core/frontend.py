@@ -86,6 +86,10 @@ class ProxyFrontend:
         return len(self._endpoints)
 
     # -------------------------------------------------------------- routing
+    def resolve(self, key: Optional[str]) -> Endpoint:
+        """Public routing lookup: endpoint for ``key`` (None ⇒ the only one)."""
+        return self._resolve(key)
+
     def _resolve(self, key: Optional[str]) -> Endpoint:
         if key is None:
             if len(self._endpoints) == 1:

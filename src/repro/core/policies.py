@@ -56,6 +56,10 @@ class BatchingPolicy:
 
     # -------- shared machinery --------------------------------------------
     @property
+    def queue_len(self) -> int:
+        return self.queue.queue_len
+
+    @property
     def next_deadline(self) -> Optional[float]:
         return self.queue.next_deadline
 

@@ -88,6 +88,10 @@ class MLProxy:
     def max_bs(self) -> int:
         return self.optimizer.max_bs
 
+    @property
+    def queue_len(self) -> int:
+        return self.scheduler.queue_len
+
     def stats(self, now: float) -> dict:
         return {
             "max_bs": self.optimizer.max_bs,

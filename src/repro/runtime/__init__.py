@@ -1,0 +1,35 @@
+"""Wall-clock asyncio serving runtime — the live mirror of the simulator.
+
+Layer map (README "Live runtime"): the same routing/policy/queue core the
+simulators drive (`ProxyFrontend` → `Policy` → `BatchQueue`) is driven
+here by real timers (:mod:`repro.runtime.clock`), real dispatch execution
+against pluggable targets (:mod:`repro.runtime.targets`), replayed
+arrival processes (:mod:`repro.runtime.loadgen`) and the sim↔real
+calibration bridge (:mod:`repro.runtime.calibrate`).
+"""
+from repro.runtime.calibrate import BucketStat, Calibration, measure_engine
+from repro.runtime.clock import Clock, FakeClock, WallClock, run
+from repro.runtime.loadgen import (LoadGenerator, ReplayResult, run_replay)
+from repro.runtime.server import (AsyncProxyServer, RequestTicket,
+                                  RuntimeConfig, clamp_policy_kwargs)
+from repro.runtime.targets import DispatchTarget, EngineTarget, SyntheticTarget
+
+__all__ = [
+    "AsyncProxyServer",
+    "BucketStat",
+    "Calibration",
+    "Clock",
+    "DispatchTarget",
+    "EngineTarget",
+    "FakeClock",
+    "LoadGenerator",
+    "ReplayResult",
+    "RequestTicket",
+    "RuntimeConfig",
+    "SyntheticTarget",
+    "WallClock",
+    "clamp_policy_kwargs",
+    "measure_engine",
+    "run",
+    "run_replay",
+]

@@ -1,0 +1,409 @@
+"""AsyncProxyServer — the wall-clock reverse-proxy runtime.
+
+This is the live counterpart of the discrete-event drivers in
+``simulation/simulator.py``: the same ONE batching core — a
+:class:`~repro.core.frontend.ProxyFrontend` routing over
+:class:`~repro.core.batch_queue.Policy` instances on the shared
+:class:`~repro.core.batch_queue.BatchQueue` — driven by real asyncio
+timers instead of a simulated event heap. Policies are clock-free
+(callers pass ``now``), so MLProxy and all four baselines run here
+**unmodified**; the runtime contributes only:
+
+* the **timer loop** — one task that sleeps until the frontend's merged
+  ``next_event_time`` (woken early by arrivals/completions/shutdown) and
+  fires ``on_timer``, exactly the role the simulator's generation-stamped
+  timer events play;
+* **dispatch execution** — every batch a policy dispatches becomes an
+  asyncio task awaiting a :class:`~repro.runtime.targets.DispatchTarget`;
+  the measured await time is the upstream latency fed back through
+  ``on_response`` (the paper's measured feedback loop);
+* **admission control / backpressure** — optional caps on per-endpoint
+  queue depth and total outstanding requests; excess submissions are
+  rejected at the door and accounted for;
+* **graceful drain** — ``drain()`` stops admissions, flushes every queue,
+  awaits in-flight work and asserts the runtime conservation invariant
+  (``submitted == completed + rejected``, zero lost — the live mirror of
+  the platform's ``assert_conserved``).
+
+All interaction with the server must happen on its event loop (asyncio is
+single-threaded; policies are not thread-safe).
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import math
+from typing import Dict, List, Optional, Set, Tuple
+
+import numpy as np
+
+from repro.core.config import SLAConfig
+from repro.core.frontend import ProxyFrontend
+from repro.core.request import Batch, Request
+from repro.runtime.clock import Clock, WallClock
+from repro.runtime.targets import DispatchTarget
+from repro.simulation.stats import CompletionLog
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeConfig:
+    """Knobs of the live runtime (all independent of any policy)."""
+
+    #: Per-endpoint pending-queue cap; a submission that would grow the
+    #: policy queue past this is rejected. 0 = unlimited.
+    max_queue: int = 0
+    #: Cap on outstanding requests (accepted, not yet completed) across
+    #: the whole server — the backpressure valve. 0 = unlimited.
+    max_outstanding: int = 0
+    #: Re-check cadence of the timer loop when no policy deadline is
+    #: pending (it is otherwise woken by arrivals/completions).
+    timer_idle: float = 1.0
+    #: Floor between consecutive timer firings; guards against a policy
+    #: whose ``next_event_time`` returns the same instant repeatedly
+    #: (mirrors the simulator driver's ``min_time`` guard).
+    min_timer_tick: float = 1e-6
+    #: How policy batch caps exceeding a target's ``max_batch`` are
+    #: handled at ``add_endpoint`` time: "clamp" rewrites the policy's cap
+    #: down to the largest bucket; "error" raises immediately.
+    oversize: str = "clamp"
+
+    def __post_init__(self) -> None:
+        if self.oversize not in ("clamp", "error"):
+            raise ValueError(f"unknown oversize mode {self.oversize!r}")
+
+
+class RequestTicket:
+    """Handle returned by :meth:`AsyncProxyServer.submit`.
+
+    ``future`` resolves when the request completes (or immediately, with
+    ``rejected=True``, when admission control turns it away).
+    """
+
+    __slots__ = ("request", "future", "rejected", "endpoint")
+
+    def __init__(self, request: Request, future: asyncio.Future,
+                 endpoint: str, rejected: bool = False) -> None:
+        self.request = request
+        self.future = future
+        self.endpoint = endpoint
+        self.rejected = rejected
+
+    @property
+    def e2e_latency(self) -> Optional[float]:
+        return self.request.e2e_latency
+
+
+def clamp_policy_kwargs(policy: str, policy_kwargs: Optional[dict],
+                        max_batch: int, mode: str = "clamp") -> dict:
+    """Reconcile a policy's batch-size cap with an engine bucket ceiling.
+
+    Policies dispatch up to their own cap (MLProxy's
+    ``OptimizerConfig.max_bs_cap``, the baselines' ``batch_size``/
+    ``max_cap``); a fixed-shape engine can only execute up to its largest
+    compiled bucket. ``mode="clamp"`` rewrites the cap down to
+    ``max_batch``; ``mode="error"`` raises so the mismatch fails at config
+    time. (Dispatch-time chunking in ``serving/batcher.py`` is the safety
+    net either way.)
+    """
+    kw = dict(policy_kwargs or {})
+
+    def resolve(current: int, what: str) -> int:
+        if current <= max_batch:
+            return current
+        if mode == "error":
+            raise ValueError(
+                f"{what} {current} exceeds the largest engine bucket "
+                f"{max_batch}; lower the cap or add buckets"
+            )
+        return max_batch
+
+    if policy == "mlproxy":
+        from repro.core.config import OptimizerConfig, ProxyConfig
+
+        pc: Optional[ProxyConfig] = kw.get("proxy_config")
+        opt: OptimizerConfig = (
+            pc.optimizer if pc is not None
+            else kw.get("optimizer") or OptimizerConfig()
+        )
+        cap = resolve(opt.max_bs_cap, "mlproxy max_bs_cap")
+        if cap != opt.max_bs_cap:
+            opt = dataclasses.replace(opt, max_bs_cap=cap,
+                                      initial_max_bs=min(opt.initial_max_bs, cap))
+            if pc is not None:
+                kw["proxy_config"] = dataclasses.replace(pc, optimizer=opt)
+            else:
+                kw["optimizer"] = opt
+    elif policy == "static":
+        if "batch_size" in kw:
+            kw["batch_size"] = resolve(kw["batch_size"], "static batch_size")
+    elif policy in ("clipper", "oracle"):
+        kw["max_cap"] = resolve(kw.get("max_cap", 256), f"{policy} max_cap")
+    return kw
+
+
+class AsyncProxyServer:
+    """Asyncio reverse proxy running the shared batching core live."""
+
+    def __init__(self, clock: Optional[Clock] = None,
+                 config: Optional[RuntimeConfig] = None) -> None:
+        self.clock = clock if clock is not None else WallClock()
+        self.config = config or RuntimeConfig()
+        self.frontend = ProxyFrontend()
+        self._targets: Dict[str, DispatchTarget] = {}
+
+        # conservation ledger
+        self.submitted = 0
+        self.completed = 0
+        self.rejected = 0
+        self.failed = 0  # target raised; requests resolved with the error
+        self._tickets: Dict[int, RequestTicket] = {}  # req_id → outstanding
+
+        # dispatch bookkeeping
+        self._batch_tasks: Set[asyncio.Task] = set()
+        self.inflight_batches = 0
+        #: (dispatch time, endpoint, size, effective size, cause) per batch
+        #: — the decision log the determinism tests replay.
+        self.dispatch_log: List[Tuple[float, str, int, int, str]] = []
+        #: per-endpoint {bucket → [measured upstream seconds]} — the raw
+        #: material of ``runtime/calibrate.py``.
+        self.bucket_samples: Dict[str, Dict[int, List[float]]] = {}
+        self.completions: Dict[str, CompletionLog] = {}
+
+        self._wake = asyncio.Event()
+        self._accepting = True
+        self._running = False
+        self._timer_task: Optional[asyncio.Task] = None
+
+    # ------------------------------------------------------------- topology
+    def add_endpoint(self, name: str, *, sla: SLAConfig,
+                     target: DispatchTarget, policy: str = "mlproxy",
+                     policy_kwargs: Optional[dict] = None) -> None:
+        """Register an endpoint backed by ``target``.
+
+        If the target declares a ``max_batch`` (fixed-shape engines), the
+        policy's batch-size cap is reconciled with it per
+        ``RuntimeConfig.oversize`` before the policy is built.
+        """
+        if target.max_batch is not None:
+            policy_kwargs = clamp_policy_kwargs(
+                policy, policy_kwargs, target.max_batch, self.config.oversize
+            )
+        self._targets[name] = target
+        self.completions[name] = CompletionLog()
+        self.bucket_samples[name] = {}
+
+        def dispatch(batch: Batch, _name: str = name) -> None:
+            self._on_dispatch(_name, batch)
+
+        self.frontend.add_endpoint(name, sla=sla, dispatch_fn=dispatch,
+                                   policy=policy, policy_kwargs=policy_kwargs)
+
+    # ------------------------------------------------------------ lifecycle
+    async def start(self) -> None:
+        if self._running:
+            return
+        self._running = True
+        self._accepting = True
+        self._timer_task = asyncio.get_running_loop().create_task(
+            self._timer_loop()
+        )
+
+    async def drain(self) -> None:
+        """Graceful shutdown: stop admissions, flush, await in-flight work.
+
+        On return the conservation invariant holds in its drained form:
+        every submitted request was completed (or rejected at the door),
+        nothing queued, nothing in flight, nothing lost.
+        """
+        self._accepting = False
+        self.frontend.flush(self.clock.now())
+        while self._batch_tasks:
+            await asyncio.gather(*list(self._batch_tasks),
+                                 return_exceptions=True)
+        self._running = False
+        self._wake.set()
+        if self._timer_task is not None:
+            await self._timer_task
+            self._timer_task = None
+        self.assert_conserved(require_drained=True)
+
+    # -------------------------------------------------------------- ingress
+    def submit(self, request: Optional[Request] = None, *,
+               endpoint: Optional[str] = None, payload=None) -> RequestTicket:
+        """Admit one request (event-loop thread only); returns its ticket."""
+        now = self.clock.now()
+        if request is None:
+            request = Request(arrival_time=now, payload=payload)
+        ep = self.frontend.resolve(endpoint or request.endpoint)
+        loop = asyncio.get_running_loop()
+        future: asyncio.Future = loop.create_future()
+        self.submitted += 1
+
+        cfg = self.config
+        outstanding = self.submitted - self.completed - self.rejected \
+            - self.failed - 1  # excluding this request
+        reject = (
+            not self._accepting
+            or (cfg.max_outstanding > 0 and outstanding >= cfg.max_outstanding)
+            or (cfg.max_queue > 0 and ep.policy.queue_len >= cfg.max_queue)
+        )
+        if reject:
+            self.rejected += 1
+            ticket = RequestTicket(request, future, ep.name, rejected=True)
+            future.set_result(ticket)
+            return ticket
+
+        ticket = RequestTicket(request, future, ep.name)
+        self._tickets[request.req_id] = ticket
+        self.frontend.on_request(request, now, endpoint=ep.name)
+        self._wake.set()  # deadline may have changed
+        return ticket
+
+    # ------------------------------------------------------------- dispatch
+    def _on_dispatch(self, name: str, batch: Batch) -> None:
+        """Policy handed us a batch (synchronously, on the loop thread)."""
+        now = self.clock.now()
+        self.dispatch_log.append(
+            (now, name, batch.size, batch.effective_size, batch.cause)
+        )
+        self.inflight_batches += 1
+        task = asyncio.get_running_loop().create_task(
+            self._run_batch(name, batch, now)
+        )
+        self._batch_tasks.add(task)
+        task.add_done_callback(self._batch_tasks.discard)
+
+    async def _run_batch(self, name: str, batch: Batch, t0: float) -> None:
+        target = self._targets[name]
+        error: Optional[BaseException] = None
+        try:
+            await target(batch)
+        except Exception as exc:  # noqa: BLE001 — resolved into tickets
+            error = exc
+        now = self.clock.now()
+        self.inflight_batches -= 1
+        if error is None:
+            latency = now - t0
+            self.frontend.on_response(batch, latency, now)
+            self.bucket_samples[name].setdefault(
+                batch.effective_size, []
+            ).append(latency)
+            log = self.completions[name]
+            for r in batch.requests:
+                log.append(now, now - r.arrival_time, r.arrival_time)
+                ticket = self._tickets.pop(r.req_id, None)
+                if ticket is not None and not ticket.future.done():
+                    ticket.future.set_result(ticket)
+            self.completed += batch.size
+        else:
+            for r in batch.requests:
+                ticket = self._tickets.pop(r.req_id, None)
+                if ticket is not None and not ticket.future.done():
+                    ticket.future.set_exception(error)
+            self.failed += batch.size
+        self._wake.set()
+
+    # ---------------------------------------------------------------- timer
+    async def _timer_loop(self) -> None:
+        cfg = self.config
+        while self._running:
+            now = self.clock.now()
+            self.frontend.on_timer(now)
+            nxt = self.frontend.next_event_time(now)
+            if nxt is None:
+                timeout: Optional[float] = cfg.timer_idle
+            else:
+                timeout = max(nxt - now, cfg.min_timer_tick)
+            await self.clock.wait(self._wake, timeout)
+            self._wake.clear()
+
+    # ---------------------------------------------------------- conservation
+    def conservation(self) -> dict:
+        queue_len = sum(
+            ep["queue_len"]
+            for ep in self.frontend.stats(self.clock.now())["endpoints"].values()
+        )
+        outstanding = len(self._tickets)
+        lost = (self.submitted - self.completed - self.rejected
+                - self.failed - outstanding)
+        return {
+            "submitted": self.submitted,
+            "completed": self.completed,
+            "rejected": self.rejected,
+            "failed": self.failed,
+            "outstanding": outstanding,
+            "queued": queue_len,
+            "inflight_batches": self.inflight_batches,
+            "lost": lost,
+        }
+
+    def assert_conserved(self, require_drained: bool = False) -> dict:
+        """Raise ``AssertionError`` on any broken runtime invariant.
+
+        Mirrors ``ServerlessPlatform.assert_conserved``: nothing lost at
+        any instant; with ``require_drained``, nothing outstanding either
+        (``submitted == completed + rejected``, zero failed).
+        """
+        c = self.conservation()
+        if c["lost"] != 0:
+            raise AssertionError(f"runtime lost requests: {c}")
+        if require_drained:
+            if c["outstanding"] or c["queued"] or c["inflight_batches"]:
+                raise AssertionError(f"undrained work at shutdown: {c}")
+            if c["failed"]:
+                raise AssertionError(f"failed dispatches at shutdown: {c}")
+            if c["submitted"] != c["completed"] + c["rejected"]:
+                raise AssertionError(f"conservation imbalance: {c}")
+        return c
+
+    # --------------------------------------------------------------- metrics
+    def summary(self) -> dict:
+        """Fleet summary with the same headline keys as ``SimResult``."""
+        now = self.clock.now()
+        fstats = self.frontend.stats(now)
+        per: Dict[str, dict] = {}
+        all_e2e: List[np.ndarray] = []
+        total_viol = 0.0
+        for name in self.frontend.names:
+            ep = self.frontend.endpoint(name)
+            e2e = self.completions[name].e2e.view()
+            all_e2e.append(e2e)
+            viol = (float(np.mean(e2e > ep.sla.slo_target))
+                    if len(e2e) else 0.0)
+            total_viol += viol * len(e2e)
+            st = fstats["endpoints"][name]
+            per[name] = {
+                "completed": float(len(e2e)),
+                "slo_target": ep.sla.slo_target,
+                "violation_rate": viol,
+                "violation_pct": 100.0 * viol,
+                "p50": float(np.percentile(e2e, 50)) if len(e2e) else math.nan,
+                "p95": float(np.percentile(e2e, 95)) if len(e2e) else math.nan,
+                "mean_latency": float(e2e.mean()) if len(e2e) else math.nan,
+                "avg_batch_size": st.get("avg_batch_size", 0.0),
+                "dispatched_batches": float(st.get("dispatched_batches", 0)),
+                "max_bs": float(st.get("max_bs", 1)),
+                "retry_rate": float(st.get("retry_rate", 0.0)),
+            }
+        e2e = np.concatenate(all_e2e) if all_e2e else np.empty(0)
+        n = len(e2e)
+        cons = self.conservation()
+        summary = {
+            "completed": float(n),
+            "violation_rate": total_viol / n if n else 0.0,
+            "violation_pct": 100.0 * total_viol / n if n else 0.0,
+            "p50": float(np.percentile(e2e, 50)) if n else math.nan,
+            "p95": float(np.percentile(e2e, 95)) if n else math.nan,
+            "p99": float(np.percentile(e2e, 99)) if n else math.nan,
+            "mean_latency": float(e2e.mean()) if n else math.nan,
+            "avg_batch_size": fstats["aggregate"]["avg_batch_size"],
+            "dispatched_batches": float(
+                fstats["aggregate"]["dispatched_batches"]
+            ),
+            "submitted": float(cons["submitted"]),
+            "rejected": float(cons["rejected"]),
+            "lost": float(cons["lost"]),
+            "throughput": n / now if now > 0 else 0.0,
+            "endpoints": per,
+        }
+        return summary

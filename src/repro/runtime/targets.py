@@ -1,0 +1,101 @@
+"""Dispatch targets — where the live runtime sends a dispatched batch.
+
+A target is an async callable ``await target(batch)``; the server measures
+the wall(-virtual) time around the await and that measurement IS the
+upstream latency the policy's monitor learns from (the paper's measured
+feedback loop, §2.2). Two implementations:
+
+* :class:`SyntheticTarget` — models the upstream with any
+  :class:`~repro.serverless.latency.LatencyModel`: samples a service time
+  (per the batch's endpoint-aware ``sample_batch`` hook) and sleeps it on
+  the runtime clock. An optional concurrency cap queues excess batches,
+  so queueing delay shows up in the measured latency exactly like the
+  platform's activator queue does in the simulator.
+* :class:`EngineTarget` — the real data plane: adapts
+  :class:`~repro.serving.batcher.ReplicaPoolTarget` (bucketed JAX
+  prefill/decode on a :class:`~repro.serving.engine.ReplicaPool`), running
+  the blocking engine call in a worker thread so the event loop keeps
+  serving arrivals while a batch computes.
+
+Both expose ``max_batch`` (None = unbounded) so the server can clamp a
+policy's batch-size cap to the largest engine bucket at *config* time
+instead of discovering the mismatch mid-dispatch.
+"""
+from __future__ import annotations
+
+import asyncio
+from typing import Optional
+
+import numpy as np
+
+from repro.core.request import Batch
+from repro.runtime.clock import Clock
+from repro.serverless.latency import LatencyModel
+
+
+class DispatchTarget:
+    """Protocol: awaitable batch executor with an optional size ceiling."""
+
+    #: Largest batch the target can execute in one call (None = unbounded).
+    max_batch: Optional[int] = None
+
+    async def __call__(self, batch: Batch) -> None:
+        raise NotImplementedError
+
+
+class SyntheticTarget(DispatchTarget):
+    """Async-sleep upstream parameterized by any :class:`LatencyModel`.
+
+    ``concurrency`` > 0 bounds simultaneous batch executions with a
+    semaphore (a fixed-size container fleet); the wait for a slot is part
+    of the measured upstream latency, mirroring platform-side queueing.
+    """
+
+    def __init__(self, latency_model: LatencyModel, clock: Clock,
+                 rng: Optional[np.random.Generator] = None,
+                 concurrency: int = 0) -> None:
+        self.latency = latency_model
+        self.clock = clock
+        self.rng = rng if rng is not None else np.random.default_rng(0)
+        self.concurrency = concurrency
+        self._sem = asyncio.Semaphore(concurrency) if concurrency > 0 else None
+        self.batches = 0
+        self.requests = 0
+
+    async def __call__(self, batch: Batch) -> None:
+        # Sample BEFORE awaiting the slot: service-time draws happen in
+        # dispatch order, so the stream stays deterministic under FakeClock
+        # regardless of how long slot waits interleave.
+        service = float(self.latency.sample_batch(batch, self.rng))
+        if self._sem is not None:
+            async with self._sem:
+                await self.clock.sleep(service)
+        else:
+            await self.clock.sleep(service)
+        self.batches += 1
+        self.requests += batch.size
+
+
+class EngineTarget(DispatchTarget):
+    """Real JAX engine upstream via :class:`ReplicaPoolTarget`.
+
+    The blocking pool call runs in ``asyncio``'s default thread-pool
+    executor (one batch at a time by default — a single host device is
+    serial anyway), keeping the proxy loop responsive. Oversized batches
+    are chunked by the pool target (see ``serving/batcher.py``), so a
+    policy whose cap exceeds the largest engine bucket degrades to
+    multiple engine calls instead of raising mid-dispatch.
+    """
+
+    def __init__(self, pool_target, max_concurrent: int = 1) -> None:
+        # `pool_target` is a ReplicaPoolTarget (imported lazily by callers
+        # so this module stays importable without JAX).
+        self.pool_target = pool_target
+        buckets = pool_target.pool.engine_cfg.batch_buckets
+        self.max_batch = max(buckets)
+        self._sem = asyncio.Semaphore(max_concurrent)
+
+    async def __call__(self, batch: Batch) -> None:
+        loop = asyncio.get_running_loop()
+        async with self._sem:
+            await loop.run_in_executor(None, self.pool_target, batch)

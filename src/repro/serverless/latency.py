@@ -82,6 +82,29 @@ class AffineLatency(LatencyModel):
     def mean(self, batch_size: int) -> float:
         return self.a + self.c * batch_size
 
+    @classmethod
+    def fit(cls, points: Sequence[Tuple[int, float]], *,
+            noise_cv: float = 0.0, name: str = "affine-fit") -> "AffineLatency":
+        """Least-squares fit of ``s(b) = a + c·b`` to (batch, seconds) points.
+
+        The calibration bridge (``repro.runtime.calibrate``) uses this to
+        turn measured per-bucket batch latencies — from a live runtime run
+        or ``bench_batch_scaling.py`` output — into simulator parameters.
+        Both coefficients are clamped non-negative (a negative overhead or
+        per-item cost is always a measurement artifact).
+        """
+        pts = [(float(b), float(s)) for b, s in points]
+        if not pts:
+            raise ValueError("AffineLatency.fit needs at least one point")
+        if len(pts) == 1:
+            return cls(a=max(0.0, pts[0][1]), c=0.0,
+                       noise_cv=noise_cv, name=name)
+        xs = np.asarray([b for b, _ in pts])
+        ys = np.asarray([s for _, s in pts])
+        c, a = np.polyfit(xs, ys, 1)
+        return cls(a=max(0.0, float(a)), c=max(0.0, float(c)),
+                   noise_cv=noise_cv, name=name)
+
 
 @dataclasses.dataclass
 class PowerLawLatency(LatencyModel):
@@ -138,6 +161,33 @@ class MeasuredLatency(LatencyModel):
         y0, y1 = ys[i - 1], ys[i]
         t = (batch_size - x0) / (x1 - x0)
         return y0 + t * (y1 - y0)
+
+    @classmethod
+    def from_samples(cls, samples: Dict[int, Sequence[float]], *,
+                     noise_cv: Optional[float] = None,
+                     name: str = "measured") -> "MeasuredLatency":
+        """Build from raw per-bucket latency samples (bucket → seconds list).
+
+        Each bucket's point is the sample mean; when ``noise_cv`` is None
+        it is estimated as the pooled coefficient of variation across
+        buckets (0.0 when every bucket has a single sample).
+        """
+        pts = []
+        cvs = []
+        for b, vals in sorted(samples.items()):
+            vals = [float(v) for v in vals]
+            if not vals:
+                continue
+            m = sum(vals) / len(vals)
+            pts.append((int(b), m))
+            if len(vals) >= 2 and m > 0:
+                var = sum((v - m) ** 2 for v in vals) / (len(vals) - 1)
+                cvs.append(math.sqrt(var) / m)
+        if not pts:
+            raise ValueError("MeasuredLatency.from_samples got no samples")
+        if noise_cv is None:
+            noise_cv = sum(cvs) / len(cvs) if cvs else 0.0
+        return cls(points=pts, noise_cv=noise_cv, name=name)
 
 
 class EndpointRoutedLatency(LatencyModel):

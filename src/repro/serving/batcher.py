@@ -40,25 +40,42 @@ class EngineBackedLatency(LatencyModel):
         self._ema: Dict[int, float] = {}
 
     def mean(self, batch_size: int) -> float:
-        bucket = next_bucket(batch_size, self.engine.ecfg.batch_buckets)
+        # clamp: estimation must stay total for any size the policy may
+        # probe (RT95[N_q+1] can exceed the largest compiled bucket); an
+        # oversized size executes as sequential largest-bucket chunks, so
+        # the estimate carries the same chunk factor as sample()
+        largest = self.engine.ecfg.batch_buckets[-1]
+        chunks = max(1, -(-batch_size // largest))
+        bucket = next_bucket(batch_size, self.engine.ecfg.batch_buckets,
+                             clamp=True)
         if bucket in self._ema:
-            return self._ema[bucket]
+            return chunks * self._ema[bucket]
         # never measured: optimistic estimate from the closest known bucket
         known = sorted(self._ema)
         if known:
-            return self._ema[known[-1]]
+            return chunks * self._ema[known[-1]]
         return 0.0
 
     def sample(self, batch_size: int, rng: np.random.Generator) -> float:
-        prompts = rng.integers(
-            0, self.engine.cfg.vocab_size,
-            size=(batch_size, self.prompt_len)).astype(np.int32)
-        _, timing = self.engine.generate(prompts, gen_len=self.gen_len)
-        bucket = timing["bucket"]
-        dt = timing["latency_s"]
-        prev = self._ema.get(bucket)
-        self._ema[bucket] = dt if prev is None else 0.8 * prev + 0.2 * dt
-        return dt
+        # Oversized sizes execute as sequential largest-bucket chunks —
+        # exactly what the dispatch path does — so the sampled latency is
+        # the real cost, not a mid-simulation ValueError.
+        largest = self.engine.ecfg.batch_buckets[-1]
+        total = 0.0
+        remaining = batch_size
+        while remaining > 0:
+            n = min(remaining, largest)
+            prompts = rng.integers(
+                0, self.engine.cfg.vocab_size,
+                size=(n, self.prompt_len)).astype(np.int32)
+            _, timing = self.engine.generate(prompts, gen_len=self.gen_len)
+            bucket = timing["bucket"]
+            dt = timing["latency_s"]
+            prev = self._ema.get(bucket)
+            self._ema[bucket] = dt if prev is None else 0.8 * prev + 0.2 * dt
+            total += dt
+            remaining -= n
+        return total
 
 
 class ReplicaPoolTarget:
@@ -98,7 +115,23 @@ class ReplicaPoolTarget:
 
     def __call__(self, batch: Batch):
         t0 = self.clock()
-        out, timing = self.pool.generate(self._prompts(batch), gen_len=self.gen_len)
+        prompts = self._prompts(batch)
+        largest = self.pool.engine_cfg.batch_buckets[-1]
+        if batch.size <= largest:
+            out, timing = self.pool.generate(prompts, gen_len=self.gen_len)
+        else:
+            # A batch larger than the largest compiled bucket executes as
+            # sequential largest-bucket chunks — the dispatch path never
+            # raises on a policy whose cap outruns the engine's buckets.
+            outs = []
+            timing = None
+            for lo in range(0, batch.size, largest):
+                o, timing = self.pool.generate(prompts[lo:lo + largest],
+                                               gen_len=self.gen_len)
+                outs.append(o)
+            out = np.concatenate(outs, axis=0)
+            timing = dict(timing)
+            timing["chunks"] = -(-batch.size // largest)
         latency = self.clock() - t0
         self.batches += 1
         self.requests += batch.size

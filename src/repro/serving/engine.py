@@ -21,10 +21,20 @@ from repro.configs.base import ModelConfig
 from repro.models.model import Model
 
 
-def next_bucket(n: int, buckets: Sequence[int]) -> int:
+def next_bucket(n: int, buckets: Sequence[int], clamp: bool = False) -> int:
+    """Smallest bucket holding ``n`` requests.
+
+    ``clamp=True`` returns the largest bucket for oversized ``n`` instead
+    of raising — for *estimation* paths (monitor latency queries, mean
+    lookups) that must stay total even when a policy's cap exceeds the
+    engine's compiled buckets. Execution paths keep the strict default and
+    chunk oversized batches instead (see ``serving/batcher.py``).
+    """
     for b in buckets:
         if n <= b:
             return b
+    if clamp:
+        return buckets[-1]
     raise ValueError(f"batch {n} exceeds largest bucket {buckets[-1]}")
 
 

@@ -203,6 +203,67 @@ class TraceModulatedPoisson(ArrivalProcess):
 
 
 @dataclasses.dataclass
+class Schedule(ArrivalProcess):
+    """Replays an explicit, pre-sampled array of arrival times.
+
+    The shared-workload primitive of the sim↔live bridge: sample any
+    stochastic process ONCE with :func:`sample_schedule`, then replay the
+    identical arrival instants through the discrete-event simulator and
+    the wall-clock runtime (``repro.runtime``), so both worlds serve the
+    same trace. Stateless and RNG-free — replaying never consumes draws.
+    """
+
+    times: np.ndarray
+
+    def __post_init__(self) -> None:
+        self.times = np.sort(np.asarray(self.times, dtype=np.float64))
+
+    @property
+    def duration(self) -> float:
+        return float(self.times[-1]) if len(self.times) else 0.0
+
+    def next_arrival(self, now: float, rng: np.random.Generator) -> Optional[float]:
+        i = int(np.searchsorted(self.times, now, side="right"))
+        return float(self.times[i]) if i < len(self.times) else None
+
+    def next_arrivals(self, now: float, rng: np.random.Generator,
+                      horizon: float) -> np.ndarray:
+        lo = int(np.searchsorted(self.times, now, side="right"))
+        hi = int(np.searchsorted(self.times, now + horizon, side="right"))
+        return self.times[lo:hi].copy()
+
+
+def sample_schedule(process: ArrivalProcess, rng, duration: float,
+                    horizon: float = 64.0) -> np.ndarray:
+    """Materialize every arrival of ``process`` over ``[0, duration)``.
+
+    ``rng`` is a seed or a ``numpy`` Generator. Sweeps contiguous
+    fixed-``horizon`` windows of the vectorized API; the draw follows the
+    process's distribution exactly, but the concrete instants for a given
+    seed differ from a ``Simulator`` run sampling the live process (its
+    arrival pump uses adaptive windows, and window boundaries change which
+    overshoot draws are discarded). To put the *identical* workload in
+    both worlds, sample once with this function and hand the same
+    :class:`Schedule` to both — which is what the parity bench does.
+    """
+    if not isinstance(rng, np.random.Generator):
+        rng = np.random.default_rng(rng)
+    process.reset()
+    chunks = []
+    t = 0.0
+    while t < duration:
+        h = min(horizon, duration - t)
+        block = process.next_arrivals(t, rng, h)
+        if len(block):
+            chunks.append(block)
+        t += h
+    if not chunks:
+        return _EMPTY.copy()
+    out = chunks[0] if len(chunks) == 1 else np.concatenate(chunks)
+    return out[out < duration]
+
+
+@dataclasses.dataclass
 class MMPP2(ArrivalProcess):
     """2-state Markov-modulated Poisson process (bursty-load stress tests).
 

@@ -555,6 +555,12 @@ class MultiEndpointSimulator(_EventLoopDriver):
                 "p50": float(np.percentile(e2e, 50)) if len(e2e) else math.nan,
                 "p95": float(np.percentile(e2e, 95)) if len(e2e) else math.nan,
                 "mean_latency": float(e2e.mean()) if len(e2e) else math.nan,
+                # per-endpoint retry accounting (platform-side crash
+                # retries + hedges observed through Batch.attempts); PR 2
+                # surfaced only the fleet aggregate
+                "upstream_batches": float(ep_stats.get("upstream_batches", 0)),
+                "retried_batches": float(ep_stats.get("retried_batches", 0)),
+                "retry_rate": float(ep_stats.get("retry_rate", 0.0)),
             }
         total_containers = sum(
             p.avg_containers(billing_window) for p in self.platforms.values()

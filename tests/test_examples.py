@@ -1,0 +1,53 @@
+"""Examples smoke tests — every ``examples/*.py`` main must keep running.
+
+ISSUE-4 satellite: PR 3's API changes (``completions`` replacing the
+removed ``completed`` list, named RNG streams) could have silently broken
+the examples because nothing executed them in CI. These tests run each
+example's ``main()`` in-process (tiny arguments where the script accepts
+them) so the next API change that breaks an example fails a test instead
+of a user. The JAX-backed examples are marked ``slow`` (compile-heavy);
+CI's fast subset deselects them with ``-m "not slow"``.
+"""
+import runpy
+import sys
+
+import pytest
+
+
+def _run_example(monkeypatch, capsys, name, argv=()):
+    monkeypatch.setattr(sys, "argv", [f"examples/{name}.py", *argv])
+    runpy.run_path(f"examples/{name}.py", run_name="__main__")
+    return capsys.readouterr().out
+
+
+def test_quickstart(monkeypatch, capsys):
+    out = _run_example(monkeypatch, capsys, "quickstart")
+    assert "MLProxy" in out and "avg containers" in out
+
+
+def test_multi_endpoint(monkeypatch, capsys):
+    out = _run_example(monkeypatch, capsys, "multi_endpoint")
+    assert "fleet:" in out
+    assert "iris-tight" in out and "resnet-loose" in out
+
+
+def test_live_runtime(monkeypatch, capsys):
+    out = _run_example(monkeypatch, capsys, "live_runtime",
+                       ["--duration", "2", "--rate", "40"])
+    assert "conservation" in out and "lost=0" in out
+    assert "calibration fit" in out
+
+
+@pytest.mark.slow
+def test_serve_engine(monkeypatch, capsys):
+    pytest.importorskip("jax")
+    out = _run_example(monkeypatch, capsys, "serve_engine",
+                       ["--duration", "3", "--rate", "20"])
+    assert "completed" in out and "real JAX batches" in out
+
+
+@pytest.mark.slow
+def test_fleet_controller(monkeypatch, capsys):
+    pytest.importorskip("jax")
+    out = _run_example(monkeypatch, capsys, "fleet_controller")
+    assert "timeout decisions" in out
