@@ -26,7 +26,8 @@ from repro.core.policies import make_policy
 from repro.serverless.latency import EndpointRoutedLatency, get_workload
 from repro.serverless.platform import PlatformConfig
 from repro.simulation.arrivals import PoissonProcess
-from repro.simulation.simulator import EndpointSpec, run_multi_simulation
+from repro.simulation.simulator import (EndpointSpec, MultiEndpointSimulator,
+                                        run_multi_simulation)
 
 SLA = SLAConfig(slo_target=1.0)
 
@@ -301,6 +302,40 @@ def test_multi_sim_deterministic_given_seed():
     b = run_multi_simulation(_two_endpoint_specs(False), duration=120.0, seed=5)
     assert a.summary == b.summary
     assert a.endpoints == b.endpoints
+
+
+def test_multi_sim_surfaces_per_endpoint_retry_rate():
+    """Per-endpoint retry accounting reaches both the frontend stats and
+    the multi-sim endpoint summaries (PR 2 plumbed only the aggregate)."""
+    specs = _two_endpoint_specs(shared=False)
+    # crash-prone fleet for iris only: its retries must show up under
+    # "iris" without leaking into "resnet"
+    specs["iris"] = EndpointSpec(
+        policy="mlproxy", sla=SLAConfig(slo_target=0.5),
+        workload=get_workload("sklearn-iris"),
+        arrivals=PoissonProcess(rate=40.0, duration=240.0),
+        platform_config=PlatformConfig(
+            initial_scale=2, failure_prob_per_batch=0.05),
+    )
+    sim = MultiEndpointSimulator(specs, duration=240.0, seed=3)
+    res = sim.run()
+    for name, s in res.endpoints.items():
+        assert {"retry_rate", "retried_batches", "upstream_batches"} <= set(s)
+    assert res.endpoints["iris"]["retried_batches"] > 0
+    assert 0.0 < res.endpoints["iris"]["retry_rate"] < 1.0
+    assert res.endpoints["resnet"]["retried_batches"] == 0.0
+
+    # the frontend's own per-endpoint stats carry the same numbers, and
+    # the aggregate is their batch-weighted combination
+    fstats = sim.frontend.stats(sim.now)
+    for name in specs:
+        ep = fstats["endpoints"][name]
+        assert ep["retry_rate"] == res.endpoints[name]["retry_rate"]
+    agg = fstats["aggregate"]
+    total_up = sum(fstats["endpoints"][n]["upstream_batches"] for n in specs)
+    total_re = sum(fstats["endpoints"][n]["retried_batches"] for n in specs)
+    assert agg["retried_batches"] == total_re
+    assert agg["retry_rate"] == pytest.approx(total_re / total_up)
 
 
 def test_routed_latency_requires_endpoint_stamp():
