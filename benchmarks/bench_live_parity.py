@@ -31,28 +31,20 @@ from __future__ import annotations
 from typing import Dict, List
 
 from repro.core import SLAConfig, ms
-from repro.runtime import Calibration, run_replay
+from repro.runtime import Calibration, RuntimeConfig, run_replay
 from repro.serverless.latency import get_workload
-from repro.serverless.platform import PlatformConfig
 from repro.simulation.arrivals import PoissonProcess, Schedule, sample_schedule
 from repro.simulation.simulator import run_simulation
 
-from benchmarks.common import write_csv
+from benchmarks.common import (parity_policy_kwargs, transparent_platform,
+                               write_csv)
 
 POLICIES = ("passthrough", "static", "clipper", "oracle", "mlproxy")
 
 #: Platform config that makes the simulated upstream a pure service-time
-#: delay (the synthetic target's exact semantics): one always-warm
-#: container with effectively unlimited concurrency and no PS slowdown.
-TRANSPARENT_PLATFORM = PlatformConfig(
-    container_concurrency=10**6,
-    cold_start=0.0,
-    min_scale=1,
-    max_scale=1,
-    initial_scale=1,
-    ps_slowdown=0.0,
-    scale_to_zero_grace=1e12,
-)
+#: delay (the synthetic target's exact semantics) — the ONE shared
+#: definition in benchmarks/common.py, also used by bench_deadlines.
+TRANSPARENT_PLATFORM = transparent_platform()
 
 
 def _rel_delta_pct(live: float, sim: float) -> float:
@@ -67,11 +59,7 @@ def parity_rows(duration: float, seed: int) -> List[Dict]:
                             seed, duration)
     rows: List[Dict] = []
     for policy in POLICIES:
-        kw = {}
-        if policy == "static":
-            kw = {"batch_size": 8, "timeout": 0.2}
-        elif policy == "oracle":
-            kw = {"latency_model": lambda bs: wl.percentile(bs, 95)}
+        kw = parity_policy_kwargs(policy, wl)
         sim = run_simulation(
             policy=policy, sla=sla, workload=wl,
             arrivals=Schedule(times), platform_config=TRANSPARENT_PLATFORM,
@@ -104,6 +92,61 @@ def parity_rows(duration: float, seed: int) -> List[Dict]:
             "live_avg_bs": round(l["avg_batch_size"], 3),
             "live_rejected": l["rejected"],
             "live_lost": l["lost"],
+        })
+    return rows
+
+
+def deadline_rows(duration: float, seed: int) -> List[Dict]:
+    """Deadline + proxy-hedge parity: the same schedule with TIGHT
+    per-request deadlines (budget = SLO/4, under the queue timeouts of
+    static/oracle/mlproxy so expiry actually fires) and hedging at p95
+    through both worlds.
+
+    Acceptance: ``timed_out`` counts agree EXACTLY for the deterministic
+    policies (passthrough / static / oracle — their dispatch decisions
+    depend only on the shared schedule) and within 1% of submitted
+    requests for mlproxy (whose timeout decisions depend on each world's
+    own service-time draws); hedged-batch counts likewise.
+    """
+    wl = get_workload("pytorch-fashion-mnist")
+    times = sample_schedule(PoissonProcess(rate=30.0, duration=duration),
+                            seed, duration)
+    rows: List[Dict] = []
+    for policy in POLICIES:
+        kw = parity_policy_kwargs(policy, wl)
+        sla = SLAConfig(slo_target=ms(500), deadline_factor=0.25)
+        sim = run_simulation(
+            policy=policy, sla=sla, workload=wl,
+            arrivals=Schedule(times), platform_config=TRANSPARENT_PLATFORM,
+            duration=duration, seed=seed, policy_kwargs=dict(kw),
+            hedge_quantile=95.0,
+        )
+        live = run_replay(
+            policy=policy, sla=sla, workload=wl, arrivals=Schedule(times),
+            duration=duration, seed=seed, policy_kwargs=dict(kw),
+            config=RuntimeConfig(hedge_quantile=95.0),
+        )
+        s, l = sim.summary, live.summary
+        n = max(1, len(times))
+        rows.append({
+            "kind": "deadline",
+            "policy": policy,
+            "requests": int(len(times)),
+            "sim_timed_out": s["timed_out"],
+            "live_timed_out": l["timed_out"],
+            # deltas as a % of submitted requests/dispatches — the scale
+            # the 1% acceptance tolerance is defined on
+            "timed_out_delta_pct": round(
+                100.0 * abs(l["timed_out"] - s["timed_out"]) / n, 3),
+            "sim_hedged": s["hedged_batches"],
+            "live_hedged": l["hedged_batches"],
+            "hedged_delta_pct": round(
+                100.0 * abs(l["hedged_batches"] - s["hedged_batches"])
+                / max(1.0, sim.policy_stats.get("dispatched_batches", 1.0)),
+                3),
+            "sim_completed": s["completed"],
+            "live_completed": l["completed"],
+            "live_lost": live.conservation["lost"],
         })
     return rows
 
@@ -150,6 +193,7 @@ def calibration_rows(duration: float, seed: int) -> List[Dict]:
 def run(quick: bool = False) -> List[Dict]:
     duration = 120.0 if quick else 600.0
     rows = parity_rows(duration, seed=7)
+    rows += deadline_rows(duration, seed=7)
     rows += calibration_rows(60.0 if quick else 300.0, seed=7)
     write_csv("live_parity.csv", rows)
     return rows

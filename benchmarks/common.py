@@ -10,6 +10,36 @@ OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
                        "results")
 
 
+def transparent_platform():
+    """Platform config that makes the simulated upstream a pure
+    service-time delay (the live SyntheticTarget's exact semantics): one
+    always-warm container, effectively unlimited concurrency, no cold
+    starts, no processor-sharing slowdown. Shared by every sim↔live
+    comparison bench so both worlds model the same upstream.
+    """
+    from repro.serverless.platform import PlatformConfig
+
+    return PlatformConfig(
+        container_concurrency=10**6,
+        cold_start=0.0,
+        min_scale=1,
+        max_scale=1,
+        initial_scale=1,
+        ps_slowdown=0.0,
+        scale_to_zero_grace=1e12,
+    )
+
+
+def parity_policy_kwargs(policy: str, workload) -> dict:
+    """The per-policy kwargs every parity-style bench uses (one shared
+    definition so sim, live, and sweep cells stay workload-equivalent)."""
+    if policy == "static":
+        return {"batch_size": 8, "timeout": 0.2}
+    if policy == "oracle":
+        return {"latency_model": lambda bs: workload.percentile(bs, 95)}
+    return {}
+
+
 def out_path(name: str) -> str:
     os.makedirs(OUT_DIR, exist_ok=True)
     return os.path.join(OUT_DIR, name)

@@ -59,6 +59,12 @@ BENCHES = {
         lambda rows: max(max(r["rt95_delta_pct"], r["batches_delta_pct"])
                          for r in rows
                          if r["kind"] == "parity" and r["policy"] == "mlproxy")),
+    # deadline tightness x policy x hedge sweep in both worlds; derived =
+    # conservation violations across every cell (0.0 or the deadline
+    # ledger is broken somewhere)
+    "deadlines": (
+        "bench_deadlines",
+        lambda rows: sum(r["violations"] for r in rows)),
 }
 
 

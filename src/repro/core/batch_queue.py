@@ -28,6 +28,15 @@ from repro.core.monitor import SmartMonitor
 from repro.core.request import Batch, Request
 
 DispatchFn = Callable[[Batch], None]
+#: Called with (expired_requests, now) whenever the expiry sweep evicts
+#: already-dead requests from the queue — the hook the live runtime uses
+#: to resolve their tickets with a DeadlineExceeded result.
+ExpireFn = Callable[[List[Request], float], None]
+
+#: Epsilon for "deadline has passed" checks, mirroring the timer-fire
+#: epsilon in the policies: a timer that wakes a float-ulp before the
+#: deadline must still count the request as expired.
+_EXPIRY_EPS = 1e-12
 
 
 @runtime_checkable
@@ -48,6 +57,13 @@ class Policy(Protocol):
 
     def on_timer(self, now: float) -> None:
         """Fire due timeouts / periodic updates."""
+
+    def expire(self, now: float) -> List[Request]:
+        """Evict queued requests whose deadline has passed; returns them.
+
+        O(1) when nothing is expirable — safe to call on admission paths
+        (e.g. before a queue-depth check counts dead requests)."""
+        ...
 
     def next_event_time(self, now: float) -> Optional[float]:
         """Earliest future time at which :meth:`on_timer` must run."""
@@ -91,15 +107,25 @@ class BatchQueue:
         dispatch_fn: DispatchFn,
         monitor: Optional[SmartMonitor] = None,
         bucketing: Optional[str] = None,
+        expire_fn: Optional[ExpireFn] = None,
     ) -> None:
         self.dispatch_fn = dispatch_fn
         self.monitor = monitor
         self.bucketing = bucketing
+        self.expire_fn = expire_fn
         self._queue: List[Request] = []
         self.first_arrival: Optional[float] = None
         self.next_deadline: Optional[float] = None
         self.dispatched_batches = 0
         self.dispatched_requests = 0
+        self.expired_requests = 0
+        # Deadline bookkeeping for the hot path: how many queued requests
+        # carry a deadline, and the earliest of them. Deadline-free
+        # workloads (the default) pay one integer check per sweep; with
+        # deadlines on, both the sweep and ``next_expiry`` are O(1)
+        # unless something actually expires.
+        self._deadline_count = 0
+        self._min_deadline: Optional[float] = None
 
     # ------------------------------------------------------------------ api
     def __len__(self) -> int:
@@ -114,6 +140,11 @@ class BatchQueue:
         if not self._queue:
             self.first_arrival = now
         self._queue.append(request)
+        if request.deadline is not None:
+            self._deadline_count += 1
+            if (self._min_deadline is None
+                    or request.deadline < self._min_deadline):
+                self._min_deadline = request.deadline
 
     def frt(self, now: float) -> float:
         """Age of the oldest queued request (0 when empty)."""
@@ -121,8 +152,70 @@ class BatchQueue:
             return 0.0
         return now - self.first_arrival
 
-    def _dispatch(self, now: float, cause: str) -> Batch:
-        """Dispatch the entire queue as one batch. The only implementation."""
+    # --------------------------------------------------------------- expiry
+    def expire(self, now: float) -> List[Request]:
+        """Evict queued requests whose deadline has already passed.
+
+        Expired requests are marked ``timed_out`` (terminal state), counted
+        in ``expired_requests``, and handed to ``expire_fn`` so the owner
+        (live server, simulator) can resolve them; they are never batched,
+        dispatched, or billed. Returns the evicted list (often empty).
+        """
+        cutoff = now + _EXPIRY_EPS
+        if self._min_deadline is None or self._min_deadline > cutoff:
+            return []  # O(1): nothing queued can have expired yet
+        expired = [r for r in self._queue
+                   if r.deadline is not None and r.deadline <= cutoff]
+        if not expired:
+            return expired
+        self._queue = [r for r in self._queue
+                       if r.deadline is None or r.deadline > cutoff]
+        self._deadline_count -= len(expired)
+        self._min_deadline = min(
+            (r.deadline for r in self._queue if r.deadline is not None),
+            default=None,
+        )
+        self.expired_requests += len(expired)
+        for r in expired:
+            r.timed_out = True
+        if self._queue:
+            # FIFO order: the head of the surviving queue is the oldest;
+            # re-anchor FRT on its arrival instant.
+            self.first_arrival = self._queue[0].arrival_time
+        else:
+            self.first_arrival = None
+            self.next_deadline = None
+        if self.expire_fn is not None:
+            self.expire_fn(expired, now)
+        return expired
+
+    def next_expiry(self) -> Optional[float]:
+        """Earliest queued deadline (None when no queued request has one)."""
+        return self._min_deadline
+
+    def next_event_time(self) -> Optional[float]:
+        """Merged wake-up: the earlier of the dispatch deadline and the
+        earliest request expiry (what every policy's ``next_event_time``
+        must report so the shared timer wakes for expiries too)."""
+        deadline = self.next_deadline
+        expiry = self._min_deadline
+        if deadline is None:
+            return expiry
+        if expiry is None:
+            return deadline
+        return min(deadline, expiry)
+
+    def _dispatch(self, now: float, cause: str) -> Optional[Batch]:
+        """Dispatch the entire queue as one batch. The only implementation.
+
+        Already-expired requests are evicted *before* batch formation; if
+        that empties the queue there is nothing to dispatch and ``None``
+        is returned (state already reset by the sweep).
+        """
+        if self._deadline_count:
+            self.expire(now)
+            if not self._queue:
+                return None
         batch = Batch(requests=self._queue, dispatch_time=now, cause=cause)
         if self.bucketing is not None:
             batch.bucket_size = bucket_of(batch.size, self.bucketing)
@@ -131,6 +224,8 @@ class BatchQueue:
         self._queue = []
         self.first_arrival = None
         self.next_deadline = None
+        self._deadline_count = 0
+        self._min_deadline = None
         self.dispatched_batches += 1
         self.dispatched_requests += batch.size
         if self.monitor is not None:
@@ -151,6 +246,7 @@ class BatchQueue:
             "next_deadline": self.next_deadline,
             "dispatched_batches": self.dispatched_batches,
             "dispatched_requests": self.dispatched_requests,
+            "expired_requests": self.expired_requests,
         }
 
     def restore(self, state: dict) -> None:
@@ -159,3 +255,8 @@ class BatchQueue:
         self.next_deadline = state["next_deadline"]
         self.dispatched_batches = state["dispatched_batches"]
         self.dispatched_requests = state["dispatched_requests"]
+        # pre-deadline snapshots carry no expiry state
+        self.expired_requests = state.get("expired_requests", 0)
+        deadlines = [r.deadline for r in self._queue if r.deadline is not None]
+        self._deadline_count = len(deadlines)
+        self._min_deadline = min(deadlines, default=None)

@@ -24,11 +24,18 @@ class SLAConfig:
       compliance_factor: internal threshold as a fraction of ``slo_target``
         used by the AIMD optimizer to trigger multiplicative decrease
         *before* the SLO itself is violated (paper: 0.8).
+      deadline_factor: per-request completion deadline as a multiple of
+        ``slo_target``. When set, every admitted request without a
+        client-supplied ``Request.deadline`` gets ``arrival +
+        slo_target × deadline_factor``; requests still queued past their
+        deadline are evicted (``timed_out``) instead of being batched,
+        dispatched and billed. ``None`` (default) disables deadlines.
     """
 
     slo_target: float
     percentile: float = 95.0
     compliance_factor: float = 0.8
+    deadline_factor: Optional[float] = None
 
     def __post_init__(self) -> None:
         if self.slo_target <= 0:
@@ -39,11 +46,22 @@ class SLAConfig:
             raise ValueError(
                 f"compliance_factor must be in (0, 1], got {self.compliance_factor}"
             )
+        if self.deadline_factor is not None and self.deadline_factor <= 0:
+            raise ValueError(
+                f"deadline_factor must be > 0 or None, got {self.deadline_factor}"
+            )
 
     @property
     def compliance_target(self) -> float:
         """The latency threshold the optimizer actually steers to."""
         return self.slo_target * self.compliance_factor
+
+    @property
+    def deadline_budget(self) -> Optional[float]:
+        """Per-request deadline budget in seconds (None = no deadline)."""
+        if self.deadline_factor is None:
+            return None
+        return self.slo_target * self.deadline_factor
 
 
 @dataclasses.dataclass(frozen=True)

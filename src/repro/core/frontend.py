@@ -22,7 +22,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Dict, List, Optional
 
-from repro.core.batch_queue import DispatchFn, Policy
+from repro.core.batch_queue import DispatchFn, ExpireFn, Policy
 from repro.core.config import SLAConfig
 from repro.core.request import Batch, Request
 
@@ -35,6 +35,11 @@ class Endpoint:
     policy: Policy
     sla: SLAConfig
     dispatch_fn: DispatchFn  # the unwrapped target (platform, pool, ...)
+
+    @property
+    def deadline_budget(self) -> Optional[float]:
+        """Per-request deadline budget in seconds (None = no deadlines)."""
+        return self.sla.deadline_budget
 
 
 class ProxyFrontend:
@@ -52,11 +57,16 @@ class ProxyFrontend:
         dispatch_fn: DispatchFn,
         policy: str = "mlproxy",
         policy_kwargs: Optional[dict] = None,
+        expire_fn: Optional[ExpireFn] = None,
     ) -> Endpoint:
         """Register an endpoint; ``policy`` is a :func:`make_policy` name.
 
         The policy's dispatch path is wrapped so every batch is stamped
         with the endpoint name before it reaches ``dispatch_fn``.
+        ``expire_fn(requests, now)`` (optional) fires whenever the
+        policy's queue evicts deadline-expired requests, so the caller
+        can resolve them (the live runtime completes their tickets with a
+        ``DeadlineExceeded`` result).
         """
         # deferred import: policies imports proxy which imports batch_queue
         from repro.core.policies import make_policy
@@ -70,7 +80,8 @@ class ProxyFrontend:
                 r.endpoint = _name
             _fn(batch)
 
-        pol = make_policy(policy, sla, stamped_dispatch, **(policy_kwargs or {}))
+        pol = make_policy(policy, sla, stamped_dispatch, expire_fn=expire_fn,
+                          **(policy_kwargs or {}))
         ep = Endpoint(name=name, policy=pol, sla=sla, dispatch_fn=dispatch_fn)
         self._endpoints[name] = ep
         return ep
@@ -107,9 +118,17 @@ class ProxyFrontend:
 
     def on_request(self, request: Request, now: float,
                    endpoint: Optional[str] = None) -> None:
-        """Route one arrival to its endpoint's policy."""
+        """Route one arrival to its endpoint's policy.
+
+        Admission is where deadlines attach: a client-supplied
+        ``request.deadline`` is honored as-is; otherwise, if the
+        endpoint's SLA sets ``deadline_factor``, the deadline is derived
+        here as ``now + slo_target × deadline_factor``.
+        """
         ep = self._resolve(endpoint or request.endpoint)
         request.endpoint = ep.name
+        if request.deadline is None and ep.deadline_budget is not None:
+            request.deadline = now + ep.deadline_budget
         ep.policy.on_request(request, now)
 
     def on_response(self, batch: Batch, upstream_latency: float, now: float) -> None:
@@ -149,6 +168,8 @@ class ProxyFrontend:
                 "queue_len": sum(s["queue_len"] for s in per.values()),
                 "dispatched_batches": agg_batches,
                 "dispatched_requests": agg_requests,
+                # deadline-expired requests evicted before dispatch
+                "expired": sum(s.get("expired", 0) for s in per.values()),
                 "avg_batch_size": agg_requests / agg_batches if agg_batches else 0.0,
                 # platform-side crash retries / hedges, observed through
                 # Batch.attempts on the completion path; rate is over

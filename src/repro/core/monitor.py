@@ -350,6 +350,21 @@ class SmartMonitor:
         lo = min(y for _, y in points)
         return max(est, 0.5 * lo, 0.0)
 
+    def bucket_quantile(self, batch_size: int, q: float, now: float,
+                        min_samples: int = 1) -> Optional[float]:
+        """Raw windowed quantile of one bucket's upstream latency.
+
+        Unlike :meth:`upstream_percentile` this never falls back to the
+        regression estimate and never winsorizes — it is the straggler
+        detector behind proxy-tier hedging, where the tail *is* the
+        signal. Returns None until the bucket has ``min_samples``
+        in-horizon observations (hedging stays off while cold).
+        """
+        win = self._upstream.get(batch_size)
+        if win is None or win.count(now) < max(1, min_samples):
+            return None
+        return win.percentile(q)
+
     def e2e_percentile(self, now: float) -> Optional[float]:
         return self._e2e.percentile(self.sla.percentile, now)
 

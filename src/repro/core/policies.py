@@ -29,11 +29,17 @@ from __future__ import annotations
 
 from typing import Callable, Optional
 
-from repro.core.batch_queue import BatchQueue
+from repro.core.batch_queue import BatchQueue, ExpireFn
 from repro.core.config import MonitorConfig, ProxyConfig, SLAConfig
 from repro.core.monitor import SmartMonitor
 from repro.core.proxy import MLProxy
 from repro.core.request import Batch, Request
+
+#: Default batch-size ceiling of the cap-carrying baselines (clipper /
+#: oracle). Module-level so config-time reconciliation against engine
+#: buckets (``runtime.server.clamp_policy_kwargs``) can tell "policy
+#: default" apart from "caller choice" without signature introspection.
+DEFAULT_MAX_CAP = 256
 
 
 class BatchingPolicy:
@@ -41,10 +47,12 @@ class BatchingPolicy:
 
     def __init__(self, sla: SLAConfig, dispatch_fn: Callable[[Batch], None],
                  monitor_config: Optional[MonitorConfig] = None,
-                 bucketing: Optional[str] = None) -> None:
+                 bucketing: Optional[str] = None,
+                 expire_fn: Optional[ExpireFn] = None) -> None:
         self.sla = sla
         self.monitor = SmartMonitor(monitor_config or MonitorConfig(), sla)
-        self.queue = BatchQueue(dispatch_fn, self.monitor, bucketing=bucketing)
+        self.queue = BatchQueue(dispatch_fn, self.monitor, bucketing=bucketing,
+                                expire_fn=expire_fn)
 
     # -------- subclass interface ------------------------------------------
     def target_batch_size(self, now: float) -> int:
@@ -72,6 +80,7 @@ class BatchingPolicy:
         return self.queue.dispatched_requests
 
     def on_request(self, request: Request, now: float) -> None:
+        self.queue.expire(now)  # evict dead requests before sizing the batch
         self.queue.append(request, now)
         if self.queue.queue_len >= max(1, self.target_batch_size(now)):
             self.queue._dispatch(now, "full")
@@ -89,6 +98,9 @@ class BatchingPolicy:
                 self.queue.next_deadline = deadline
 
     def on_timer(self, now: float) -> None:
+        # Expiry first: the merged timer also wakes for request expiries,
+        # which must never be batched into the timeout dispatch below.
+        self.queue.expire(now)
         if self.queue.next_deadline is not None and now + 1e-12 >= self.queue.next_deadline:
             if self.queue.queue_len:
                 self.queue._dispatch(now, "timeout")
@@ -102,8 +114,13 @@ class BatchingPolicy:
         for r in batch.requests:
             self.monitor.record_e2e(r.e2e_latency, now)
 
+    def expire(self, now: float):
+        """Evict deadline-expired queued requests (O(1) when none)."""
+        return self.queue.expire(now)
+
     def next_event_time(self, now: float) -> Optional[float]:
-        return self.queue.next_deadline
+        # dispatch deadline merged with the earliest request expiry
+        return self.queue.next_event_time()
 
     def flush(self, now: float) -> None:
         if self.queue.queue_len:
@@ -120,6 +137,7 @@ class BatchingPolicy:
             "dispatched_batches": self.queue.dispatched_batches,
             "dispatched_requests": self.queue.dispatched_requests,
             "avg_batch_size": self.queue.avg_batch_size,
+            "expired": self.queue.expired_requests,
             "e2e_p": self.monitor.e2e_percentile(now),
             "violation_rate": self.monitor.violation_rate(),
             "timeout_ratio": self.monitor.timeout_ratio(),
@@ -180,7 +198,7 @@ class ClipperAIMDPolicy(BatchingPolicy):
 
     def __init__(self, sla, dispatch_fn, inc: int = 1, dec_mult: float = 0.9,
                  update_interval: float = 10.0, timeout_frac: float = 0.25,
-                 max_cap: int = 256, **kw) -> None:
+                 max_cap: int = DEFAULT_MAX_CAP, **kw) -> None:
         super().__init__(sla, dispatch_fn, **kw)
         self.inc = inc
         self.dec_mult = dec_mult
@@ -216,8 +234,9 @@ class ClipperAIMDPolicy(BatchingPolicy):
         nxt = (self._last_update + self.update_interval
                if self._last_update is not None
                else now + self.update_interval)
-        if self.queue.next_deadline is not None:
-            return min(self.queue.next_deadline, nxt)
+        queue_next = self.queue.next_event_time()
+        if queue_next is not None:
+            return min(queue_next, nxt)
         return nxt
 
     def snapshot(self) -> dict:
@@ -237,7 +256,8 @@ class OracleStaticPolicy(BatchingPolicy):
     removes) and solves for the largest SLO-feasible batch size."""
 
     def __init__(self, sla, dispatch_fn, latency_model: Callable[[int], float],
-                 headroom: float = 0.9, max_cap: int = 256, **kw) -> None:
+                 headroom: float = 0.9, max_cap: int = DEFAULT_MAX_CAP,
+                 **kw) -> None:
         super().__init__(sla, dispatch_fn, **kw)
         self.latency_model = latency_model
         budget = sla.slo_target * headroom
@@ -257,17 +277,22 @@ class OracleStaticPolicy(BatchingPolicy):
         return self._to
 
 
-def make_policy(name: str, sla: SLAConfig, dispatch_fn, **kwargs):
-    """Factory used by the simulator, the frontend, and benchmarks."""
+def make_policy(name: str, sla: SLAConfig, dispatch_fn,
+                expire_fn: Optional[ExpireFn] = None, **kwargs):
+    """Factory used by the simulator, the frontend, and benchmarks.
+
+    ``expire_fn(requests, now)`` (optional) is invoked by the policy's
+    queue whenever the expiry sweep evicts already-dead requests.
+    """
     if name == "mlproxy":
         proxy_cfg = kwargs.pop("proxy_config", None) or ProxyConfig(sla=sla, **kwargs)
-        return MLProxy(proxy_cfg, dispatch_fn)
+        return MLProxy(proxy_cfg, dispatch_fn, expire_fn=expire_fn)
     if name == "passthrough":
-        return PassthroughPolicy(sla, dispatch_fn, **kwargs)
+        return PassthroughPolicy(sla, dispatch_fn, expire_fn=expire_fn, **kwargs)
     if name == "static":
-        return StaticBatchPolicy(sla, dispatch_fn, **kwargs)
+        return StaticBatchPolicy(sla, dispatch_fn, expire_fn=expire_fn, **kwargs)
     if name == "clipper":
-        return ClipperAIMDPolicy(sla, dispatch_fn, **kwargs)
+        return ClipperAIMDPolicy(sla, dispatch_fn, expire_fn=expire_fn, **kwargs)
     if name == "oracle":
-        return OracleStaticPolicy(sla, dispatch_fn, **kwargs)
+        return OracleStaticPolicy(sla, dispatch_fn, expire_fn=expire_fn, **kwargs)
     raise ValueError(f"unknown policy {name!r}")

@@ -24,6 +24,7 @@ from __future__ import annotations
 
 from typing import Callable, Optional
 
+from repro.core.batch_queue import ExpireFn
 from repro.core.config import ProxyConfig
 from repro.core.monitor import SmartMonitor
 from repro.core.optimizer import AIMDBatchOptimizer
@@ -34,7 +35,8 @@ from repro.core.scheduler import QueueScheduler
 class MLProxy:
     """Single-endpoint adaptive batching proxy (the paper's contribution)."""
 
-    def __init__(self, config: ProxyConfig, dispatch_fn: Callable[[Batch], None]) -> None:
+    def __init__(self, config: ProxyConfig, dispatch_fn: Callable[[Batch], None],
+                 expire_fn: Optional[ExpireFn] = None) -> None:
         self.config = config
         self.monitor = SmartMonitor(config.monitor, config.sla)
         self.optimizer = AIMDBatchOptimizer(config.optimizer, config.sla, self.monitor)
@@ -43,6 +45,7 @@ class MLProxy:
             monitor=self.monitor,
             dispatch_fn=dispatch_fn,
             max_bs_fn=lambda: self.optimizer.max_bs,
+            expire_fn=expire_fn,
         )
         self._started = False
 
@@ -71,14 +74,21 @@ class MLProxy:
         self.optimizer.maybe_update(now)
 
     def next_event_time(self, now: float) -> Optional[float]:
-        """Earliest future time at which :meth:`on_timer` must run."""
-        deadline = self.scheduler.queue.next_deadline
+        """Earliest future time at which :meth:`on_timer` must run.
+
+        Merges the dispatch deadline, the earliest queued-request expiry,
+        and the AIMD update tick."""
+        deadline = self.scheduler.queue.next_event_time()
         if not self._started:
             return deadline
         update = self.optimizer.next_update_time(now)
         if deadline is None or update < deadline:
             return update
         return deadline
+
+    def expire(self, now: float):
+        """Evict deadline-expired queued requests (O(1) when none)."""
+        return self.scheduler.queue.expire(now)
 
     def flush(self, now: float) -> None:
         self.scheduler.flush(now)
@@ -100,6 +110,7 @@ class MLProxy:
             "dispatched_batches": self.scheduler.dispatched_batches,
             "dispatched_requests": self.scheduler.dispatched_requests,
             "avg_batch_size": self.scheduler.queue.avg_batch_size,
+            "expired": self.scheduler.queue.expired_requests,
             "e2e_p": self.monitor.e2e_percentile(now),
             "violation_rate": self.monitor.violation_rate(),
             "timeout_ratio": self.monitor.timeout_ratio(),

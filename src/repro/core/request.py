@@ -23,6 +23,13 @@ class Request:
     # Routing key used by the multi-endpoint frontend (None on the
     # single-endpoint path).
     endpoint: Optional[str] = None
+    # Absolute completion deadline (same clock as ``arrival_time``).
+    # Client-supplied, or derived at admission from the endpoint's
+    # ``SLAConfig.deadline_factor``; ``None`` = no deadline. A request
+    # still queued past its deadline is evicted by the BatchQueue expiry
+    # sweep and ends in the ``timed_out`` terminal state.
+    deadline: Optional[float] = None
+    timed_out: bool = False
     # Filled in on completion:
     dispatch_time: Optional[float] = None
     completion_time: Optional[float] = None
@@ -38,6 +45,12 @@ class Request:
         if self.dispatch_time is None:
             return None
         return self.dispatch_time - self.arrival_time
+
+    def remaining_budget(self, now: float) -> Optional[float]:
+        """Seconds until the deadline (negative if past); None if no deadline."""
+        if self.deadline is None:
+            return None
+        return self.deadline - now
 
 
 @dataclasses.dataclass(slots=True)
@@ -67,6 +80,16 @@ class Batch:
     @property
     def oldest_arrival(self) -> float:
         return min(r.arrival_time for r in self.requests)
+
+    @property
+    def tightest_deadline(self) -> Optional[float]:
+        """Earliest member deadline — what the dispatch path propagates
+        upstream (None when no member carries a deadline)."""
+        deadline: Optional[float] = None
+        for r in self.requests:
+            if r.deadline is not None and (deadline is None or r.deadline < deadline):
+                deadline = r.deadline
+        return deadline
 
     def complete(self, completion_time: float) -> None:
         for r in self.requests:

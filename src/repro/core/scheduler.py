@@ -23,7 +23,7 @@ from __future__ import annotations
 
 from typing import Callable, Optional
 
-from repro.core.batch_queue import BatchQueue, DispatchFn
+from repro.core.batch_queue import BatchQueue, DispatchFn, ExpireFn
 from repro.core.config import ProxyConfig
 from repro.core.monitor import SmartMonitor
 from repro.core.request import Request
@@ -38,11 +38,13 @@ class QueueScheduler:
         monitor: SmartMonitor,
         dispatch_fn: DispatchFn,
         max_bs_fn: Callable[[], int],
+        expire_fn: Optional[ExpireFn] = None,
     ) -> None:
         self.config = config
         self.monitor = monitor
         self.max_bs_fn = max_bs_fn
-        self.queue = BatchQueue(dispatch_fn, monitor, bucketing=config.bucketing)
+        self.queue = BatchQueue(dispatch_fn, monitor, bucketing=config.bucketing,
+                                expire_fn=expire_fn)
 
     # ------------------------------------------------------------------ api
     @property
@@ -63,6 +65,7 @@ class QueueScheduler:
 
     def on_arrival(self, request: Request, now: float) -> None:
         """Handle one request arrival (lines 5–20 of Algorithm 1)."""
+        self.queue.expire(now)  # dead requests must not count toward Max_BS
         if self.queue.queue_len:
             # A pending timeout exists; arrival cancels and recomputes it.
             self.queue.next_deadline = None
@@ -85,7 +88,11 @@ class QueueScheduler:
             self.queue.next_deadline = now + to
 
     def on_timer(self, now: float) -> None:
-        """Fire the dispatch timeout if due (lines 21–24 of Algorithm 1)."""
+        """Fire the dispatch timeout if due (lines 21–24 of Algorithm 1).
+
+        The expiry sweep runs first: a timer may have been armed for a
+        request expiry rather than a dispatch deadline."""
+        self.queue.expire(now)
         if self.queue.next_deadline is None or now + 1e-12 < self.queue.next_deadline:
             return
         if self.queue.queue_len:

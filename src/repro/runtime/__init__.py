@@ -10,7 +10,8 @@ calibration bridge (:mod:`repro.runtime.calibrate`).
 from repro.runtime.calibrate import BucketStat, Calibration, measure_engine
 from repro.runtime.clock import Clock, FakeClock, WallClock, run
 from repro.runtime.loadgen import (LoadGenerator, ReplayResult, run_replay)
-from repro.runtime.server import (AsyncProxyServer, RequestTicket,
+from repro.runtime.server import (AsyncProxyServer, DeadlineExceeded,
+                                  DrainTimeout, RequestTicket,
                                   RuntimeConfig, clamp_policy_kwargs)
 from repro.runtime.targets import DispatchTarget, EngineTarget, SyntheticTarget
 
@@ -19,7 +20,9 @@ __all__ = [
     "BucketStat",
     "Calibration",
     "Clock",
+    "DeadlineExceeded",
     "DispatchTarget",
+    "DrainTimeout",
     "EngineTarget",
     "FakeClock",
     "LoadGenerator",

@@ -20,10 +20,21 @@ timers instead of a simulated event heap. Policies are clock-free
 * **admission control / backpressure** — optional caps on per-endpoint
   queue depth and total outstanding requests; excess submissions are
   rejected at the door and accounted for;
-* **graceful drain** — ``drain()`` stops admissions, flushes every queue,
-  awaits in-flight work and asserts the runtime conservation invariant
-  (``submitted == completed + rejected``, zero lost — the live mirror of
-  the platform's ``assert_conserved``).
+* **deadline enforcement** — requests carry an absolute deadline
+  (client-supplied or derived from the endpoint SLA); the shared
+  ``BatchQueue`` expiry sweep evicts dead requests before batch
+  formation, their tickets resolve with a :class:`DeadlineExceeded`
+  result, and the batch's tightest remaining deadline is propagated to
+  the dispatch target;
+* **proxy-tier straggler hedging** — a dispatched batch that exceeds the
+  configured quantile of its bucket's measured latency is re-issued to
+  the target; first completion wins and the loser is cancelled (the
+  proxy-side mirror of the platform's hedge ledger);
+* **graceful drain** — ``drain(timeout=...)`` stops admissions, flushes
+  every queue, awaits in-flight work (cancelling stragglers at the
+  timeout) and asserts the runtime conservation invariant
+  (``submitted == completed + rejected + timed_out + failed``, zero
+  lost — the live mirror of the platform's ``assert_conserved``).
 
 All interaction with the server must happen on its event loop (asyncio is
 single-threaded; policies are not thread-safe).
@@ -31,7 +42,9 @@ single-threaded; policies are not thread-safe).
 from __future__ import annotations
 
 import asyncio
+import contextlib
 import dataclasses
+import inspect
 import math
 from typing import Dict, List, Optional, Set, Tuple
 
@@ -43,6 +56,21 @@ from repro.core.request import Batch, Request
 from repro.runtime.clock import Clock, WallClock
 from repro.runtime.targets import DispatchTarget
 from repro.simulation.stats import CompletionLog
+
+
+class DeadlineExceeded(Exception):
+    """A request's deadline passed while it was still queued at the proxy.
+
+    Its ticket resolves normally (``ticket.timed_out`` is True and
+    ``ticket.error`` carries this exception); the request was never
+    dispatched or billed.
+    """
+
+
+class DrainTimeout(Exception):
+    """A dispatched batch was cancelled because ``drain(timeout=...)``
+    expired before its target completed; its requests are accounted as
+    ``failed`` and their tickets resolve with this error."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,20 +94,41 @@ class RuntimeConfig:
     #: handled at ``add_endpoint`` time: "clamp" rewrites the policy's cap
     #: down to the largest bucket; "error" raises immediately.
     oversize: str = "clamp"
+    #: Proxy-tier straggler hedging: a dispatched batch still unfinished
+    #: after the ``hedge_quantile``-th percentile of its bucket's measured
+    #: upstream latency is re-issued to the target; first completion wins,
+    #: the loser is cancelled. Percentile units (e.g. 95.0); <= 0 disables.
+    hedge_quantile: float = 0.0
+    #: Minimum in-window latency samples for a bucket before hedging arms
+    #: (a cold bucket has no trustworthy straggler threshold).
+    hedge_min_samples: int = 10
 
     def __post_init__(self) -> None:
         if self.oversize not in ("clamp", "error"):
             raise ValueError(f"unknown oversize mode {self.oversize!r}")
+        if self.hedge_quantile > 100 or 0 < self.hedge_quantile < 1:
+            # fractions like 0.95 would silently hedge at the bucket
+            # MINIMUM (rank ⌈0.0095·n⌉), doubling upstream load
+            raise ValueError(
+                f"hedge_quantile is in percentile units ((1, 100], e.g. "
+                f"95.0; <= 0 disables), got {self.hedge_quantile}"
+            )
+        if self.hedge_min_samples < 1:
+            raise ValueError("hedge_min_samples must be >= 1")
 
 
 class RequestTicket:
     """Handle returned by :meth:`AsyncProxyServer.submit`.
 
-    ``future`` resolves when the request completes (or immediately, with
-    ``rejected=True``, when admission control turns it away).
+    ``future`` resolves with the ticket when the request completes — or
+    immediately with ``rejected=True`` when admission control turns it
+    away, or with ``timed_out=True`` (and ``error`` set to a
+    :class:`DeadlineExceeded`) when the request's deadline expired while
+    it was still queued.
     """
 
-    __slots__ = ("request", "future", "rejected", "endpoint")
+    __slots__ = ("request", "future", "rejected", "endpoint", "timed_out",
+                 "error")
 
     def __init__(self, request: Request, future: asyncio.Future,
                  endpoint: str, rejected: bool = False) -> None:
@@ -87,6 +136,8 @@ class RequestTicket:
         self.future = future
         self.endpoint = endpoint
         self.rejected = rejected
+        self.timed_out = False
+        self.error: Optional[BaseException] = None
 
     @property
     def e2e_latency(self) -> Optional[float]:
@@ -137,7 +188,18 @@ def clamp_policy_kwargs(policy: str, policy_kwargs: Optional[dict],
         if "batch_size" in kw:
             kw["batch_size"] = resolve(kw["batch_size"], "static batch_size")
     elif policy in ("clipper", "oracle"):
-        kw["max_cap"] = resolve(kw.get("max_cap", 256), f"{policy} max_cap")
+        if "max_cap" in kw:
+            # the caller chose this cap: clamp or error per `mode`
+            kw["max_cap"] = resolve(kw["max_cap"], f"{policy} max_cap")
+        else:
+            # The caller never set a cap — the policy's own default
+            # applies. Lower it silently if it exceeds the engine bucket
+            # (a default is not a caller choice, so `mode="error"` must
+            # not raise, and clamping must never *raise* the cap).
+            from repro.core.policies import DEFAULT_MAX_CAP
+
+            if DEFAULT_MAX_CAP > max_batch:
+                kw["max_cap"] = max_batch
     return kw
 
 
@@ -150,13 +212,31 @@ class AsyncProxyServer:
         self.config = config or RuntimeConfig()
         self.frontend = ProxyFrontend()
         self._targets: Dict[str, DispatchTarget] = {}
+        self._target_takes_deadline: Dict[str, bool] = {}
 
-        # conservation ledger
+        # conservation ledger:
+        #   submitted == completed + rejected + timed_out + failed
+        #                + outstanding   (drained: outstanding == 0)
         self.submitted = 0
         self.completed = 0
         self.rejected = 0
+        self.timed_out = 0  # deadline expired while queued; never dispatched
         self.failed = 0  # target raised; requests resolved with the error
+        # Subset of `failed` that drain(timeout=) itself cancelled — the
+        # only failures a clean shutdown tolerates (any other failure at
+        # drain still trips assert_conserved, preserving the pre-deadline
+        # "buggy target cannot slip through drain()" signal).
+        self.drain_cancelled = 0
         self._tickets: Dict[int, RequestTicket] = {}  # req_id → outstanding
+
+        # active-window anchors for summary() throughput (the clock may
+        # predate the server, and summaries may run after idle gaps)
+        self._first_submit: Optional[float] = None
+        self._last_completion: Optional[float] = None
+
+        # proxy-tier straggler hedging
+        self.hedged_batches = 0  # duplicates issued
+        self.hedge_wins = 0      # duplicates that finished first
 
         # dispatch bookkeeping
         self._batch_tasks: Set[asyncio.Task] = set()
@@ -189,14 +269,29 @@ class AsyncProxyServer:
                 policy, policy_kwargs, target.max_batch, self.config.oversize
             )
         self._targets[name] = target
+        # Older/external targets may predate the ``deadline=`` parameter;
+        # probe once at config time instead of discovering mid-dispatch.
+        try:
+            params = inspect.signature(target.__call__).parameters
+            takes_deadline = ("deadline" in params or any(
+                p.kind is inspect.Parameter.VAR_KEYWORD
+                for p in params.values()))
+        except (TypeError, ValueError):
+            takes_deadline = False
+        self._target_takes_deadline[name] = takes_deadline
         self.completions[name] = CompletionLog()
         self.bucket_samples[name] = {}
 
         def dispatch(batch: Batch, _name: str = name) -> None:
             self._on_dispatch(_name, batch)
 
+        def expire(requests: List[Request], now: float,
+                   _name: str = name) -> None:
+            self._on_expired(_name, requests, now)
+
         self.frontend.add_endpoint(name, sla=sla, dispatch_fn=dispatch,
-                                   policy=policy, policy_kwargs=policy_kwargs)
+                                   policy=policy, policy_kwargs=policy_kwargs,
+                                   expire_fn=expire)
 
     # ------------------------------------------------------------ lifecycle
     async def start(self) -> None:
@@ -208,18 +303,29 @@ class AsyncProxyServer:
             self._timer_loop()
         )
 
-    async def drain(self) -> None:
+    async def drain(self, timeout: Optional[float] = None) -> None:
         """Graceful shutdown: stop admissions, flush, await in-flight work.
 
+        ``timeout`` (seconds on the runtime clock) bounds the wait for
+        in-flight batches: stragglers still running when it expires are
+        cancelled, their tickets resolve with a :class:`DrainTimeout`
+        error, and their requests are accounted as ``failed`` — a stuck
+        upstream can no longer hang the process. ``None`` waits
+        indefinitely (the pre-deadline behaviour).
+
         On return the conservation invariant holds in its drained form:
-        every submitted request was completed (or rejected at the door),
-        nothing queued, nothing in flight, nothing lost.
+        every submitted request was completed, rejected at the door,
+        timed out on its deadline, or failed — nothing queued, nothing in
+        flight, nothing lost.
         """
         self._accepting = False
         self.frontend.flush(self.clock.now())
-        while self._batch_tasks:
-            await asyncio.gather(*list(self._batch_tasks),
-                                 return_exceptions=True)
+        if timeout is None:
+            while self._batch_tasks:
+                await asyncio.gather(*list(self._batch_tasks),
+                                     return_exceptions=True)
+        else:
+            await self._drain_bounded(timeout)
         self._running = False
         self._wake.set()
         if self._timer_task is not None:
@@ -227,21 +333,64 @@ class AsyncProxyServer:
             self._timer_task = None
         self.assert_conserved(require_drained=True)
 
+    async def _drain_bounded(self, timeout: float) -> None:
+        """Await in-flight batches up to ``timeout``, then cancel the rest."""
+        # Let freshly created batch tasks take their first step so each
+        # one owns its bookkeeping before any cancellation can reach it.
+        await asyncio.sleep(0)
+        loop = asyncio.get_running_loop()
+
+        async def settle() -> None:
+            while self._batch_tasks:
+                await asyncio.gather(*list(self._batch_tasks),
+                                     return_exceptions=True)
+
+        waiter = loop.create_task(settle())
+        timer = loop.create_task(self.clock.sleep(timeout))
+        await asyncio.wait({waiter, timer},
+                           return_when=asyncio.FIRST_COMPLETED)
+        if waiter.done():
+            await self._cancel(timer)
+            return
+        await self._cancel(waiter)
+        stragglers = list(self._batch_tasks)
+        for t in stragglers:
+            t.cancel()
+        # _run_batch converts the cancellation into failed-accounting and
+        # finishes normally; gather collects stragglers either way.
+        await asyncio.gather(*stragglers, return_exceptions=True)
+
     # -------------------------------------------------------------- ingress
     def submit(self, request: Optional[Request] = None, *,
                endpoint: Optional[str] = None, payload=None) -> RequestTicket:
-        """Admit one request (event-loop thread only); returns its ticket."""
+        """Admit one request (event-loop thread only); returns its ticket.
+
+        Raises ``ValueError`` if ``request.req_id`` is already
+        outstanding: silently overwriting the old ticket would leak a
+        never-resolving future and break the conservation ledger.
+        """
         now = self.clock.now()
         if request is None:
             request = Request(arrival_time=now, payload=payload)
+        elif request.req_id in self._tickets:
+            raise ValueError(
+                f"request {request.req_id} is already outstanding; "
+                "submit a fresh Request per attempt"
+            )
         ep = self.frontend.resolve(endpoint or request.endpoint)
         loop = asyncio.get_running_loop()
         future: asyncio.Future = loop.create_future()
         self.submitted += 1
+        if self._first_submit is None:
+            self._first_submit = now
 
         cfg = self.config
+        if cfg.max_queue > 0:
+            # dead requests the timer hasn't swept yet must not count
+            # toward the queue cap (they would spuriously reject this one)
+            ep.policy.expire(now)
         outstanding = self.submitted - self.completed - self.rejected \
-            - self.failed - 1  # excluding this request
+            - self.timed_out - self.failed - 1  # excluding this request
         reject = (
             not self._accepting
             or (cfg.max_outstanding > 0 and outstanding >= cfg.max_outstanding)
@@ -273,16 +422,138 @@ class AsyncProxyServer:
         self._batch_tasks.add(task)
         task.add_done_callback(self._batch_tasks.discard)
 
-    async def _run_batch(self, name: str, batch: Batch, t0: float) -> None:
+    def _on_expired(self, name: str, requests: List[Request],
+                    now: float) -> None:
+        """Expiry sweep evicted ``requests``: resolve their tickets.
+
+        The requests were never dispatched (and never will be); their
+        tickets resolve with ``timed_out=True`` and a
+        :class:`DeadlineExceeded` error attached.
+        """
+        for r in requests:
+            ticket = self._tickets.pop(r.req_id, None)
+            if ticket is not None and not ticket.future.done():
+                ticket.timed_out = True
+                ticket.error = DeadlineExceeded(
+                    f"request {r.req_id} expired at t={now:.6f} "
+                    f"(deadline {r.deadline:.6f}) while queued on "
+                    f"{name!r}"
+                )
+                ticket.future.set_result(ticket)
+        self.timed_out += len(requests)
+        self._wake.set()
+
+    def _hedge_threshold(self, name: str, batch: Batch) -> Optional[float]:
+        """Straggler threshold for ``batch``: the configured quantile of
+        its bucket's measured upstream latency (None = hedging off or the
+        bucket is still cold)."""
+        q = self.config.hedge_quantile
+        if q <= 0:
+            return None
+        monitor = getattr(self.frontend.endpoint(name).policy, "monitor", None)
+        if monitor is None:
+            return None
+        return monitor.bucket_quantile(
+            batch.effective_size, q, self.clock.now(),
+            self.config.hedge_min_samples,
+        )
+
+    async def _execute_hedged(self, name: str, batch: Batch,
+                              deadline: Optional[float]) -> int:
+        """Run ``batch`` on its target with optional straggler hedging.
+
+        Returns the number of attempts issued (1, or 2 when hedged).
+        First completion wins; the other attempt is cancelled. If the
+        first finisher raised while its sibling is still running, the
+        sibling is awaited as the fallback before giving up.
+        """
         target = self._targets[name]
-        error: Optional[BaseException] = None
+        loop = asyncio.get_running_loop()
+        if self._target_takes_deadline[name]:
+            start = lambda: loop.create_task(target(batch, deadline=deadline))  # noqa: E731
+        else:
+            start = lambda: loop.create_task(target(batch))  # noqa: E731
+        children: Set[asyncio.Task] = set()
         try:
-            await target(batch)
+            primary = start()
+            children.add(primary)
+            threshold = self._hedge_threshold(name, batch)
+            if threshold is None:
+                await primary
+                return 1
+
+            timer = loop.create_task(self.clock.sleep(threshold))
+            children.add(timer)
+            await asyncio.wait({primary, timer},
+                               return_when=asyncio.FIRST_COMPLETED)
+            if primary.done():
+                await self._cancel(timer)
+                children.discard(timer)
+                primary.result()  # re-raise a target error
+                return 1
+
+            # Straggler: re-issue to the target; first completion wins.
+            await self._cancel(timer)
+            children.discard(timer)
+            self.hedged_batches += 1
+            hedge = start()
+            children.add(hedge)
+            done, pending = await asyncio.wait(
+                {primary, hedge}, return_when=asyncio.FIRST_COMPLETED)
+            ok = [t for t in done if t.exception() is None]
+            if ok:
+                winner = primary if primary in ok else hedge
+            elif pending:
+                # sole finisher failed — fall back to the live sibling
+                winner = next(iter(pending))
+                await asyncio.wait({winner})
+                if winner.exception() is not None:
+                    next(iter(done)).result()  # raise the FIRST error
+            else:
+                primary.result()  # both done, both failed
+                raise primary.exception()  # pragma: no cover (unreachable)
+            for t in (primary, hedge):
+                if t is not winner:
+                    await self._cancel(t)
+                    children.discard(t)
+            if winner is hedge:
+                self.hedge_wins += 1
+            winner.result()
+            return 2
+        except asyncio.CancelledError:
+            # drain(timeout=) cancelled us: tear down every live attempt
+            for t in children:
+                t.cancel()
+            await asyncio.gather(*children, return_exceptions=True)
+            raise
+
+    @staticmethod
+    async def _cancel(task: asyncio.Task) -> None:
+        task.cancel()
+        with contextlib.suppress(asyncio.CancelledError, Exception):
+            await task
+
+    async def _run_batch(self, name: str, batch: Batch, t0: float) -> None:
+        error: Optional[BaseException] = None
+        attempts = 1
+        try:
+            attempts = await self._execute_hedged(
+                name, batch, batch.tightest_deadline)
+        except asyncio.CancelledError:
+            # drain(timeout=) gave up on this batch: account its requests
+            # as failed rather than hanging the process (the task itself
+            # completes normally so drain's gather() can collect it).
+            error = DrainTimeout(
+                f"batch of {batch.size} on {name!r} cancelled at drain "
+                "timeout"
+            )
+            self.drain_cancelled += batch.size
         except Exception as exc:  # noqa: BLE001 — resolved into tickets
             error = exc
         now = self.clock.now()
         self.inflight_batches -= 1
         if error is None:
+            batch.attempts = attempts
             latency = now - t0
             self.frontend.on_response(batch, latency, now)
             self.bucket_samples[name].setdefault(
@@ -295,10 +566,12 @@ class AsyncProxyServer:
                 if ticket is not None and not ticket.future.done():
                     ticket.future.set_result(ticket)
             self.completed += batch.size
+            self._last_completion = now
         else:
             for r in batch.requests:
                 ticket = self._tickets.pop(r.req_id, None)
                 if ticket is not None and not ticket.future.done():
+                    ticket.error = error
                     ticket.future.set_exception(error)
             self.failed += batch.size
         self._wake.set()
@@ -325,15 +598,18 @@ class AsyncProxyServer:
         )
         outstanding = len(self._tickets)
         lost = (self.submitted - self.completed - self.rejected
-                - self.failed - outstanding)
+                - self.timed_out - self.failed - outstanding)
         return {
             "submitted": self.submitted,
             "completed": self.completed,
             "rejected": self.rejected,
+            "timed_out": self.timed_out,
             "failed": self.failed,
+            "drain_cancelled": self.drain_cancelled,
             "outstanding": outstanding,
             "queued": queue_len,
             "inflight_batches": self.inflight_batches,
+            "hedged_batches": self.hedged_batches,
             "lost": lost,
         }
 
@@ -342,7 +618,10 @@ class AsyncProxyServer:
 
         Mirrors ``ServerlessPlatform.assert_conserved``: nothing lost at
         any instant; with ``require_drained``, nothing outstanding either
-        (``submitted == completed + rejected``, zero failed).
+        (``submitted == completed + rejected + timed_out + failed`` —
+        every terminal state explicitly accounted, zero lost) and the
+        only tolerated failures are the ones ``drain(timeout=)`` itself
+        cancelled — a target that raised mid-run still fails shutdown.
         """
         c = self.conservation()
         if c["lost"] != 0:
@@ -350,9 +629,10 @@ class AsyncProxyServer:
         if require_drained:
             if c["outstanding"] or c["queued"] or c["inflight_batches"]:
                 raise AssertionError(f"undrained work at shutdown: {c}")
-            if c["failed"]:
+            if c["failed"] != c["drain_cancelled"]:
                 raise AssertionError(f"failed dispatches at shutdown: {c}")
-            if c["submitted"] != c["completed"] + c["rejected"]:
+            if c["submitted"] != (c["completed"] + c["rejected"]
+                                  + c["timed_out"] + c["failed"]):
                 raise AssertionError(f"conservation imbalance: {c}")
         return c
 
@@ -384,10 +664,20 @@ class AsyncProxyServer:
                 "dispatched_batches": float(st.get("dispatched_batches", 0)),
                 "max_bs": float(st.get("max_bs", 1)),
                 "retry_rate": float(st.get("retry_rate", 0.0)),
+                "timed_out": float(st.get("expired", 0)),
             }
         e2e = np.concatenate(all_e2e) if all_e2e else np.empty(0)
         n = len(e2e)
         cons = self.conservation()
+        # Throughput over the active window (first submit → last
+        # completion), not the raw clock: a clock predating the server or
+        # a summary taken after an idle gap must not deflate it.
+        if (self._first_submit is not None
+                and self._last_completion is not None
+                and self._last_completion > self._first_submit):
+            throughput = n / (self._last_completion - self._first_submit)
+        else:
+            throughput = 0.0
         summary = {
             "completed": float(n),
             "violation_rate": total_viol / n if n else 0.0,
@@ -402,8 +692,12 @@ class AsyncProxyServer:
             ),
             "submitted": float(cons["submitted"]),
             "rejected": float(cons["rejected"]),
+            "timed_out": float(cons["timed_out"]),
+            "failed": float(cons["failed"]),
+            "hedged_batches": float(self.hedged_batches),
+            "hedge_wins": float(self.hedge_wins),
             "lost": float(cons["lost"]),
-            "throughput": n / now if now > 0 else 0.0,
+            "throughput": throughput,
             "endpoints": per,
         }
         return summary

@@ -34,12 +34,19 @@ from repro.serverless.latency import LatencyModel
 
 
 class DispatchTarget:
-    """Protocol: awaitable batch executor with an optional size ceiling."""
+    """Protocol: awaitable batch executor with an optional size ceiling.
+
+    ``deadline`` is the batch's tightest remaining absolute deadline on
+    the runtime clock (None = no member carries one). Targets are free to
+    ignore it; real HTTP/gRPC upstreams would map it onto a request
+    timeout header so the whole serving chain stays SLO-accountable.
+    """
 
     #: Largest batch the target can execute in one call (None = unbounded).
     max_batch: Optional[int] = None
 
-    async def __call__(self, batch: Batch) -> None:
+    async def __call__(self, batch: Batch,
+                       deadline: Optional[float] = None) -> None:
         raise NotImplementedError
 
 
@@ -61,17 +68,27 @@ class SyntheticTarget(DispatchTarget):
         self._sem = asyncio.Semaphore(concurrency) if concurrency > 0 else None
         self.batches = 0
         self.requests = 0
+        self.cancelled = 0
+        #: tightest deadline of the most recent call (propagation probe)
+        self.last_deadline: Optional[float] = None
 
-    async def __call__(self, batch: Batch) -> None:
+    async def __call__(self, batch: Batch,
+                       deadline: Optional[float] = None) -> None:
         # Sample BEFORE awaiting the slot: service-time draws happen in
         # dispatch order, so the stream stays deterministic under FakeClock
         # regardless of how long slot waits interleave.
+        self.last_deadline = deadline
         service = float(self.latency.sample_batch(batch, self.rng))
-        if self._sem is not None:
-            async with self._sem:
+        try:
+            if self._sem is not None:
+                async with self._sem:
+                    await self.clock.sleep(service)
+            else:
                 await self.clock.sleep(service)
-        else:
-            await self.clock.sleep(service)
+        except asyncio.CancelledError:
+            # hedge loser / drain-timeout straggler: slot freed, no count
+            self.cancelled += 1
+            raise
         self.batches += 1
         self.requests += batch.size
 
@@ -95,7 +112,10 @@ class EngineTarget(DispatchTarget):
         self.max_batch = max(buckets)
         self._sem = asyncio.Semaphore(max_concurrent)
 
-    async def __call__(self, batch: Batch) -> None:
+    async def __call__(self, batch: Batch,
+                       deadline: Optional[float] = None) -> None:
+        # ``deadline`` is accepted for protocol parity; a JAX engine call
+        # is not interruptible mid-kernel, so it is not enforced here.
         loop = asyncio.get_running_loop()
         async with self._sem:
             await loop.run_in_executor(None, self.pool_target, batch)

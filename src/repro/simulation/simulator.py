@@ -120,6 +120,100 @@ class _ArrivalPump:
         return buf[idx]
 
 
+class _ProxyHedger:
+    """Proxy-tier straggler hedging for the simulators.
+
+    Mirror of the live runtime's hedged dispatch: when a dispatched batch
+    is still unfinished after the configured quantile of its bucket's
+    measured upstream latency, a shadow copy is re-submitted to the
+    platform; the first completion wins (stamping ``attempts`` with the
+    extra attempt) and the loser's completion is swallowed. The sim
+    cannot *cancel* platform-side work the way the runtime cancels its
+    loser task — on a transparent platform (the parity configuration)
+    that is observationally identical; on a capacity-bound fleet the
+    loser briefly occupies a slot until it finishes.
+
+    All mappings key on ``id()`` of batches that the state dict itself
+    keeps alive, so keys cannot be recycled while tracked.
+    """
+
+    __slots__ = ("quantile", "min_samples", "events", "submit_fn",
+                 "monitor_fn", "_state", "_shadow_owner", "hedged", "wins")
+
+    def __init__(self, quantile: float, min_samples: int, events: EventQueue,
+                 submit_fn, monitor_fn) -> None:
+        if quantile < 1 or quantile > 100:
+            # percentile units, same contract as RuntimeConfig: a
+            # fraction like 0.95 would hedge at the bucket minimum
+            raise ValueError(
+                f"hedge_quantile is in percentile units ((1, 100], e.g. "
+                f"95.0), got {quantile}"
+            )
+        self.quantile = quantile
+        self.min_samples = min_samples
+        self.events = events
+        self.submit_fn = submit_fn      # (batch, now) -> platform submit
+        self.monitor_fn = monitor_fn    # (batch) -> SmartMonitor
+        # id(primary) → [primary, shadow|None, first_completion_seen]
+        self._state: Dict[int, list] = {}
+        self._shadow_owner: Dict[int, Batch] = {}
+        self.hedged = 0
+        self.wins = 0
+
+    def on_dispatch(self, batch: Batch, now: float) -> None:
+        """Arm the straggler timer for a freshly dispatched batch."""
+        monitor = self.monitor_fn(batch)
+        threshold = monitor.bucket_quantile(
+            batch.effective_size, self.quantile, now, self.min_samples
+        )
+        if threshold is None:
+            return  # bucket still cold: hedging stays off (same as live)
+        self._state[id(batch)] = [batch, None, False]
+        self.events.push(now + threshold, partial(self._maybe_hedge, batch))
+
+    def _maybe_hedge(self, batch: Batch, now: float) -> None:
+        st = self._state.get(id(batch))
+        if st is None or st[2] or st[1] is not None:
+            return  # already completed (or already hedged)
+        shadow = Batch(requests=batch.requests,
+                       dispatch_time=batch.dispatch_time, cause=batch.cause,
+                       bucket_size=batch.bucket_size, endpoint=batch.endpoint)
+        st[1] = shadow
+        self._shadow_owner[id(shadow)] = batch
+        self.hedged += 1
+        self.submit_fn(shadow, now)
+
+    def resolve(self, batch: Batch, latency: float, now: float):
+        """Map a platform completion onto its primary batch.
+
+        Returns ``(primary, latency)`` for a winning completion or
+        ``None`` for a hedge loser whose completion must be ignored.
+        """
+        owner = self._shadow_owner.get(id(batch))
+        primary = owner if owner is not None else batch
+        st = self._state.get(id(primary))
+        if st is None:
+            return primary, latency  # untracked: hedging never armed
+        if st[2]:
+            # loser: the sibling already completed this work
+            shadow = st[1]
+            if shadow is not None:
+                self._shadow_owner.pop(id(shadow), None)
+            del self._state[id(primary)]
+            return None
+        st[2] = True
+        if st[1] is None:
+            del self._state[id(primary)]  # finished before the timer fired
+            return primary, latency
+        # hedged and first across the line: stamp the extra attempt and
+        # measure latency from the PRIMARY dispatch (what the proxy saw),
+        # exactly as the live runtime's `now - t0` does.
+        if owner is not None:
+            self.wins += 1
+        primary.attempts = batch.attempts + 1
+        return primary, now - primary.dispatch_time
+
+
 class _EventLoopDriver:
     """Timer wiring + run/flush/drain loop shared by both simulators.
 
@@ -226,6 +320,8 @@ class Simulator(_EventLoopDriver):
         sample_interval: float = 5.0,
         p95_window: float = 60.0,
         seed: int = 0,
+        hedge_quantile: float = 0.0,
+        hedge_min_samples: int = 10,
     ) -> None:
         self.sla = sla
         self.workload = workload
@@ -251,6 +347,17 @@ class Simulator(_EventLoopDriver):
         self.policy = make_policy(
             policy, sla, self._dispatch, **(policy_kwargs or {})
         )
+        # per-request absolute deadlines (None disables — the default)
+        self._deadline_budget = sla.deadline_budget
+        self.arrived_requests = 0
+        # proxy-tier straggler hedging (sim mirror of the live runtime's)
+        self._hedger: Optional[_ProxyHedger] = None
+        if hedge_quantile > 0:
+            self._hedger = _ProxyHedger(
+                hedge_quantile, hedge_min_samples, self.events,
+                submit_fn=lambda b, t: self.platform.submit(b, t),
+                monitor_fn=lambda b: self.policy.monitor,
+            )
 
         self.completions = CompletionLog()
         self._pump = _ArrivalPump(arrivals, self.rng_arrivals, duration)
@@ -262,8 +369,15 @@ class Simulator(_EventLoopDriver):
     # --------------------------------------------------------------- wiring
     def _dispatch(self, batch: Batch) -> None:
         self.platform.submit(batch, self.now)
+        if self._hedger is not None:
+            self._hedger.on_dispatch(batch, self.now)
 
     def _on_batch_done(self, batch: Batch, upstream_latency: float, now: float) -> None:
+        if self._hedger is not None:
+            resolved = self._hedger.resolve(batch, upstream_latency, now)
+            if resolved is None:
+                return  # hedge loser: the sibling already completed this
+            batch, upstream_latency = resolved
         self.policy.on_response(batch, upstream_latency, now)
         log = self.completions
         for r in batch.requests:
@@ -271,7 +385,11 @@ class Simulator(_EventLoopDriver):
         self._reschedule_policy_timer()
 
     def _on_arrival(self, now: float) -> None:
-        self.policy.on_request(Request(arrival_time=now), now)
+        self.arrived_requests += 1
+        req = Request(arrival_time=now)
+        if self._deadline_budget is not None:
+            req.deadline = now + self._deadline_budget
+        self.policy.on_request(req, now)
         nxt = self._pump.next()
         if nxt is not None:
             self.events.push(nxt, self._on_arrival_cb)
@@ -343,6 +461,13 @@ class Simulator(_EventLoopDriver):
             "failed_attempts": float(self.platform.failed_attempts),
             "hedged_dispatches": float(self.platform.hedged_dispatches),
             "throughput": float(len(e2e)) / max(self.now, 1e-9),
+            # deadline / proxy-hedge accounting (identical semantics to
+            # the live runtime's summary keys)
+            "submitted_requests": float(self.arrived_requests),
+            "timed_out": float(pstats.get("expired", 0)),
+            "hedged_batches": float(self._hedger.hedged
+                                    if self._hedger else 0),
+            "hedge_wins": float(self._hedger.wins if self._hedger else 0),
         }
         # conservation ledger: every submitted batch must be completed or
         # still accounted for (queued/in-flight); lost and duplicate must
@@ -427,6 +552,8 @@ class MultiEndpointSimulator(_EventLoopDriver):
         warmup: float = 0.0,
         drain_grace: float = 120.0,
         seed: int = 0,
+        hedge_quantile: float = 0.0,
+        hedge_min_samples: int = 10,
     ) -> None:
         if not endpoints:
             raise ValueError("need at least one endpoint")
@@ -471,16 +598,29 @@ class MultiEndpointSimulator(_EventLoopDriver):
             for m in members:
                 self._platform_of[m] = key
 
+        # proxy-tier hedging shared across endpoints (shadow batches are
+        # routed to their endpoint's platform by the stamped endpoint key)
+        self._hedger: Optional[_ProxyHedger] = None
+        if hedge_quantile > 0:
+            self._hedger = _ProxyHedger(
+                hedge_quantile, hedge_min_samples, self.events,
+                submit_fn=lambda b, t: self.platforms[
+                    self._platform_of[b.endpoint]].submit(b, t),
+                monitor_fn=lambda b: self.frontend.endpoint(
+                    b.endpoint).policy.monitor,
+            )
+
         self.frontend = ProxyFrontend()
         for name, spec in self.specs.items():
             plat = self.platforms[self._platform_of[name]]
             self.frontend.add_endpoint(
                 name,
                 sla=spec.sla,
-                dispatch_fn=lambda batch, _p=plat: _p.submit(batch, self.now),
+                dispatch_fn=partial(self._dispatch_batch, plat),
                 policy=spec.policy,
                 policy_kwargs=spec.policy_kwargs,
             )
+        self.arrived_requests: Dict[str, int] = {n: 0 for n in self.specs}
 
         # one spawned arrivals stream + one pump + one reusable arrival
         # callback per endpoint (registration order is deterministic)
@@ -503,7 +643,17 @@ class MultiEndpointSimulator(_EventLoopDriver):
     def _control(self):
         return self.frontend
 
+    def _dispatch_batch(self, plat: ServerlessPlatform, batch: Batch) -> None:
+        plat.submit(batch, self.now)
+        if self._hedger is not None:
+            self._hedger.on_dispatch(batch, self.now)
+
     def _on_batch_done(self, batch: Batch, upstream_latency: float, now: float) -> None:
+        if self._hedger is not None:
+            resolved = self._hedger.resolve(batch, upstream_latency, now)
+            if resolved is None:
+                return  # hedge loser
+            batch, upstream_latency = resolved
         self.frontend.on_response(batch, upstream_latency, now)
         log = self.completions[batch.endpoint]
         for r in batch.requests:
@@ -511,6 +661,8 @@ class MultiEndpointSimulator(_EventLoopDriver):
         self._reschedule_policy_timer()
 
     def _on_arrival(self, name: str, now: float) -> None:
+        self.arrived_requests[name] += 1
+        # frontend.on_request derives the deadline from the endpoint SLA
         self.frontend.on_request(Request(arrival_time=now, endpoint=name), now)
         nxt = self._pumps[name].next()
         if nxt is not None:
@@ -561,6 +713,9 @@ class MultiEndpointSimulator(_EventLoopDriver):
                 "upstream_batches": float(ep_stats.get("upstream_batches", 0)),
                 "retried_batches": float(ep_stats.get("retried_batches", 0)),
                 "retry_rate": float(ep_stats.get("retry_rate", 0.0)),
+                # deadline accounting (mirrors the live runtime summary)
+                "submitted_requests": float(self.arrived_requests[name]),
+                "timed_out": float(ep_stats.get("expired", 0)),
             }
         total_containers = sum(
             p.avg_containers(billing_window) for p in self.platforms.values()
@@ -584,6 +739,11 @@ class MultiEndpointSimulator(_EventLoopDriver):
             "cold_starts": float(sum(p.cold_starts for p in self.platforms.values())),
             "n_platforms": float(len(self.platforms)),
             "n_endpoints": float(len(self.specs)),
+            "submitted_requests": float(sum(self.arrived_requests.values())),
+            "timed_out": float(sum(s["timed_out"] for s in endpoints.values())),
+            "hedged_batches": float(self._hedger.hedged
+                                    if self._hedger else 0),
+            "hedge_wins": float(self._hedger.wins if self._hedger else 0),
         }
         # fleet-wide conservation ledger (summed over every platform)
         cons = [p.conservation() for p in self.platforms.values()]

@@ -1,0 +1,691 @@
+"""Tests for the deadline-aware request lifecycle (ISSUE 5).
+
+Covers the acceptance points: BatchQueue expiry mechanics (sweep before
+batch formation, timer wake-up for expiries, terminal ``timed_out``
+state), deadline derivation at admission, expiry under all five policies
+in BOTH worlds (discrete-event sim and FakeClock runtime) with the
+extended conservation ledger (``submitted == completed + rejected +
+timed_out + failed``), deadline propagation to dispatch targets,
+proxy-tier straggler hedging (first completion wins, loser cancelled,
+deterministic under FakeClock), and the duplicate-submit / drain-timeout
+regressions.
+"""
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro.core import SLAConfig, ms
+from repro.core.batch_queue import BatchQueue
+from repro.core.frontend import ProxyFrontend
+from repro.core.policies import make_policy
+from repro.core.request import Batch, Request
+from repro.runtime import (AsyncProxyServer, DeadlineExceeded, DrainTimeout,
+                           FakeClock, RuntimeConfig, SyntheticTarget, run,
+                           run_replay)
+from repro.serverless.latency import AffineLatency, get_workload
+from repro.serverless.platform import PlatformConfig
+from repro.simulation.arrivals import PoissonProcess, Schedule, sample_schedule
+from repro.simulation.simulator import (EndpointSpec, run_multi_simulation,
+                                        run_simulation)
+
+SLA = SLAConfig(slo_target=ms(500))
+WL = get_workload("pytorch-fashion-mnist")
+ALL_POLICIES = ("passthrough", "static", "clipper", "oracle", "mlproxy")
+
+TRANSPARENT = PlatformConfig(
+    container_concurrency=10**6, cold_start=0.0, min_scale=1, max_scale=1,
+    initial_scale=1, ps_slowdown=0.0, scale_to_zero_grace=1e12,
+)
+
+
+def policy_kwargs(policy):
+    if policy == "static":
+        return {"batch_size": 8, "timeout": 0.2}
+    if policy == "oracle":
+        return {"latency_model": lambda bs: WL.percentile(bs, 95)}
+    return {}
+
+
+# ------------------------------------------------------------ core expiry
+class TestBatchQueueExpiry:
+    def _queue(self, dispatched, expired=None):
+        return BatchQueue(
+            dispatched.append,
+            expire_fn=(lambda reqs, now: expired.extend(reqs))
+            if expired is not None else None,
+        )
+
+    def test_expire_evicts_marks_and_counts(self):
+        dispatched, expired = [], []
+        q = self._queue(dispatched, expired)
+        live = Request(arrival_time=0.0, deadline=10.0)
+        dead = Request(arrival_time=0.0, deadline=1.0)
+        q.append(dead, 0.0)
+        q.append(live, 0.5)
+        out = q.expire(2.0)
+        assert out == [dead] and dead.timed_out
+        assert expired == [dead]
+        assert q.expired_requests == 1
+        assert q.queue_len == 1 and not live.timed_out
+        # FRT re-anchors on the surviving head's arrival
+        assert q.first_arrival == live.arrival_time
+
+    def test_expire_fast_path_without_deadlines(self):
+        q = self._queue([])
+        q.append(Request(arrival_time=0.0), 0.0)
+        assert q.expire(1e9) == []
+        assert q.queue_len == 1 and q.expired_requests == 0
+
+    def test_dispatch_sweeps_before_batch_formation(self):
+        dispatched = []
+        q = self._queue(dispatched)
+        q.append(Request(arrival_time=0.0, deadline=1.0), 0.0)
+        q.append(Request(arrival_time=0.0, deadline=99.0), 0.0)
+        batch = q._dispatch(2.0, "full")
+        assert batch is not None and batch.size == 1
+        assert dispatched[0].requests[0].deadline == 99.0
+        assert q.expired_requests == 1
+
+    def test_dispatch_returns_none_when_all_expired(self):
+        dispatched = []
+        q = self._queue(dispatched)
+        q.append(Request(arrival_time=0.0, deadline=1.0), 0.0)
+        assert q._dispatch(5.0, "timeout") is None
+        assert dispatched == []
+        assert q.queue_len == 0 and q.next_deadline is None
+        assert q.dispatched_batches == 0
+
+    def test_next_event_time_merges_expiry_and_deadline(self):
+        q = self._queue([])
+        q.append(Request(arrival_time=0.0, deadline=3.0), 0.0)
+        q.next_deadline = 5.0
+        assert q.next_expiry() == 3.0
+        assert q.next_event_time() == 3.0
+        q.next_deadline = 2.0
+        assert q.next_event_time() == 2.0
+
+    def test_snapshot_roundtrip_preserves_expiry_state(self):
+        q = self._queue([])
+        q.append(Request(arrival_time=0.0, deadline=1.0), 0.0)
+        q.append(Request(arrival_time=0.0, deadline=4.0), 0.0)
+        q.expire(2.0)
+        state = q.snapshot()
+        q2 = self._queue([])
+        q2.restore(state)
+        assert q2.expired_requests == 1
+        assert q2.next_expiry() == 4.0
+        # legacy snapshots (no expiry key) restore cleanly
+        del state["expired_requests"]
+        q3 = self._queue([])
+        q3.restore(state)
+        assert q3.expired_requests == 0 and q3.next_expiry() == 4.0
+
+    def test_batch_tightest_deadline(self):
+        reqs = [Request(arrival_time=0.0, deadline=d)
+                for d in (None, 7.0, 3.0)]
+        assert Batch(requests=reqs, dispatch_time=0.0,
+                     cause="full").tightest_deadline == 3.0
+        assert Batch(requests=[Request(arrival_time=0.0)], dispatch_time=0.0,
+                     cause="full").tightest_deadline is None
+
+
+class TestPolicyExpiryWakeup:
+    @pytest.mark.parametrize("policy", ALL_POLICIES)
+    def test_next_event_time_covers_earliest_expiry(self, policy):
+        """The merged timer must wake for the earliest expiry, not only
+        the dispatch deadline."""
+        dispatched = []
+        pol = make_policy(policy, SLA, dispatched.append,
+                          **policy_kwargs(policy))
+        if policy == "passthrough":
+            pytest.skip("passthrough never queues")
+        r = Request(arrival_time=0.0, deadline=0.01)  # expires almost now
+        pol.on_request(r, 0.0)
+        if dispatched:
+            pytest.skip(f"{policy} dispatched immediately at this state")
+        nxt = pol.next_event_time(0.0)
+        assert nxt is not None and nxt <= 0.01
+        pol.on_timer(0.02)
+        assert r.timed_out and not dispatched
+        assert pol.stats(0.02)["expired"] == 1
+
+    def test_frontend_derives_deadline_at_admission(self):
+        fe = ProxyFrontend()
+        fe.add_endpoint("ep", sla=SLAConfig(slo_target=0.4, deadline_factor=2.0),
+                        dispatch_fn=lambda b: None, policy="static",
+                        policy_kwargs={"batch_size": 8, "timeout": 10.0})
+        derived = Request(arrival_time=1.0)
+        fe.on_request(derived, 1.0, endpoint="ep")
+        assert derived.deadline == pytest.approx(1.0 + 0.8)
+        # a client-supplied deadline is honored as-is
+        client = Request(arrival_time=2.0, deadline=2.05)
+        fe.on_request(client, 2.0, endpoint="ep")
+        assert client.deadline == 2.05
+        # aggregate expired accounting flows through frontend stats
+        fe.on_timer(10.0)
+        st = fe.stats(10.0)
+        assert st["aggregate"]["expired"] == 2
+        assert st["endpoints"]["ep"]["expired"] == 2
+
+
+# ------------------------------------------------------------- simulation
+class TestSimulatorExpiry:
+    @pytest.mark.parametrize("policy", ALL_POLICIES)
+    def test_expiry_conserves_under_all_policies(self, policy):
+        sla = SLAConfig(slo_target=ms(500), deadline_factor=0.25)
+        res = run_simulation(
+            policy=policy, sla=sla, workload=WL,
+            arrivals=PoissonProcess(rate=30.0, duration=30.0),
+            platform_config=TRANSPARENT, duration=30.0, seed=3,
+            policy_kwargs=policy_kwargs(policy),
+        )
+        s = res.summary
+        assert s["submitted_requests"] == s["completed"] + s["timed_out"]
+        if policy == "static":
+            # budget (125ms) < static queue timeout (200ms): partial
+            # batches MUST shed queued work pre-dispatch
+            assert s["timed_out"] > 0
+
+    def test_expired_never_dispatched_and_not_billed(self):
+        """With a deadline tighter than the only dispatch path, every
+        request times out and the upstream sees zero batches."""
+        sla = SLAConfig(slo_target=ms(500), deadline_factor=0.1)  # 50ms
+        res = run_simulation(
+            policy="static", sla=sla, workload=WL,
+            arrivals=PoissonProcess(rate=2.0, duration=20.0),
+            platform_config=TRANSPARENT, duration=20.0, seed=0,
+            policy_kwargs={"batch_size": 64, "timeout": 5.0},
+        )
+        s = res.summary
+        assert s["completed"] == 0
+        assert s["timed_out"] == s["submitted_requests"] > 0
+        assert s["submitted_batches"] == 0  # platform never invoked
+
+    def test_multi_endpoint_expiry_accounting(self):
+        specs = {
+            "tight": EndpointSpec(
+                policy="static",
+                sla=SLAConfig(slo_target=ms(400), deadline_factor=0.25),
+                workload=WL,
+                arrivals=PoissonProcess(rate=20.0, duration=20.0),
+                policy_kwargs={"batch_size": 16, "timeout": 0.3},
+                platform_config=TRANSPARENT,
+            ),
+            "loose": EndpointSpec(
+                policy="static",
+                sla=SLAConfig(slo_target=ms(400)),
+                workload=WL,
+                arrivals=PoissonProcess(rate=20.0, duration=20.0),
+                policy_kwargs={"batch_size": 4, "timeout": 0.05},
+                platform_config=TRANSPARENT,
+            ),
+        }
+        res = run_multi_simulation(specs, duration=20.0, seed=1)
+        for name, ep in res.endpoints.items():
+            assert ep["submitted_requests"] == ep["completed"] + ep["timed_out"], name
+        assert res.endpoints["tight"]["timed_out"] > 0
+        assert res.endpoints["loose"]["timed_out"] == 0
+        assert res.summary["timed_out"] == res.endpoints["tight"]["timed_out"]
+
+    def test_no_deadline_is_bitwise_noop(self):
+        """deadline_factor=None must not perturb the event stream."""
+        kw = dict(policy="mlproxy", sla=SLA, workload=WL,
+                  arrivals=PoissonProcess(rate=30.0, duration=30.0),
+                  platform_config=TRANSPARENT, duration=30.0, seed=5)
+        a = run_simulation(**kw)
+        b = run_simulation(**kw)
+        np.testing.assert_array_equal(a.e2e_latencies, b.e2e_latencies)
+        assert a.summary["timed_out"] == 0
+
+
+# ---------------------------------------------------------------- runtime
+class TestRuntimeExpiry:
+    @pytest.mark.parametrize("policy", ALL_POLICIES)
+    def test_ledger_conserves_with_timed_out(self, policy):
+        sla = SLAConfig(slo_target=ms(500), deadline_factor=0.25)
+        res = run_replay(
+            policy=policy, sla=sla, workload=WL,
+            arrivals=PoissonProcess(rate=30.0, duration=30.0), duration=30.0,
+            seed=3, policy_kwargs=policy_kwargs(policy),
+        )
+        c = res.conservation
+        assert c["lost"] == 0 and c["outstanding"] == 0
+        assert c["submitted"] == (c["completed"] + c["rejected"]
+                                  + c["timed_out"] + c["failed"])
+        if policy == "static":
+            assert c["timed_out"] > 0
+
+    def test_expired_ticket_resolves_with_deadline_exceeded(self):
+        clock = FakeClock()
+        server = AsyncProxyServer(clock=clock)
+        server.add_endpoint(
+            "ep", sla=SLAConfig(slo_target=ms(500), deadline_factor=0.2),
+            target=SyntheticTarget(WL, clock, rng=np.random.default_rng(0)),
+            policy="static", policy_kwargs={"batch_size": 64, "timeout": 60.0},
+        )
+
+        async def main():
+            await server.start()
+            ticket = server.submit(endpoint="ep")
+            resolved = await ticket.future
+            # queue timeout (60s) never fires before the 100ms deadline
+            assert clock.now() == pytest.approx(0.1)
+            return resolved
+
+        ticket = run(clock, main())
+        assert ticket.timed_out and not ticket.rejected
+        assert isinstance(ticket.error, DeadlineExceeded)
+        assert ticket.request.timed_out
+        assert server.timed_out == 1 and server.completed == 0
+        server.assert_conserved()
+
+    def test_max_queue_does_not_count_dead_requests(self):
+        """Regression: a submit arriving after queued requests' deadlines
+        passed (but before the timer sweep) must not be rejected by a
+        queue cap counting the dead requests."""
+        clock = FakeClock()
+        server = AsyncProxyServer(clock=clock,
+                                  config=RuntimeConfig(max_queue=2))
+        server.add_endpoint(
+            "ep", sla=SLAConfig(slo_target=ms(500), deadline_factor=0.2),
+            target=SyntheticTarget(WL, clock, rng=np.random.default_rng(0)),
+            policy="static", policy_kwargs={"batch_size": 64, "timeout": 60.0},
+        )
+
+        async def main():
+            await server.start()
+            dead = [server.submit(endpoint="ep") for _ in range(2)]
+            assert not any(t.rejected for t in dead)
+            # jump past their 100ms deadline WITHOUT letting the timer
+            # loop run its sweep first: advance behind the loop's back
+            await clock.sleep(0.0999999)
+            clock._now += 0.01
+            fresh = server.submit(endpoint="ep")
+            assert not fresh.rejected  # cap saw a swept (empty) queue
+            assert all(t.timed_out for t in dead)
+            await server.drain()
+            return fresh
+
+        fresh = run(clock, main())
+        assert not fresh.timed_out
+        server.assert_conserved(require_drained=True)
+
+    def test_deadline_propagates_to_target(self):
+        clock = FakeClock()
+        target = SyntheticTarget(AffineLatency(a=0.01, c=0.0, noise_cv=0.0),
+                                 clock, rng=np.random.default_rng(0))
+        server = AsyncProxyServer(clock=clock)
+        server.add_endpoint(
+            "ep", sla=SLAConfig(slo_target=ms(500), deadline_factor=1.0),
+            target=target, policy="static",
+            policy_kwargs={"batch_size": 2, "timeout": 5.0},
+        )
+
+        async def main():
+            await server.start()
+            t0 = server.submit(endpoint="ep")
+            await clock.sleep(0.05)
+            t1 = server.submit(endpoint="ep")  # batch full -> dispatch
+            await server.drain()
+            return t0, t1
+
+        run(clock, main())
+        # tightest member deadline = first request's arrival + 500ms
+        assert target.last_deadline == pytest.approx(0.5)
+
+    def test_legacy_target_without_deadline_param_still_works(self):
+        class LegacyTarget:
+            max_batch = None
+
+            def __init__(self, clock):
+                self.clock = clock
+                self.calls = 0
+
+            async def __call__(self, batch):  # no deadline= parameter
+                self.calls += 1
+                await self.clock.sleep(0.01)
+
+        clock = FakeClock()
+        target = LegacyTarget(clock)
+        server = AsyncProxyServer(clock=clock)
+        server.add_endpoint(
+            "ep", sla=SLAConfig(slo_target=ms(500), deadline_factor=1.0),
+            target=target, policy="passthrough",
+        )
+
+        async def main():
+            await server.start()
+            server.submit(endpoint="ep")
+            await server.drain()
+
+        run(clock, main())
+        assert target.calls == 1 and server.completed == 1
+
+
+# ---------------------------------------------------------------- hedging
+class _ScriptedTarget:
+    """Deterministic target whose call latencies follow a script."""
+
+    max_batch = None
+
+    def __init__(self, clock, script):
+        self.clock = clock
+        self.script = list(script)
+        self.calls = 0
+        self.completed = 0
+        self.cancelled = 0
+        self.deadlines = []
+
+    async def __call__(self, batch, deadline=None):
+        self.deadlines.append(deadline)
+        delay = self.script[min(self.calls, len(self.script) - 1)]
+        self.calls += 1
+        try:
+            await self.clock.sleep(delay)
+        except asyncio.CancelledError:
+            self.cancelled += 1
+            raise
+        self.completed += 1
+
+
+def _primed_server(clock, target, hedge_quantile=95.0):
+    """Server with a passthrough endpoint whose bucket-1 window is warm
+    (10 × 100ms samples → hedge threshold 0.1s)."""
+    server = AsyncProxyServer(
+        clock=clock, config=RuntimeConfig(hedge_quantile=hedge_quantile,
+                                          hedge_min_samples=10))
+    server.add_endpoint("ep", sla=SLA, target=target, policy="passthrough")
+    monitor = server.frontend.endpoint("ep").policy.monitor
+    for _ in range(10):
+        monitor.record_upstream(1, 0.1, 0.0)
+    return server
+
+
+class TestProxyHedging:
+    def test_hedge_fires_and_winner_cancels_loser(self):
+        clock = FakeClock()
+        target = _ScriptedTarget(clock, [10.0, 0.05])  # primary stuck
+        server = _primed_server(clock, target)
+
+        async def main():
+            await server.start()
+            ticket = server.submit(endpoint="ep")
+            await ticket.future
+            await server.drain()
+            return ticket
+
+        ticket = run(clock, main())
+        assert not ticket.timed_out
+        # hedge armed at 0.1 (p95 of primed window), wins at 0.1 + 0.05
+        assert clock.now() == pytest.approx(0.15)
+        assert server.hedged_batches == 1 and server.hedge_wins == 1
+        assert target.calls == 2
+        assert target.completed == 1 and target.cancelled == 1
+        assert server.completed == 1
+        server.assert_conserved(require_drained=True)
+
+    def test_fast_primary_never_hedges(self):
+        clock = FakeClock()
+        target = _ScriptedTarget(clock, [0.05])
+        server = _primed_server(clock, target)
+
+        async def main():
+            await server.start()
+            server.submit(endpoint="ep")
+            await server.drain()
+
+        run(clock, main())
+        assert server.hedged_batches == 0 and target.calls == 1
+
+    def test_primary_beats_hedge(self):
+        """Primary slower than the threshold but faster than the hedge:
+        primary wins, hedge is the cancelled loser."""
+        clock = FakeClock()
+        target = _ScriptedTarget(clock, [0.2, 9.0])
+        server = _primed_server(clock, target)
+
+        async def main():
+            await server.start()
+            server.submit(endpoint="ep")
+            await server.drain()
+
+        run(clock, main())
+        assert server.hedged_batches == 1 and server.hedge_wins == 0
+        assert target.completed == 1 and target.cancelled == 1
+        assert clock.now() == pytest.approx(0.2)
+
+    def test_hedge_determinism_same_seed(self):
+        kw = dict(policy="mlproxy", sla=SLA,
+                  workload=AffineLatency(a=0.05, c=0.005, noise_cv=0.5),
+                  arrivals=PoissonProcess(rate=30.0, duration=40.0),
+                  duration=40.0, seed=9,
+                  config=RuntimeConfig(hedge_quantile=90.0))
+        a = run_replay(**kw)
+        b = run_replay(**kw)
+        assert a.summary["hedged_batches"] == b.summary["hedged_batches"] > 0
+        assert a.dispatch_log == b.dispatch_log
+        np.testing.assert_array_equal(a.e2e_latencies, b.e2e_latencies)
+
+    def test_hedged_batch_counts_as_retry(self):
+        """A won hedge stamps attempts=2, feeding the retry-aware stats."""
+        clock = FakeClock()
+        target = _ScriptedTarget(clock, [10.0, 0.05])
+        server = _primed_server(clock, target)
+
+        async def main():
+            await server.start()
+            server.submit(endpoint="ep")
+            await server.drain()
+
+        run(clock, main())
+        st = server.frontend.stats(clock.now())["endpoints"]["ep"]
+        assert st["retried_batches"] == 1
+
+    def test_sim_live_hedge_counts_agree_exactly_for_static(self):
+        duration = 60.0
+        times = sample_schedule(PoissonProcess(rate=30.0, duration=duration),
+                                7, duration)
+        sla = SLAConfig(slo_target=ms(500), deadline_factor=1.0)
+        kw = {"batch_size": 8, "timeout": 0.2}
+        sim = run_simulation(
+            policy="static", sla=sla, workload=WL, arrivals=Schedule(times),
+            platform_config=TRANSPARENT, duration=duration, seed=7,
+            policy_kwargs=dict(kw), hedge_quantile=95.0)
+        live = run_replay(
+            policy="static", sla=sla, workload=WL, arrivals=Schedule(times),
+            duration=duration, seed=7, policy_kwargs=dict(kw),
+            config=RuntimeConfig(hedge_quantile=95.0))
+        assert live.summary["hedged_batches"] == sim.summary["hedged_batches"]
+        assert live.summary["timed_out"] == sim.summary["timed_out"]
+        assert live.summary["completed"] == sim.summary["completed"]
+
+
+# ------------------------------------------------------------ regressions
+class TestSubmitDuplicate:
+    def test_duplicate_outstanding_req_id_raises(self):
+        clock = FakeClock()
+        server = AsyncProxyServer(clock=clock)
+        server.add_endpoint(
+            "ep", sla=SLA,
+            target=SyntheticTarget(WL, clock, rng=np.random.default_rng(0)),
+            policy="static", policy_kwargs={"batch_size": 8, "timeout": 60.0},
+        )
+
+        async def main():
+            await server.start()
+            req = Request(arrival_time=clock.now())
+            server.submit(req, endpoint="ep")
+            with pytest.raises(ValueError, match="already outstanding"):
+                server.submit(req, endpoint="ep")
+            await server.drain()
+
+        run(clock, main())
+        # the failed submit must not skew the ledger: one request in,
+        # one completed, zero lost
+        c = server.assert_conserved(require_drained=True)
+        assert c["submitted"] == 1 and c["completed"] == 1
+
+    def test_resubmit_after_completion_is_allowed(self):
+        clock = FakeClock()
+        server = AsyncProxyServer(clock=clock)
+        server.add_endpoint(
+            "ep", sla=SLA,
+            target=SyntheticTarget(WL, clock, rng=np.random.default_rng(0)),
+            policy="passthrough",
+        )
+
+        async def main():
+            await server.start()
+            req = Request(arrival_time=clock.now())
+            await server.submit(req, endpoint="ep").future
+            req.completion_time = None  # recycle the id after completion
+            await server.submit(req, endpoint="ep").future
+            await server.drain()
+
+        run(clock, main())
+        assert server.completed == 2
+
+
+class _StuckTarget:
+    max_batch = None
+
+    def __init__(self):
+        self.cancelled = 0
+
+    async def __call__(self, batch, deadline=None):
+        try:
+            await asyncio.Event().wait()  # never completes
+        except asyncio.CancelledError:
+            self.cancelled += 1
+            raise
+
+
+class TestDrainTimeout:
+    def test_drain_timeout_cancels_stuck_target(self):
+        clock = FakeClock()
+        target = _StuckTarget()
+        server = AsyncProxyServer(clock=clock)
+        server.add_endpoint("ep", sla=SLA, target=target, policy="passthrough")
+
+        async def main():
+            await server.start()
+            tickets = [server.submit(endpoint="ep") for _ in range(3)]
+            await server.drain(timeout=5.0)
+            return tickets
+
+        tickets = run(clock, main())
+        assert clock.now() == pytest.approx(5.0)  # returned AT the bound
+        assert server.failed == 3
+        assert target.cancelled == 3
+        for t in tickets:
+            assert isinstance(t.future.exception(), DrainTimeout)
+        c = server.assert_conserved(require_drained=True)
+        assert c["lost"] == 0 and c["outstanding"] == 0
+
+    def test_drain_timeout_noop_when_work_finishes_first(self):
+        res = run_replay(
+            policy="mlproxy", sla=SLA, workload=WL,
+            arrivals=PoissonProcess(rate=30.0, duration=10.0), duration=10.0,
+            seed=1,
+        )
+        assert res.conservation["failed"] == 0  # sanity: normal path
+
+        clock = FakeClock()
+        server = AsyncProxyServer(clock=clock)
+        server.add_endpoint(
+            "ep", sla=SLA,
+            target=SyntheticTarget(WL, clock, rng=np.random.default_rng(0)),
+            policy="passthrough",
+        )
+
+        async def main():
+            await server.start()
+            server.submit(endpoint="ep")
+            await server.drain(timeout=60.0)
+
+        run(clock, main())
+        assert server.failed == 0 and server.completed == 1
+        assert clock.now() < 1.0  # did not sit out the full timeout
+
+    def test_midrun_target_failure_still_fails_drained_assert(self):
+        """Only drain-cancelled failures are tolerated at shutdown: a
+        target that raised mid-run must still trip assert_conserved."""
+        class BrokenTarget:
+            max_batch = None
+
+            async def __call__(self, batch, deadline=None):
+                raise RuntimeError("upstream bug")
+
+        clock = FakeClock()
+        server = AsyncProxyServer(clock=clock)
+        server.add_endpoint("ep", sla=SLA, target=BrokenTarget(),
+                            policy="passthrough")
+
+        async def main():
+            await server.start()
+            ticket = server.submit(endpoint="ep")
+            with pytest.raises(RuntimeError, match="upstream bug"):
+                await ticket.future
+            with pytest.raises(AssertionError, match="failed dispatches"):
+                await server.drain(timeout=10.0)
+
+        run(clock, main())
+        assert server.failed == 1 and server.drain_cancelled == 0
+
+    def test_wall_clock_drain_timeout_returns(self):
+        """Real wall-clock: a stuck upstream cannot hang drain()."""
+        from repro.runtime import WallClock
+
+        clock = WallClock()
+        server = AsyncProxyServer(clock=clock)
+        server.add_endpoint("ep", sla=SLA, target=_StuckTarget(),
+                            policy="passthrough")
+
+        async def main():
+            await server.start()
+            server.submit(endpoint="ep")
+            await server.drain(timeout=0.2)
+
+        run(clock, main())
+        assert server.failed == 1
+        server.assert_conserved(require_drained=True)
+
+
+# ------------------------------------------------------- summary plumbing
+class TestSummaryFixes:
+    def test_throughput_uses_active_window(self):
+        """A clock predating the server must not deflate throughput."""
+        clock = FakeClock(start=1000.0)  # long-lived clock, late server
+        server = AsyncProxyServer(clock=clock)
+        server.add_endpoint(
+            "ep", sla=SLA,
+            target=SyntheticTarget(AffineLatency(a=0.1, c=0.0, noise_cv=0.0),
+                                   clock, rng=np.random.default_rng(0)),
+            policy="passthrough",
+        )
+
+        async def main():
+            await server.start()
+            for _ in range(10):
+                server.submit(endpoint="ep")
+                await clock.sleep(0.1)
+            await server.drain()
+
+        run(clock, main())
+        s = server.summary()
+        # active window ≈ 1.0s for 10 requests → ~10 rps, NOT 10/1001
+        assert s["throughput"] == pytest.approx(10.0, rel=0.15)
+
+    def test_summary_surfaces_deadline_and_hedge_keys(self):
+        sla = SLAConfig(slo_target=ms(500), deadline_factor=0.25)
+        res = run_replay(
+            policy="static", sla=sla, workload=WL,
+            arrivals=PoissonProcess(rate=30.0, duration=15.0), duration=15.0,
+            seed=3, policy_kwargs={"batch_size": 8, "timeout": 0.2},
+        )
+        s = res.summary
+        assert s["timed_out"] > 0
+        assert s["endpoints"]["ep"]["timed_out"] == s["timed_out"]
+        for key in ("failed", "hedged_batches", "hedge_wins"):
+            assert key in s

@@ -268,6 +268,27 @@ class TestPolicyCapClamp:
             clamp_policy_kwargs("static", {"batch_size": 100, "timeout": 0.1},
                                 32, mode="error")
 
+    def test_unset_clipper_oracle_cap_never_raises(self):
+        """Regression: the caller never set max_cap, so neither mode may
+        raise — the policy's implicit default is not a caller choice."""
+        for policy in ("clipper", "oracle"):
+            kw = clamp_policy_kwargs(policy, {}, 64, mode="error")
+            assert kw.get("max_cap") == 64  # default 256 lowered silently
+            kw = clamp_policy_kwargs(policy, {}, 64, mode="clamp")
+            assert kw.get("max_cap") == 64
+
+    def test_unset_cap_not_injected_when_default_fits(self):
+        """Regression: clamping can never *raise* an unset cap — when the
+        engine bucket exceeds the policy default, nothing is injected."""
+        for policy in ("clipper", "oracle"):
+            assert "max_cap" not in clamp_policy_kwargs(policy, {}, 512)
+
+    def test_provided_clipper_cap_still_clamps_and_errors(self):
+        assert clamp_policy_kwargs("clipper", {"max_cap": 128}, 32)[
+            "max_cap"] == 32
+        with pytest.raises(ValueError, match="exceeds the largest"):
+            clamp_policy_kwargs("clipper", {"max_cap": 128}, 32, mode="error")
+
     def test_server_applies_clamp_from_target(self):
         clock = FakeClock()
         server = AsyncProxyServer(clock=clock)
