@@ -65,6 +65,15 @@ BENCHES = {
     "deadlines": (
         "bench_deadlines",
         lambda rows: sum(r["violations"] for r in rows)),
+    # JAX data plane: fused decode loop vs per-token reference + packing
+    # cost at equal SLA; derived = fused speedup on the best
+    # decode-dominated config (0 if ANY bucket's outputs diverge from the
+    # per-token reference loop)
+    "engine": (
+        "bench_engine",
+        lambda rows: (max(r["speedup"] for r in rows if r["kind"] == "decode")
+                      if all(r["bit_identical"] for r in rows
+                             if r["kind"] == "decode") else 0.0)),
 }
 
 

@@ -205,31 +205,48 @@ class BatchQueue:
             return deadline
         return min(deadline, expiry)
 
-    def _dispatch(self, now: float, cause: str) -> Optional[Batch]:
-        """Dispatch the entire queue as one batch. The only implementation.
+    def _dispatch(self, now: float, cause: str,
+                  limit: Optional[int] = None) -> Optional[Batch]:
+        """Dispatch the queue (or its first ``limit`` requests) as one batch.
+        The only implementation.
 
         Already-expired requests are evicted *before* batch formation; if
         that empties the queue there is nothing to dispatch and ``None``
-        is returned (state already reset by the sweep).
+        is returned (state already reset by the sweep). ``limit`` is how
+        bucket-aware packing dispatches exactly at a bucket edge: the head
+        of the FIFO goes out, the tail stays queued with its FRT anchor
+        re-anchored on the new oldest request.
         """
         if self._deadline_count:
             self.expire(now)
             if not self._queue:
                 return None
-        batch = Batch(requests=self._queue, dispatch_time=now, cause=cause)
+        if limit is not None and 0 < limit < len(self._queue):
+            head, tail = self._queue[:limit], self._queue[limit:]
+        else:
+            head, tail = self._queue, []
+        batch = Batch(requests=head, dispatch_time=now, cause=cause)
         if self.bucketing is not None:
             batch.bucket_size = bucket_of(batch.size, self.bucketing)
         for r in batch.requests:
             r.dispatch_time = now
-        self._queue = []
-        self.first_arrival = None
+        self._queue = tail
         self.next_deadline = None
-        self._deadline_count = 0
-        self._min_deadline = None
+        if tail:
+            # FIFO order: the head of the surviving queue is the oldest
+            self.first_arrival = tail[0].arrival_time
+            deadlines = [r.deadline for r in tail if r.deadline is not None]
+            self._deadline_count = len(deadlines)
+            self._min_deadline = min(deadlines, default=None)
+        else:
+            self.first_arrival = None
+            self._deadline_count = 0
+            self._min_deadline = None
         self.dispatched_batches += 1
         self.dispatched_requests += batch.size
         if self.monitor is not None:
-            self.monitor.record_dispatch(batch.size, cause)
+            self.monitor.record_dispatch(batch.size, cause,
+                                         effective_size=batch.effective_size)
         self.dispatch_fn(batch)
         return batch
 

@@ -6,7 +6,7 @@ callers may use :func:`ms` for readability.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Tuple, Union
 
 
 def ms(x: float) -> float:
@@ -158,18 +158,60 @@ class ProxyConfig:
     dispatch_overhead: float = 0.0
     # Batch-size bucketing for fixed-shape accelerators (beyond paper —
     # TPU adaptation). ``None`` disables; ``"pow2"`` rounds dispatch sizes
-    # up to powers of two and keys monitor windows by bucket.
-    bucketing: Optional[str] = None
+    # up to powers of two and keys monitor windows by bucket; an explicit
+    # ascending tuple of bucket sizes (the engine's ``batch_buckets``)
+    # rounds up within the tuple and clamps above its largest entry.
+    bucketing: Union[None, str, Tuple[int, ...]] = None
+    # Bucket-aware batch packing: when set to the engine's batch buckets,
+    # the scheduler's full-trigger rounds Max_BS up to the next bucket
+    # edge and dispatches exactly at it. Latency within a bucket is the
+    # padded bucket's latency (the monitor keys by it), so topping a
+    # forming batch up to the edge is free throughput — the extra
+    # requests ride in slots that would otherwise be padding. ``None``
+    # disables (dispatch at the raw Max_BS). Setting ``pack_buckets``
+    # without ``bucketing`` implies ``bucketing = pack_buckets``.
+    pack_buckets: Optional[Tuple[int, ...]] = None
 
     def __post_init__(self) -> None:
-        if self.bucketing not in (None, "pow2"):
+        if isinstance(self.bucketing, (tuple, list)):
+            object.__setattr__(self, "bucketing",
+                               validate_buckets(self.bucketing, "bucketing"))
+        elif self.bucketing not in (None, "pow2"):
             raise ValueError(f"unknown bucketing {self.bucketing!r}")
+        if self.pack_buckets is not None:
+            object.__setattr__(
+                self, "pack_buckets",
+                validate_buckets(self.pack_buckets, "pack_buckets"))
+            if self.bucketing is None:
+                object.__setattr__(self, "bucketing", self.pack_buckets)
 
 
-def bucket_of(batch_size: int, scheme: Optional[str]) -> int:
-    """Map a raw batch size to its compiled bucket under ``scheme``."""
+def validate_buckets(buckets, what: str = "buckets") -> Tuple[int, ...]:
+    """Normalize an explicit bucket tuple: ints, positive, ascending."""
+    out = tuple(int(b) for b in buckets)
+    if not out:
+        raise ValueError(f"{what} must be non-empty")
+    if any(b <= 0 for b in out) or any(
+            a >= b for a, b in zip(out, out[1:])):
+        raise ValueError(f"{what} must be positive and ascending, got {out}")
+    return out
+
+
+def bucket_of(batch_size: int,
+              scheme: Union[None, str, Tuple[int, ...]]) -> int:
+    """Map a raw batch size to its compiled bucket under ``scheme``.
+
+    ``scheme`` may be None (identity), ``"pow2"``, or an explicit
+    ascending tuple of bucket sizes; with a tuple, sizes above the
+    largest bucket clamp to it (the dispatch path chunks them).
+    """
     if scheme is None or batch_size <= 1:
         return batch_size
+    if isinstance(scheme, tuple):
+        for b in scheme:
+            if batch_size <= b:
+                return b
+        return scheme[-1]
     if scheme == "pow2":
         return 1 << (batch_size - 1).bit_length()
     raise ValueError(f"unknown bucketing {scheme!r}")

@@ -161,6 +161,8 @@ class ProxyFrontend:
         agg_requests = sum(s["dispatched_requests"] for s in per.values())
         agg_retried = sum(s.get("retried_batches", 0) for s in per.values())
         agg_upstream = sum(s.get("upstream_batches", 0) for s in per.values())
+        agg_slots = sum(s.get("dispatched_slots", 0) for s in per.values())
+        agg_padded = sum(s.get("padded_slots", 0) for s in per.values())
         return {
             "endpoints": per,
             "aggregate": {
@@ -176,6 +178,9 @@ class ProxyFrontend:
                 # *completed* upstream batches, same as per-endpoint stats
                 "retried_batches": agg_retried,
                 "retry_rate": agg_retried / agg_upstream if agg_upstream else 0.0,
+                # bucket slots burned on padding, over all dispatched slots
+                # (0.0 on unbucketed endpoints: every slot is a request)
+                "padding_waste": agg_padded / agg_slots if agg_slots else 0.0,
             },
         }
 

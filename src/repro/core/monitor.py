@@ -260,6 +260,10 @@ class SmartMonitor:
         self.lifetime_upstream_batches = 0
         self.lifetime_upstream_attempts = 0
         self.lifetime_retried_batches = 0
+        # padding accounting on bucketed backends: a dispatch of n requests
+        # into a bucket of size b occupies b slots, b - n of them padding
+        self.lifetime_dispatched_slots = 0
+        self.lifetime_padded_slots = 0
 
     # ---------------------------------------------------------------- record
     def record_upstream(self, batch_size: int, latency: float, now: float,
@@ -295,12 +299,21 @@ class SmartMonitor:
         if latency > self.sla.slo_target:
             self.lifetime_violations += 1
 
-    def record_dispatch(self, batch_size: int, cause: str) -> None:
-        """cause ∈ {'full', 'timeout', 'flush'}."""
+    def record_dispatch(self, batch_size: int, cause: str,
+                        effective_size: Optional[int] = None) -> None:
+        """cause ∈ {'full', 'timeout', 'flush'}.
+
+        ``effective_size`` is the padded bucket the batch executes as on
+        fixed-shape backends (defaults to ``batch_size``: no padding);
+        the gap feeds the padding-waste counters.
+        """
         self._total_dispatches += 1
         self.lifetime_dispatches += 1
         if cause == "timeout":
             self._timeout_dispatches += 1
+        eff = effective_size if effective_size is not None else batch_size
+        self.lifetime_dispatched_slots += eff
+        self.lifetime_padded_slots += max(0, eff - batch_size)
 
     # -------------------------------------------------------------- estimate
     def upstream_percentile(self, batch_size: int, now: float) -> float:
@@ -393,6 +406,12 @@ class SmartMonitor:
             return 0.0
         return self.lifetime_retried_batches / self.lifetime_upstream_batches
 
+    def padding_waste(self) -> float:
+        """Lifetime fraction of dispatched bucket slots that were padding."""
+        if self.lifetime_dispatched_slots == 0:
+            return 0.0
+        return self.lifetime_padded_slots / self.lifetime_dispatched_slots
+
     def observed_batch_sizes(self) -> List[int]:
         return sorted(self._upstream)
 
@@ -414,6 +433,10 @@ class SmartMonitor:
                 self.lifetime_upstream_attempts,
                 self.lifetime_retried_batches,
             ),
+            "lifetime_padding": (
+                self.lifetime_dispatched_slots,
+                self.lifetime_padded_slots,
+            ),
         }
 
     def restore(self, state: dict) -> None:
@@ -434,3 +457,7 @@ class SmartMonitor:
             self.lifetime_upstream_attempts,
             self.lifetime_retried_batches,
         ) = state.get("lifetime_upstream", (0, 0, 0))
+        (
+            self.lifetime_dispatched_slots,
+            self.lifetime_padded_slots,
+        ) = state.get("lifetime_padding", (0, 0))

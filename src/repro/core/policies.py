@@ -27,10 +27,11 @@ only its decision logic — a target batch size and a queue timeout:
 """
 from __future__ import annotations
 
-from typing import Callable, Optional
+from typing import Callable, Optional, Sequence
 
 from repro.core.batch_queue import BatchQueue, ExpireFn
-from repro.core.config import MonitorConfig, ProxyConfig, SLAConfig
+from repro.core.config import (MonitorConfig, ProxyConfig, SLAConfig,
+                               bucket_of, validate_buckets)
 from repro.core.monitor import SmartMonitor
 from repro.core.proxy import MLProxy
 from repro.core.request import Batch, Request
@@ -43,13 +44,30 @@ DEFAULT_MAX_CAP = 256
 
 
 class BatchingPolicy:
-    """Decision logic + shared :class:`BatchQueue` for non-MLProxy policies."""
+    """Decision logic + shared :class:`BatchQueue` for non-MLProxy policies.
+
+    ``pack_buckets`` (the engine's ``batch_buckets``) turns on bucket-aware
+    packing: the full-trigger threshold rounds the policy's target up to
+    the next bucket edge and dispatches exactly at it, so "full" batches
+    execute with zero padding. Latency within a bucket is the padded
+    bucket's latency (the monitor keys by it), so the extra requests ride
+    in slots that would otherwise be padding. Timeout/flush dispatches
+    still flush the whole queue — SLA pressure beats packing efficiency.
+    Setting ``pack_buckets`` without ``bucketing`` implies
+    ``bucketing = pack_buckets``.
+    """
 
     def __init__(self, sla: SLAConfig, dispatch_fn: Callable[[Batch], None],
                  monitor_config: Optional[MonitorConfig] = None,
-                 bucketing: Optional[str] = None,
-                 expire_fn: Optional[ExpireFn] = None) -> None:
+                 bucketing=None,
+                 expire_fn: Optional[ExpireFn] = None,
+                 pack_buckets: Optional[Sequence[int]] = None) -> None:
         self.sla = sla
+        if pack_buckets is not None:
+            pack_buckets = validate_buckets(pack_buckets, "pack_buckets")
+            if bucketing is None:
+                bucketing = pack_buckets
+        self.pack_buckets = pack_buckets
         self.monitor = SmartMonitor(monitor_config or MonitorConfig(), sla)
         self.queue = BatchQueue(dispatch_fn, self.monitor, bucketing=bucketing,
                                 expire_fn=expire_fn)
@@ -79,12 +97,32 @@ class BatchingPolicy:
     def dispatched_requests(self) -> int:
         return self.queue.dispatched_requests
 
+    def packed_target(self, now: float) -> int:
+        """Full-trigger threshold: the raw target, rounded up to the next
+        bucket edge when packing is on (clamped to the largest bucket)."""
+        target = max(1, self.target_batch_size(now))
+        if self.pack_buckets is not None:
+            target = bucket_of(target, self.pack_buckets)
+        return target
+
     def on_request(self, request: Request, now: float) -> None:
         self.queue.expire(now)  # evict dead requests before sizing the batch
         self.queue.append(request, now)
-        if self.queue.queue_len >= max(1, self.target_batch_size(now)):
-            self.queue._dispatch(now, "full")
-            return
+        if self.pack_buckets is None:
+            if self.queue.queue_len >= max(1, self.target_batch_size(now)):
+                self.queue._dispatch(now, "full")
+                return
+        else:
+            # packed full-trigger: dispatch exactly at the bucket edge;
+            # any backlog beyond it (e.g. after restore) stays queued and
+            # falls through to re-arm the timeout below
+            target = self.packed_target(now)
+            while self.queue.queue_len >= target:
+                if self.queue._dispatch(now, "full", limit=target) is None:
+                    break
+                target = self.packed_target(now)
+            if not self.queue.queue_len:
+                return
         to = self.queue_timeout(now)
         if to is None:
             self.queue.next_deadline = None
@@ -144,6 +182,9 @@ class BatchingPolicy:
             "upstream_batches": self.monitor.lifetime_upstream_batches,
             "retried_batches": self.monitor.lifetime_retried_batches,
             "retry_rate": self.monitor.retry_rate(),
+            "dispatched_slots": self.monitor.lifetime_dispatched_slots,
+            "padded_slots": self.monitor.lifetime_padded_slots,
+            "padding_waste": self.monitor.padding_waste(),
         }
 
     def snapshot(self) -> dict:

@@ -117,6 +117,9 @@ class MLProxy:
             "upstream_batches": self.monitor.lifetime_upstream_batches,
             "retried_batches": self.monitor.lifetime_retried_batches,
             "retry_rate": self.monitor.retry_rate(),
+            "dispatched_slots": self.monitor.lifetime_dispatched_slots,
+            "padded_slots": self.monitor.lifetime_padded_slots,
+            "padding_waste": self.monitor.padding_waste(),
         }
 
     # ------------------------------------------------------ fault tolerance

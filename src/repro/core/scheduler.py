@@ -24,7 +24,7 @@ from __future__ import annotations
 from typing import Callable, Optional
 
 from repro.core.batch_queue import BatchQueue, DispatchFn, ExpireFn
-from repro.core.config import ProxyConfig
+from repro.core.config import ProxyConfig, bucket_of
 from repro.core.monitor import SmartMonitor
 from repro.core.request import Request
 
@@ -72,9 +72,23 @@ class QueueScheduler:
         self.queue.append(request, now)
 
         max_bs = max(1, self.max_bs_fn())
-        if self.queue.queue_len >= max_bs:
-            self.queue._dispatch(now, cause="full")
-            return
+        pack = self.config.pack_buckets
+        if pack is None:
+            if self.queue.queue_len >= max_bs:
+                self.queue._dispatch(now, cause="full")
+                return
+        else:
+            # Bucket-aware packing: round Max_BS up to the next engine
+            # bucket edge and dispatch exactly at it — a "full" batch then
+            # executes with zero padding, and the monitor's RT95[bucket]
+            # keying means the timeout math already prices the edge.
+            target = bucket_of(max_bs, pack)
+            while self.queue.queue_len >= target:
+                if self.queue._dispatch(now, cause="full",
+                                        limit=target) is None:
+                    break
+            if not self.queue.queue_len:
+                return
 
         # DTO = SLO − RT95[N_q + 1]; probing one size larger guards against
         # the latency of the batch after one more arrival (paper eq. 1).

@@ -84,7 +84,7 @@ def run_replay(*, policy: str, sla: SLAConfig, arrivals: ArrivalProcess,
                policy_kwargs: Optional[dict] = None,
                config: Optional[RuntimeConfig] = None,
                clock: Optional[Clock] = None, seed: int = 0,
-               endpoint: str = "ep") -> ReplayResult:
+               endpoint: str = "ep", pack: bool = False) -> ReplayResult:
     """Run one endpoint's workload through the live runtime, start to drain.
 
     Either pass a ready ``target`` or a ``workload`` latency model (wrapped
@@ -102,7 +102,7 @@ def run_replay(*, policy: str, sla: SLAConfig, arrivals: ArrivalProcess,
         target = SyntheticTarget(workload, clk, rng=svc_rng,
                                  concurrency=target_concurrency)
     server.add_endpoint(endpoint, sla=sla, target=target, policy=policy,
-                        policy_kwargs=policy_kwargs)
+                        policy_kwargs=policy_kwargs, pack=pack)
     gen = LoadGenerator(server, arrivals, duration=duration, rng=arr_rng,
                         endpoint=endpoint)
 

@@ -257,13 +257,33 @@ class AsyncProxyServer:
     # ------------------------------------------------------------- topology
     def add_endpoint(self, name: str, *, sla: SLAConfig,
                      target: DispatchTarget, policy: str = "mlproxy",
-                     policy_kwargs: Optional[dict] = None) -> None:
+                     policy_kwargs: Optional[dict] = None,
+                     pack: bool = False) -> None:
         """Register an endpoint backed by ``target``.
 
         If the target declares a ``max_batch`` (fixed-shape engines), the
         policy's batch-size cap is reconciled with it per
         ``RuntimeConfig.oversize`` before the policy is built.
+
+        ``pack=True`` turns on bucket-aware packing against the target's
+        ``batch_buckets``: the policy's full-trigger rounds its batch
+        target up to the next engine bucket edge and dispatches exactly at
+        it, so "full" batches execute with zero padding (the padding-waste
+        stat in :meth:`summary` shows the effect).
         """
+        if pack:
+            buckets = getattr(target, "batch_buckets", None)
+            if not buckets:
+                raise ValueError(
+                    f"pack=True needs a target exposing batch_buckets; "
+                    f"{type(target).__name__} has none")
+            policy_kwargs = dict(policy_kwargs or {})
+            if policy == "mlproxy" and "proxy_config" in policy_kwargs:
+                pc = policy_kwargs["proxy_config"]
+                policy_kwargs["proxy_config"] = dataclasses.replace(
+                    pc, pack_buckets=tuple(buckets))
+            else:
+                policy_kwargs.setdefault("pack_buckets", tuple(buckets))
         if target.max_batch is not None:
             policy_kwargs = clamp_policy_kwargs(
                 policy, policy_kwargs, target.max_batch, self.config.oversize
@@ -665,6 +685,7 @@ class AsyncProxyServer:
                 "max_bs": float(st.get("max_bs", 1)),
                 "retry_rate": float(st.get("retry_rate", 0.0)),
                 "timed_out": float(st.get("expired", 0)),
+                "padding_waste": float(st.get("padding_waste", 0.0)),
             }
         e2e = np.concatenate(all_e2e) if all_e2e else np.empty(0)
         n = len(e2e)
@@ -696,6 +717,7 @@ class AsyncProxyServer:
             "failed": float(cons["failed"]),
             "hedged_batches": float(self.hedged_batches),
             "hedge_wins": float(self.hedge_wins),
+            "padding_waste": fstats["aggregate"]["padding_waste"],
             "lost": float(cons["lost"]),
             "throughput": throughput,
             "endpoints": per,

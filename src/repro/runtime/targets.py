@@ -24,6 +24,8 @@ instead of discovering the mismatch mid-dispatch.
 from __future__ import annotations
 
 import asyncio
+import functools
+import inspect
 from typing import Optional
 
 import numpy as np
@@ -44,6 +46,10 @@ class DispatchTarget:
 
     #: Largest batch the target can execute in one call (None = unbounded).
     max_batch: Optional[int] = None
+    #: Compiled batch buckets of a fixed-shape backend (None = shapeless).
+    #: The server's ``add_endpoint(pack=True)`` reads this to turn on
+    #: bucket-aware packing in the owning policy.
+    batch_buckets = None
 
     async def __call__(self, batch: Batch,
                        deadline: Optional[float] = None) -> None:
@@ -60,9 +66,14 @@ class SyntheticTarget(DispatchTarget):
 
     def __init__(self, latency_model: LatencyModel, clock: Clock,
                  rng: Optional[np.random.Generator] = None,
-                 concurrency: int = 0) -> None:
+                 concurrency: int = 0,
+                 batch_buckets=None) -> None:
         self.latency = latency_model
         self.clock = clock
+        # an optional bucket grid makes the synthetic upstream behave like
+        # a fixed-shape engine for packing experiments (latency models
+        # already price batches by Batch.effective_size)
+        self.batch_buckets = tuple(batch_buckets) if batch_buckets else None
         self.rng = rng if rng is not None else np.random.default_rng(0)
         self.concurrency = concurrency
         self._sem = asyncio.Semaphore(concurrency) if concurrency > 0 else None
@@ -97,25 +108,43 @@ class EngineTarget(DispatchTarget):
     """Real JAX engine upstream via :class:`ReplicaPoolTarget`.
 
     The blocking pool call runs in ``asyncio``'s default thread-pool
-    executor (one batch at a time by default — a single host device is
-    serial anyway), keeping the proxy loop responsive. Oversized batches
+    executor, keeping the proxy loop responsive. Concurrency defaults to
+    the pool's replica count — the pool's per-replica locks let that many
+    dispatches overlap on distinct replicas, so the runtime no longer
+    serializes a multi-replica pool behind one slot. Oversized batches
     are chunked by the pool target (see ``serving/batcher.py``), so a
     policy whose cap exceeds the largest engine bucket degrades to
     multiple engine calls instead of raising mid-dispatch.
     """
 
-    def __init__(self, pool_target, max_concurrent: int = 1) -> None:
+    def __init__(self, pool_target,
+                 max_concurrent: Optional[int] = None) -> None:
         # `pool_target` is a ReplicaPoolTarget (imported lazily by callers
         # so this module stays importable without JAX).
         self.pool_target = pool_target
         buckets = pool_target.pool.engine_cfg.batch_buckets
         self.max_batch = max(buckets)
+        self.batch_buckets = tuple(buckets)
+        if max_concurrent is None:
+            max_concurrent = max(1, len(pool_target.pool.replicas))
         self._sem = asyncio.Semaphore(max_concurrent)
+        # Older pool targets predate the ``deadline=`` parameter.
+        try:
+            sig = inspect.signature(pool_target.__call__)
+            self._takes_deadline = "deadline" in sig.parameters
+        except (TypeError, ValueError):
+            self._takes_deadline = False
 
     async def __call__(self, batch: Batch,
                        deadline: Optional[float] = None) -> None:
-        # ``deadline`` is accepted for protocol parity; a JAX engine call
-        # is not interruptible mid-kernel, so it is not enforced here.
+        # The deadline is forwarded to the pool target, whose chunked
+        # path aborts unexecuted chunks once it passes (a chunk already
+        # running is not interruptible mid-kernel).
         loop = asyncio.get_running_loop()
+        if self._takes_deadline:
+            call = functools.partial(self.pool_target, batch,
+                                     deadline=deadline)
+        else:
+            call = functools.partial(self.pool_target, batch)
         async with self._sem:
-            await loop.run_in_executor(None, self.pool_target, batch)
+            await loop.run_in_executor(None, call)

@@ -17,7 +17,7 @@ same code path.
 from __future__ import annotations
 
 import time
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict, Mapping, Optional, Tuple
 
 import numpy as np
 
@@ -27,33 +27,64 @@ from repro.serving.engine import InferenceEngine, ReplicaPool, next_bucket
 
 
 class EngineBackedLatency(LatencyModel):
-    """LatencyModel whose samples are real engine executions."""
+    """LatencyModel whose samples are real engine executions.
+
+    Estimates start cold; seed them from warmup timings
+    (``seed(engine.warmup())`` or ``warmup=True``) so the first policy
+    RT95 probes see realistic per-bucket latency instead of 0.0 — a cold
+    0.0 estimate makes the scheduler promise free batches until real
+    samples correct it.
+    """
 
     name = "engine"
     noise_cv = 0.0  # real wall-clock variation is the noise
 
     def __init__(self, engine: InferenceEngine, prompt_len: int = 16,
-                 gen_len: Optional[int] = None) -> None:
+                 gen_len: Optional[int] = None, warmup: bool = False) -> None:
         self.engine = engine
         self.prompt_len = prompt_len
         self.gen_len = gen_len
         self._ema: Dict[int, float] = {}
+        if warmup:
+            self.seed(engine.warmup(plen=prompt_len))
+
+    def seed(self, timings: Mapping[Tuple[int, int], float]) -> None:
+        """Seed per-bucket EMAs from ``warmup()`` timings.
+
+        ``timings`` maps (batch bucket, prompt bucket) → seconds; for each
+        batch bucket the timing of the prompt bucket closest to this
+        model's ``prompt_len`` is used. Measured samples keep updating the
+        EMA afterwards — the seed only covers the cold window.
+        """
+        by_bucket: Dict[int, Tuple[int, float]] = {}
+        for (bucket, plen), dt in timings.items():
+            best = by_bucket.get(bucket)
+            dist = abs(plen - self.prompt_len)
+            if best is None or dist < best[0]:
+                by_bucket[bucket] = (dist, dt)
+        for bucket, (_, dt) in by_bucket.items():
+            self._ema.setdefault(bucket, dt)
 
     def mean(self, batch_size: int) -> float:
         # clamp: estimation must stay total for any size the policy may
         # probe (RT95[N_q+1] can exceed the largest compiled bucket); an
         # oversized size executes as sequential largest-bucket chunks, so
-        # the estimate carries the same chunk factor as sample()
+        # the estimate carries the same chunk factor sample() pays
         largest = self.engine.ecfg.batch_buckets[-1]
         chunks = max(1, -(-batch_size // largest))
         bucket = next_bucket(batch_size, self.engine.ecfg.batch_buckets,
                              clamp=True)
         if bucket in self._ema:
             return chunks * self._ema[bucket]
-        # never measured: optimistic estimate from the closest known bucket
+        # Never measured: scale the nearest known bucket's EMA by the
+        # bucket-size ratio. The old behaviour (largest known EMA,
+        # unscaled) under-estimated bigger buckets and over-estimated
+        # smaller ones; linear-in-bucket scaling is conservative for
+        # sub-linear batching but keeps estimates ordered.
         known = sorted(self._ema)
         if known:
-            return chunks * self._ema[known[-1]]
+            nearest = min(known, key=lambda b: abs(b - bucket))
+            return chunks * self._ema[nearest] * (bucket / nearest)
         return 0.0
 
     def sample(self, batch_size: int, rng: np.random.Generator) -> float:
@@ -88,6 +119,13 @@ class ReplicaPoolTarget:
     back through ``on_done(batch, latency_s, now)`` — typically the owning
     policy's ``on_response`` — closing the monitor feedback loop on real
     hardware.
+
+    ``deadline`` (absolute, on this target's ``clock``) bounds the chunked
+    path: once it has passed, remaining chunks are aborted — their
+    requests are marked ``timed_out`` with no payload and counted in
+    ``timing["deadline_aborted"]`` — instead of burning engine time on
+    work nobody is waiting for. The chunk already running is never
+    interrupted (a JAX dispatch is not interruptible mid-kernel).
     """
 
     def __init__(self, pool: ReplicaPool, prompt_len: int = 16,
@@ -101,6 +139,9 @@ class ReplicaPoolTarget:
         self.clock = clock
         self.batches = 0
         self.requests = 0
+        #: requests whose chunk was never executed because the batch
+        #: deadline passed mid-way through the chunked path
+        self.deadline_aborted = 0
 
     def _prompts(self, batch: Batch) -> np.ndarray:
         prompts = np.zeros((batch.size, self.prompt_len), np.int32)
@@ -113,10 +154,11 @@ class ReplicaPoolTarget:
             prompts[i, self.prompt_len - len(toks):] = toks  # left-pad
         return prompts
 
-    def __call__(self, batch: Batch):
+    def __call__(self, batch: Batch, deadline: Optional[float] = None):
         t0 = self.clock()
         prompts = self._prompts(batch)
         largest = self.pool.engine_cfg.batch_buckets[-1]
+        aborted_from: Optional[int] = None
         if batch.size <= largest:
             out, timing = self.pool.generate(prompts, gen_len=self.gen_len)
         else:
@@ -125,18 +167,34 @@ class ReplicaPoolTarget:
             # raises on a policy whose cap outruns the engine's buckets.
             outs = []
             timing = None
+            chunks = 0
             for lo in range(0, batch.size, largest):
+                if (deadline is not None and lo > 0
+                        and self.clock() >= deadline):
+                    aborted_from = lo
+                    break
                 o, timing = self.pool.generate(prompts[lo:lo + largest],
                                                gen_len=self.gen_len)
                 outs.append(o)
+                chunks += 1
             out = np.concatenate(outs, axis=0)
+            if out.shape[0] < batch.size:  # aborted tail: zero rows
+                pad = np.zeros((batch.size - out.shape[0],) + out.shape[1:],
+                               out.dtype)
+                out = np.concatenate([out, pad], axis=0)
             timing = dict(timing)
-            timing["chunks"] = -(-batch.size // largest)
+            timing["chunks"] = chunks
         latency = self.clock() - t0
         self.batches += 1
         self.requests += batch.size
-        for req, tokens in zip(batch.requests, out):
-            req.payload = tokens
+        if aborted_from is not None:
+            timing["deadline_aborted"] = batch.size - aborted_from
+            self.deadline_aborted += batch.size - aborted_from
+        for i, (req, tokens) in enumerate(zip(batch.requests, out)):
+            if aborted_from is not None and i >= aborted_from:
+                req.timed_out = True  # partial batch: tail reported dead
+            else:
+                req.payload = tokens
         if self.on_done is not None:
             self.on_done(batch, latency, t0 + latency)
         return out, timing

@@ -1,15 +1,38 @@
 """JAX inference engine — the data plane MLProxy fronts on TPU.
 
 Fixed-shape compiled programs make batch-size *bucketing* mandatory on
-XLA backends: the engine compiles ``prefill``/``decode_step`` once per
+XLA backends: the engine compiles ``prefill``/decode once per
 (batch-bucket, prompt-bucket) and pads incoming batches up to the bucket.
 This is the TPU-native adaptation of the paper (DESIGN.md §2): the proxy's
 monitor keys its latency windows by the padded bucket size, which is the
 size whose latency the next dispatch decision must predict.
+
+Hot-path layout (the fast data plane):
+
+* **Fused decode** (``EngineConfig.fused_decode``, default on): the whole
+  greedy decode loop is one compiled ``lax.scan`` program per
+  (batch bucket, step count) — one device dispatch per batch instead of
+  ``gen_len`` Python→XLA round-trips. Token outputs are bit-identical to
+  the per-token path (greedy argmax over the same logits); set
+  ``fused_decode=False`` to get the per-token reference loop.
+* **Gen-length bucketing** (``EngineConfig.gen_buckets``): requested
+  generation lengths round up to the next configured step bucket, so the
+  fused program compiles once per bucket instead of once per distinct
+  ``gen_len``. Extra steps are computed and sliced off; outputs for the
+  requested length are unchanged (greedy decoding is prefix-stable).
+* **Persistent KV-cache pool** (``EngineConfig.cache_pool``, default on):
+  ``generate`` checks its cache out of a per-bucket pool and returns it
+  afterwards instead of allocating + zero-filling per call. Reuse without
+  zero-fill is sound because ``prefill`` overwrites rows ``[0:plen]`` for
+  every row of the bucket and resets ``cache["len"]``, and decode
+  attention masks positions ``>= cache_len`` — stale rows from a previous
+  batch are never attended. Donated cache arguments let XLA recycle the
+  buffers in place.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -45,6 +68,18 @@ class EngineConfig:
     max_len: int = 160  # prompt bucket + generation budget
     gen_len: int = 8
     greedy: bool = True
+    #: Compile the decode loop as one lax.scan program per (batch bucket,
+    #: step bucket) instead of dispatching per token. Off = the per-token
+    #: reference loop (bit-identical outputs, ~gen_len× more dispatches).
+    fused_decode: bool = True
+    #: Step buckets for the fused loop: a requested gen_len rounds up to
+    #: the next bucket (extra tokens are computed then sliced off), so the
+    #: compile cache stays bounded under varying gen_len. None = compile
+    #: per distinct requested length.
+    gen_buckets: Optional[Tuple[int, ...]] = None
+    #: Reuse KV caches across batches via a per-bucket pool instead of
+    #: allocating + zero-filling per generate() call.
+    cache_pool: bool = True
 
 
 class InferenceEngine:
@@ -60,8 +95,14 @@ class InferenceEngine:
         self.params = params
         self._prefill_cache: Dict[Tuple[int, int], Any] = {}
         self._decode_cache: Dict[int, Any] = {}
+        self._fused_cache: Dict[Tuple[int, int], Any] = {}
+        self._kv_pool: Dict[int, Any] = {}
         self.compile_count = 0
+        #: KV-cache allocations (pool misses); with the pool on, this
+        #: saturates at one per bucket instead of growing per batch.
+        self.cache_allocs = 0
         self.stats: Dict[str, float] = {"batches": 0, "requests": 0, "tokens": 0}
+        self._in_warmup = False
 
     # ------------------------------------------------------------- compiled
     def _prefill_fn(self, bucket: int, plen: int):
@@ -73,7 +114,10 @@ class InferenceEngine:
             def run(params, tokens, cache):
                 return model.prefill(params, tokens, cache)
 
-            fn = jax.jit(run)
+            # The input cache's contents are dead (prefill overwrites the
+            # prompt rows and resets the length): donate so XLA writes the
+            # new cache into the pooled buffers instead of copying.
+            fn = jax.jit(run, donate_argnames=("cache",))
             self._prefill_cache[key] = fn
             self.compile_count += 1
         return fn
@@ -93,11 +137,82 @@ class InferenceEngine:
             self.compile_count += 1
         return fn
 
-    def warmup(self, plen: int = 16) -> None:
-        """Precompile every batch bucket (what a replica does at startup)."""
-        for b in self.ecfg.batch_buckets:
-            prompts = np.zeros((b, plen), np.int32)
-            self.generate(prompts, gen_len=1)
+    def _fused_fn(self, bucket: int, steps: int):
+        """One compiled program running ``steps - 1`` greedy decode steps."""
+        key = (bucket, steps)
+        fn = self._fused_cache.get(key)
+        if fn is None:
+            model = self.model
+
+            def run(params, first, cache):
+                def body(carry, _):
+                    tok, c = carry
+                    logits, c = model.decode_step(params, tok, c)
+                    nxt = jnp.argmax(logits[:, -1], axis=-1)
+                    nxt = nxt.astype(jnp.int32)[:, None]
+                    return (nxt, c), nxt
+
+                (_, cache), toks = jax.lax.scan(
+                    body, (first, cache), None, length=steps - 1)
+                # (steps-1, bucket, 1) → (bucket, steps-1)
+                return jnp.swapaxes(toks[..., 0], 0, 1), cache
+
+            fn = jax.jit(run, donate_argnames=("cache",))
+            self._fused_cache[key] = fn
+            self.compile_count += 1
+        return fn
+
+    # ------------------------------------------------------------ kv cache
+    def _checkout_cache(self, bucket: int):
+        cache = self._kv_pool.pop(bucket, None) if self.ecfg.cache_pool else None
+        if cache is None:
+            cache = self.model.init_cache(bucket, self.ecfg.max_len)
+            self.cache_allocs += 1
+        return cache
+
+    def _return_cache(self, bucket: int, cache) -> None:
+        if self.ecfg.cache_pool:
+            self._kv_pool[bucket] = cache
+
+    def _gen_steps(self, gen_len: int, plen: int) -> int:
+        """Total generated tokens the compiled loop produces for ``gen_len``.
+
+        Rounds up to ``gen_buckets`` (bounded compile cache), clamped so
+        decode never writes past ``max_len``, and never below the
+        requested length.
+        """
+        steps = gen_len
+        if self.ecfg.gen_buckets:
+            steps = next_bucket(gen_len, self.ecfg.gen_buckets, clamp=True)
+        return max(gen_len, min(steps, self.ecfg.max_len - plen + 1))
+
+    def warmup(self, plen: Optional[int] = None) -> Dict[Tuple[int, int], float]:
+        """Precompile the configured buckets (what a replica does at startup).
+
+        Warms every (batch bucket, prompt bucket) pair — or just the pairs
+        for one prompt bucket when ``plen`` is given — at the default
+        ``gen_len``, priming the prefill/decode compile caches and the KV
+        pool. Returns post-compile wall seconds per ``(bucket, plen)``
+        pair (each pair is run twice; the first run pays compilation and
+        is discarded), the seed material for
+        :class:`~repro.serving.batcher.EngineBackedLatency` estimates.
+
+        Warmup traffic is synthetic: serving ``stats`` are not touched.
+        """
+        plens = ([next_bucket(plen, self.ecfg.prompt_buckets, clamp=True)]
+                 if plen is not None else list(self.ecfg.prompt_buckets))
+        timings: Dict[Tuple[int, int], float] = {}
+        self._in_warmup = True
+        try:
+            for b in self.ecfg.batch_buckets:
+                for p in plens:
+                    prompts = np.zeros((b, p), np.int32)
+                    self.generate(prompts)  # cold: compiles
+                    _, timing = self.generate(prompts)
+                    timings[(b, p)] = timing["latency_s"]
+        finally:
+            self._in_warmup = False
+        return timings
 
     # ------------------------------------------------------------------ api
     def generate(self, prompts: np.ndarray, gen_len: Optional[int] = None,
@@ -116,20 +231,28 @@ class InferenceEngine:
         padded[:n, plen - plen_raw:] = prompts  # left-pad into the bucket
         tokens = jnp.asarray(padded)
 
-        cache = self.model.init_cache(bucket, self.ecfg.max_len)
+        cache = self._checkout_cache(bucket)
         logits, cache = self._prefill_fn(bucket, plen)(self.params, tokens, cache)
-        out = [jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]]
-        decode = self._decode_fn(bucket)
-        cur = out[0]
-        for _ in range(gen_len - 1):
-            cur, cache = decode(self.params, cur, cache)
-            out.append(cur)
-        result = jnp.concatenate(out, axis=1)
+        first = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        if self.ecfg.fused_decode and gen_len > 1:
+            steps = self._gen_steps(gen_len, plen)
+            rest, cache = self._fused_fn(bucket, steps)(self.params, first, cache)
+            result = jnp.concatenate([first, rest[:, :gen_len - 1]], axis=1)
+        else:
+            out = [first]
+            decode = self._decode_fn(bucket)
+            cur = first
+            for _ in range(gen_len - 1):
+                cur, cache = decode(self.params, cur, cache)
+                out.append(cur)
+            result = jnp.concatenate(out, axis=1)
         result = jax.device_get(result)[:n]
+        self._return_cache(bucket, cache)
         dt = time.perf_counter() - t0
-        self.stats["batches"] += 1
-        self.stats["requests"] += n
-        self.stats["tokens"] += n * gen_len
+        if not self._in_warmup:
+            self.stats["batches"] += 1
+            self.stats["requests"] += n
+            self.stats["tokens"] += n * gen_len
         return result, {
             "latency_s": dt, "bucket": bucket, "prompt_bucket": plen,
             "padding_waste": (bucket - n) / bucket,
@@ -144,6 +267,15 @@ class ReplicaPool:
     deployment schedules independent model servers. ``fail(i)`` marks a
     replica down (its in-flight work is retried elsewhere); ``scale_to``
     adds/removes replicas.
+
+    Dispatch is **parallel across replicas**: each replica is guarded by
+    its own lock (a replica's compile caches and KV pool are not
+    thread-safe), and ``generate`` prefers an *idle* healthy replica over
+    strict rotation, so concurrent callers overlap on different replicas
+    instead of serializing behind one. Synchronization with the device
+    happens only at the result boundary (``device_get`` inside the
+    replica), so one caller's host-side padding of the next batch overlaps
+    another replica's device compute.
     """
 
     def __init__(self, cfg: ModelConfig, engine_cfg: EngineConfig,
@@ -154,6 +286,7 @@ class ReplicaPool:
         self.engine_cfg = engine_cfg
         self.replicas: List[Optional[InferenceEngine]] = []
         self.healthy: List[bool] = []
+        self._locks: List[threading.Lock] = []
         self._rr = 0
         self.retries = 0
         self.scale_to(n_replicas)
@@ -171,12 +304,14 @@ class ReplicaPool:
         if n < len(self.replicas):
             del self.replicas[n:]
             del self.healthy[n:]
+            del self._locks[n:]
             self._rr = self._rr % len(self.replicas) if self.replicas else 0
         while len(self.replicas) < n:
             eng = InferenceEngine(self.cfg, self.engine_cfg,
                                   params=self._template.params)
             self.replicas.append(eng)
             self.healthy.append(True)
+            self._locks.append(threading.Lock())
 
     @property
     def n_healthy(self) -> int:
@@ -188,15 +323,49 @@ class ReplicaPool:
     def recover(self, index: int) -> None:
         self.healthy[index] = True
 
+    def warmup(self, plen: Optional[int] = None) -> Dict[Tuple[int, int], float]:
+        """Warm every replica; returns the first replica's timings."""
+        timings: Dict[Tuple[int, int], float] = {}
+        for i, eng in enumerate(self.replicas):
+            t = eng.warmup(plen)
+            if i == 0:
+                timings = t
+        return timings
+
+    def _acquire_replica(self) -> Tuple[Optional[int], Optional[threading.Lock]]:
+        """Pick a healthy replica and acquire its lock.
+
+        One non-blocking sweep in round-robin order first — an idle
+        replica wins immediately, which is what lets concurrent
+        dispatches overlap — then a blocking acquire on the
+        round-robin-next healthy replica when all are busy. Returns
+        (None, None) when no replica is healthy.
+        """
+        n = len(self.replicas)
+        start = self._rr
+        for off in range(1, n + 1):
+            idx = (start + off) % n
+            if not self.healthy[idx]:
+                continue
+            if self._locks[idx].acquire(blocking=False):
+                self._rr = idx
+                return idx, self._locks[idx]
+        for off in range(1, n + 1):
+            idx = (start + off) % n
+            if self.healthy[idx]:
+                self._rr = idx
+                self._locks[idx].acquire()
+                return idx, self._locks[idx]
+        return None, None
+
     def generate(self, prompts: np.ndarray, gen_len: Optional[int] = None):
-        """Round-robin dispatch with failover (at-least-once)."""
+        """Idle-preferring round-robin dispatch with failover (at-least-once)."""
         if not self.replicas:
             raise RuntimeError("no healthy replicas")
         attempts = 0
         while attempts <= len(self.replicas):
-            self._rr = (self._rr + 1) % max(len(self.replicas), 1)
-            idx = self._rr
-            if not self.healthy[idx]:
+            idx, lock = self._acquire_replica()
+            if idx is None:
                 attempts += 1
                 continue
             try:
@@ -207,4 +376,6 @@ class ReplicaPool:
                 self.fail(idx)
                 self.retries += 1
                 attempts += 1
+            finally:
+                lock.release()
         raise RuntimeError("no healthy replicas")

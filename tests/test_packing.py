@@ -1,0 +1,183 @@
+"""Bucket-aware packing: dispatch at engine bucket edges, waste stats.
+
+No JAX — the packing path is pure control plane. Covers the tuple
+bucketing scheme, the packed full-trigger across every policy, request
+conservation, the partial-dispatch queue split, the SmartMonitor
+padding-waste counters, and snapshot back-compat.
+"""
+import pytest
+
+from repro.core import (MonitorConfig, ProxyConfig, Request, SLAConfig,
+                        SmartMonitor)
+from repro.core.batch_queue import BatchQueue
+from repro.core.config import OptimizerConfig, bucket_of, validate_buckets
+from repro.core.policies import make_policy
+
+BUCKETS = (1, 2, 4, 8)
+POLICIES = ("passthrough", "static", "clipper", "oracle", "mlproxy")
+
+
+def _policy_kwargs(policy):
+    if policy == "static":
+        return {"batch_size": 5, "timeout": 10.0}
+    if policy == "oracle":
+        return {"latency_model": lambda bs: 0.01 * bs, "max_cap": 6}
+    if policy == "mlproxy":
+        # start the AIMD cap mid-bucket so packing has something to round
+        return {"optimizer": OptimizerConfig(initial_max_bs=5),
+                "monitor": MonitorConfig(optimistic_default=0.0)}
+    return {}
+
+
+def _drive(policy, pack_buckets, n_requests=23, **extra):
+    """Feed a fast burst through a policy; return (policy, batches)."""
+    out = []
+    sla = SLAConfig(slo_target=100.0)
+    kwargs = _policy_kwargs(policy)
+    kwargs.update(extra)
+    if pack_buckets is not None:
+        kwargs["pack_buckets"] = pack_buckets
+    pol = make_policy(policy, sla, out.append, **kwargs)
+    for i in range(n_requests):
+        pol.on_request(Request(arrival_time=i * 1e-4), now=i * 1e-4)
+    return pol, out
+
+
+# ------------------------------------------------------------ tuple buckets
+def test_bucket_of_tuple_scheme():
+    assert bucket_of(1, BUCKETS) == 1
+    assert bucket_of(3, BUCKETS) == 4
+    assert bucket_of(8, BUCKETS) == 8
+    assert bucket_of(9, BUCKETS) == 8  # above largest: clamps (chunked)
+
+
+def test_validate_buckets_rejects_bad_grids():
+    assert validate_buckets([1, 2, 4]) == (1, 2, 4)
+    with pytest.raises(ValueError):
+        validate_buckets(())
+    with pytest.raises(ValueError):
+        validate_buckets((4, 2))
+    with pytest.raises(ValueError):
+        validate_buckets((0, 2))
+
+
+def test_proxy_config_pack_buckets_implies_bucketing():
+    cfg = ProxyConfig(sla=SLAConfig(slo_target=1.0), pack_buckets=BUCKETS)
+    assert cfg.bucketing == BUCKETS
+    # explicit bucketing wins over the implication
+    cfg2 = ProxyConfig(sla=SLAConfig(slo_target=1.0), pack_buckets=BUCKETS,
+                       bucketing="pow2")
+    assert cfg2.bucketing == "pow2"
+
+
+# -------------------------------------------------------- packed dispatches
+@pytest.mark.parametrize("policy", POLICIES)
+def test_packing_conserves_requests(policy):
+    pol, out = _drive(policy, BUCKETS)
+    dispatched = sum(b.size for b in out)
+    assert dispatched + pol.queue_len == 23
+    pol.flush(1.0)
+    assert sum(b.size for b in out) == 23
+    assert pol.queue_len == 0
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_packed_full_batches_land_on_bucket_edges(policy):
+    _, out = _drive(policy, BUCKETS)
+    for b in out:
+        if b.cause == "full":
+            assert b.size in BUCKETS, (policy, b.size)
+            # dispatched exactly at the edge: zero padding on full batches
+            assert b.effective_size == b.size
+
+
+def test_static_packed_rounds_target_up_to_edge():
+    # target 5 rounds up to bucket 8: burst of 23 → 8 + 8, 7 left queued
+    pol, out = _drive("static", BUCKETS)
+    assert [b.size for b in out] == [8, 8]
+    assert pol.queue_len == 7
+    assert pol.stats(0.01)["padding_waste"] == 0.0
+
+
+def test_static_unpacked_bucketing_pays_padding():
+    # same burst, bucketed but NOT packed: full-trigger at 5 → bucket 8
+    pol, out = _drive("static", None, bucketing=BUCKETS)
+    assert all(b.size == 5 for b in out if b.cause == "full")
+    assert all(b.effective_size == 8 for b in out if b.cause == "full")
+    st = pol.stats(0.01)
+    assert st["padded_slots"] > 0
+    assert st["padding_waste"] == pytest.approx(
+        st["padded_slots"] / st["dispatched_slots"])
+
+
+def test_mlproxy_packed_dispatches_at_edges():
+    pol, out = _drive("mlproxy", BUCKETS)
+    full = [b for b in out if b.cause == "full"]
+    assert full, "burst never filled a packed batch"
+    assert all(b.size in BUCKETS for b in full)
+    assert pol.stats(0.01)["padding_waste"] == 0.0
+
+
+def test_timeout_flushes_whole_queue_despite_packing():
+    # 3 queued (< bucket edge 8): the timeout dispatch takes all 3 —
+    # SLA pressure beats packing efficiency
+    pol, out = _drive("static", BUCKETS, n_requests=3)
+    assert not out
+    pol.on_timer(0.0 + 10.0 + 1e-6)
+    assert [b.size for b in out] == [3]
+    assert out[0].cause == "timeout"
+    assert out[0].effective_size == 4  # still bucketed: padded to 4
+
+
+# -------------------------------------------------- queue partial dispatch
+def test_batch_queue_limit_splits_head_and_keeps_tail():
+    out = []
+    mon = SmartMonitor(MonitorConfig(), SLAConfig(slo_target=1.0))
+    q = BatchQueue(out.append, mon)
+    for i in range(10):
+        q.append(Request(arrival_time=float(i)), now=float(i))
+    q.next_deadline = 42.0
+    batch = q._dispatch(9.5, cause="full", limit=4)
+    assert batch.size == 4
+    assert [r.arrival_time for r in batch.requests] == [0.0, 1.0, 2.0, 3.0]
+    assert q.queue_len == 6
+    # tail re-anchors: oldest remaining request drives FRT, timer cleared
+    assert q.frt(9.5) == pytest.approx(9.5 - 4.0)
+    assert q.next_deadline is None
+    # limit >= queue drains everything (same as unlimited)
+    rest = q._dispatch(9.6, cause="full", limit=99)
+    assert rest.size == 6 and q.queue_len == 0
+
+
+def test_batch_queue_limit_recomputes_tail_deadlines():
+    out = []
+    mon = SmartMonitor(MonitorConfig(), SLAConfig(slo_target=1.0))
+    q = BatchQueue(out.append, mon)
+    q.append(Request(arrival_time=0.0), now=0.0)
+    q.append(Request(arrival_time=0.1, deadline=5.0), now=0.1)
+    q.append(Request(arrival_time=0.2, deadline=3.0), now=0.2)
+    q._dispatch(0.3, cause="full", limit=1)  # takes the deadline-free head
+    assert q.queue_len == 2
+    assert q.next_event_time() == 3.0  # earliest surviving expiry
+
+
+# ----------------------------------------------------------- monitor stats
+def test_monitor_padding_counters_and_snapshot_roundtrip():
+    mon = SmartMonitor(MonitorConfig(), SLAConfig(slo_target=1.0))
+    mon.record_dispatch(5, "full", effective_size=8)
+    mon.record_dispatch(8, "full", effective_size=8)
+    assert mon.lifetime_dispatched_slots == 16
+    assert mon.lifetime_padded_slots == 3
+    assert mon.padding_waste() == pytest.approx(3 / 16)
+    clone = SmartMonitor(MonitorConfig(), SLAConfig(slo_target=1.0))
+    clone.restore(mon.snapshot())
+    assert clone.padding_waste() == pytest.approx(3 / 16)
+
+
+def test_monitor_restore_accepts_pre_padding_snapshots():
+    mon = SmartMonitor(MonitorConfig(), SLAConfig(slo_target=1.0))
+    state = mon.snapshot()
+    state.pop("lifetime_padding", None)  # snapshot from an older build
+    clone = SmartMonitor(MonitorConfig(), SLAConfig(slo_target=1.0))
+    clone.restore(state)
+    assert clone.padding_waste() == 0.0
