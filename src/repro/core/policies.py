@@ -27,7 +27,7 @@ only its decision logic — a target batch size and a queue timeout:
 """
 from __future__ import annotations
 
-from typing import Callable, Optional, Sequence
+from typing import Callable, List, Optional, Sequence
 
 from repro.core.batch_queue import BatchQueue, ExpireFn
 from repro.core.config import (MonitorConfig, ProxyConfig, SLAConfig,
@@ -152,7 +152,7 @@ class BatchingPolicy:
         for r in batch.requests:
             self.monitor.record_e2e(r.e2e_latency, now)
 
-    def expire(self, now: float):
+    def expire(self, now: float) -> List[Request]:
         """Evict deadline-expired queued requests (O(1) when none)."""
         return self.queue.expire(now)
 

@@ -22,7 +22,7 @@ instances (or baselines) are composed behind one
 """
 from __future__ import annotations
 
-from typing import Callable, Optional
+from typing import Callable, List, Optional
 
 from repro.core.batch_queue import ExpireFn
 from repro.core.config import ProxyConfig
@@ -86,7 +86,7 @@ class MLProxy:
             return update
         return deadline
 
-    def expire(self, now: float):
+    def expire(self, now: float) -> List[Request]:
         """Evict deadline-expired queued requests (O(1) when none)."""
         return self.scheduler.queue.expire(now)
 

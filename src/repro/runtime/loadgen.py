@@ -15,7 +15,7 @@ endpoint, run arrivals to exhaustion, drain, and hand back the summary.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -71,7 +71,8 @@ class ReplayResult:
     conservation: dict
 
 
-def _spawn_streams(seed: int):
+def _spawn_streams(
+        seed: int) -> Tuple[np.random.Generator, np.random.Generator]:
     """(arrivals, service) generators — mirrors the simulator's split."""
     arr_ss, svc_ss = np.random.SeedSequence(seed).spawn(2)
     return np.random.default_rng(arr_ss), np.random.default_rng(svc_ss)

@@ -26,7 +26,7 @@ from __future__ import annotations
 import asyncio
 import functools
 import inspect
-from typing import Optional
+from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -49,7 +49,7 @@ class DispatchTarget:
     #: Compiled batch buckets of a fixed-shape backend (None = shapeless).
     #: The server's ``add_endpoint(pack=True)`` reads this to turn on
     #: bucket-aware packing in the owning policy.
-    batch_buckets = None
+    batch_buckets: Optional[Tuple[int, ...]] = None
 
     async def __call__(self, batch: Batch,
                        deadline: Optional[float] = None) -> None:
@@ -67,7 +67,7 @@ class SyntheticTarget(DispatchTarget):
     def __init__(self, latency_model: LatencyModel, clock: Clock,
                  rng: Optional[np.random.Generator] = None,
                  concurrency: int = 0,
-                 batch_buckets=None) -> None:
+                 batch_buckets: Optional[Sequence[int]] = None) -> None:
         self.latency = latency_model
         self.clock = clock
         # an optional bucket grid makes the synthetic upstream behave like
@@ -118,10 +118,15 @@ class EngineTarget(DispatchTarget):
     """
 
     def __init__(self, pool_target,
-                 max_concurrent: Optional[int] = None) -> None:
+                 max_concurrent: Optional[int] = None,
+                 clock: Optional[Clock] = None) -> None:
         # `pool_target` is a ReplicaPoolTarget (imported lazily by callers
         # so this module stays importable without JAX).
         self.pool_target = pool_target
+        # the runtime clock deadlines are absolute on; required to forward
+        # deadlines (the pool target's measurement clock has a different
+        # epoch, so the absolute value must be translated, not passed raw)
+        self.clock = clock
         buckets = pool_target.pool.engine_cfg.batch_buckets
         self.max_batch = max(buckets)
         self.batch_buckets = tuple(buckets)
@@ -135,6 +140,23 @@ class EngineTarget(DispatchTarget):
         except (TypeError, ValueError):
             self._takes_deadline = False
 
+    def _pool_deadline(self, deadline: Optional[float]) -> Optional[float]:
+        """Translate a runtime-clock deadline onto the pool's clock.
+
+        Both are absolute instants but on different epochs (the runtime
+        clock zeroes at server start; the pool's measurement clock is raw
+        monotonic), so the *remaining budget* is carried across:
+        ``pool_now + (deadline - runtime_now)``. Without a runtime clock
+        there is no sound translation — forward None rather than a
+        wrong-epoch value that would abort every follow-up chunk.
+        """
+        if deadline is None or self.clock is None:
+            return None
+        pool_clock = getattr(self.pool_target, "clock", None)
+        if pool_clock is None:
+            return None
+        return pool_clock() + (deadline - self.clock.now())
+
     async def __call__(self, batch: Batch,
                        deadline: Optional[float] = None) -> None:
         # The deadline is forwarded to the pool target, whose chunked
@@ -143,7 +165,7 @@ class EngineTarget(DispatchTarget):
         loop = asyncio.get_running_loop()
         if self._takes_deadline:
             call = functools.partial(self.pool_target, batch,
-                                     deadline=deadline)
+                                     deadline=self._pool_deadline(deadline))
         else:
             call = functools.partial(self.pool_target, batch)
         async with self._sem:

@@ -551,6 +551,8 @@ class ServerlessPlatform:
             "requeued_batches": self.requeued_batches,
             "hedged_dispatches": self.hedged_dispatches,
             "cancelled_attempts": self.cancelled_attempts,
+            "failed_attempts": self.failed_attempts,
+            "cold_starts": self.cold_starts,
         }
 
     def assert_conserved(self, require_drained: bool = False) -> dict:

@@ -16,14 +16,18 @@ same code path.
 """
 from __future__ import annotations
 
-import time
 from typing import Callable, Dict, Mapping, Optional, Tuple
 
 import numpy as np
 
 from repro.core.request import Batch
 from repro.serverless.latency import LatencyModel
-from repro.serving.engine import InferenceEngine, ReplicaPool, next_bucket
+from repro.serving.engine import (
+    InferenceEngine,
+    ReplicaPool,
+    next_bucket,
+    wall_clock,
+)
 
 
 class EngineBackedLatency(LatencyModel):
@@ -131,12 +135,15 @@ class ReplicaPoolTarget:
     def __init__(self, pool: ReplicaPool, prompt_len: int = 16,
                  gen_len: Optional[int] = None,
                  on_done: Optional[Callable[[Batch, float, float], None]] = None,
-                 clock: Callable[[], float] = time.monotonic) -> None:
+                 clock: Optional[Callable[[], float]] = None) -> None:
         self.pool = pool
         self.prompt_len = prompt_len
         self.gen_len = gen_len
         self.on_done = on_done
-        self.clock = clock
+        # measurement clock; any deadline passed to __call__ must be
+        # absolute on THIS clock (EngineTarget translates runtime-clock
+        # deadlines before forwarding — the two epochs differ)
+        self.clock = clock if clock is not None else wall_clock
         self.batches = 0
         self.requests = 0
         #: requests whose chunk was never executed because the batch

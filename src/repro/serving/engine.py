@@ -61,6 +61,14 @@ def next_bucket(n: int, buckets: Sequence[int], clamp: bool = False) -> int:
     raise ValueError(f"batch {n} exceeds largest bucket {buckets[-1]}")
 
 
+#: The sanctioned wall clock for real-measurement code (this module and
+#: its adapters). Everything that *models* time must take an injected
+#: Clock instead — see ``runtime/clock.py`` and the reprolint
+#: ``wallclock`` rule. Measurement modules importing this alias keep the
+#: repo's wall-clock references in one greppable seam.
+wall_clock = time.monotonic
+
+
 @dataclasses.dataclass
 class EngineConfig:
     batch_buckets: Tuple[int, ...] = (1, 2, 4, 8, 16, 32)

@@ -98,7 +98,7 @@ class ArrivalProcess:
         return np.asarray(out, dtype=np.float64)
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class PoissonProcess(ArrivalProcess):
     """Homogeneous Poisson with rate ``rate`` (req/s) over [0, duration)."""
 
@@ -117,7 +117,7 @@ class PoissonProcess(ArrivalProcess):
                                self.rate, rng)
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class DeterministicProcess(ArrivalProcess):
     """Fixed inter-arrival gap (tests and worst-case analyses)."""
 
@@ -150,7 +150,7 @@ class DeterministicProcess(ArrivalProcess):
         return np.arange(k0, k1 + 1, dtype=np.float64) * self.gap
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class TraceModulatedPoisson(ArrivalProcess):
     """Non-homogeneous Poisson via thinning (Lewis & Shedler, 1979).
 
@@ -202,7 +202,7 @@ class TraceModulatedPoisson(ArrivalProcess):
         return accepted[0] if len(accepted) == 1 else np.concatenate(accepted)
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class Schedule(ArrivalProcess):
     """Replays an explicit, pre-sampled array of arrival times.
 
@@ -263,7 +263,7 @@ def sample_schedule(process: ArrivalProcess, rng, duration: float,
     return out[out < duration]
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class MMPP2(ArrivalProcess):
     """2-state Markov-modulated Poisson process (bursty-load stress tests).
 

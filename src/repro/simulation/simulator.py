@@ -56,7 +56,7 @@ from repro.simulation.events import EventQueue
 from repro.simulation.stats import CompletionLog
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class SimResult:
     summary: Dict[str, float]
     e2e_latencies: np.ndarray  # seconds, one per completed request
@@ -507,7 +507,7 @@ def run_simulation(**kwargs) -> SimResult:
 # ---------------------------------------------------------------------------
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class EndpointSpec:
     """Everything one endpoint needs in a multi-endpoint scenario.
 
@@ -526,7 +526,7 @@ class EndpointSpec:
     platform_config: Optional[PlatformConfig] = None
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class MultiSimResult:
     summary: Dict[str, float]                    # fleet-level aggregate
     endpoints: Dict[str, Dict[str, float]]       # per-endpoint summaries

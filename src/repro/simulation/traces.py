@@ -21,7 +21,7 @@ from typing import List, Sequence
 import numpy as np
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class Trace:
     """Piecewise-constant arrival-rate profile.
 

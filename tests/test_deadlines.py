@@ -689,3 +689,68 @@ class TestSummaryFixes:
         assert s["endpoints"]["ep"]["timed_out"] == s["timed_out"]
         for key in ("failed", "hedged_batches", "hedge_wins"):
             assert key in s
+
+
+# -------------------------------------- EngineTarget deadline translation
+class _StubPoolTarget:
+    """ReplicaPoolTarget stand-in: a measurement clock on its OWN epoch
+    (raw monotonic starts at machine uptime, not at server start)."""
+
+    class _Cfg:
+        batch_buckets = (1, 2, 4)
+
+    class _Pool:
+        engine_cfg = None  # set below
+        replicas = [object()]
+
+    def __init__(self, epoch=1000.0):
+        self.pool = self._Pool()
+        self.pool.engine_cfg = self._Cfg()
+        self._epoch = epoch
+        self.seen = []
+
+    def clock(self):
+        return self._epoch
+
+    def __call__(self, batch, deadline=None):
+        self.seen.append(deadline)
+
+
+class TestEngineTargetDeadlineDomains:
+    """Regression for the clock-domain bug the reprolint `wallclock` rule
+    surfaced: runtime-clock deadlines (small, epoch = server start) were
+    forwarded raw to the pool target's monotonic clock (huge, epoch =
+    machine boot), so every follow-up chunk aborted spuriously."""
+
+    def test_deadline_translated_into_pool_clock_domain(self):
+        from repro.runtime.targets import EngineTarget
+
+        clock = FakeClock()
+        stub = _StubPoolTarget(epoch=1000.0)
+        target = EngineTarget(stub, clock=clock)
+        batch = Batch(requests=[Request(arrival_time=0.0)],
+                      dispatch_time=0.0, cause="full")
+        asyncio.run(target(batch, deadline=0.75))
+        # remaining budget 0.75s carried onto the pool's epoch
+        assert stub.seen == [pytest.approx(1000.75)]
+
+    def test_without_runtime_clock_forwards_none_not_wrong_epoch(self):
+        from repro.runtime.targets import EngineTarget
+
+        stub = _StubPoolTarget(epoch=1000.0)
+        target = EngineTarget(stub)  # no runtime clock wired
+        batch = Batch(requests=[Request(arrival_time=0.0)],
+                      dispatch_time=0.0, cause="full")
+        asyncio.run(target(batch, deadline=0.75))
+        assert stub.seen == [None]
+
+    def test_no_deadline_stays_none(self):
+        from repro.runtime.targets import EngineTarget
+
+        clock = FakeClock()
+        stub = _StubPoolTarget()
+        target = EngineTarget(stub, clock=clock)
+        batch = Batch(requests=[Request(arrival_time=0.0)],
+                      dispatch_time=0.0, cause="full")
+        asyncio.run(target(batch))
+        assert stub.seen == [None]

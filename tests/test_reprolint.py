@@ -1,0 +1,489 @@
+"""reprolint: per-rule inline fixtures + whole-tree self-check (ISSUE 7).
+
+Each rule gets a positive hit, a suppressed hit, and (where the rule has
+one) a whitelisted-path case; the baseline round-trips through
+save/load/apply; and the current tree must lint clean modulo the
+checked-in baseline so a regression fails tier-1 locally, not just the
+CI lint job.
+"""
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parent.parent
+if str(ROOT) not in sys.path:  # `pytest` invoked without repo root on path
+    sys.path.insert(0, str(ROOT))
+
+from tools.reprolint import engine as rl  # noqa: E402
+from tools.reprolint.__main__ import main as rl_main  # noqa: E402
+from tools.reprolint.engine import (  # noqa: E402
+    LintConfig,
+    apply_baseline,
+    lint_paths,
+    lint_sources,
+    load_baseline,
+    save_baseline,
+)
+
+SRC_PATH = "src/repro/somewhere/mod.py"
+
+
+def lint(source, path=SRC_PATH, only=None, extra=None):
+    sources = {path: source}
+    if extra:
+        sources.update(extra)
+    return lint_sources(sources, only=only).findings
+
+
+def rules_of(findings):
+    return [f.rule for f in findings]
+
+
+# ------------------------------------------------------------ determinism
+class TestWallclock:
+    def test_reference_flagged_even_as_default_arg(self):
+        src = ("import time\n"
+               "def f(clock=time.monotonic):\n"
+               "    return clock()\n")
+        (f,) = lint(src, only=["wallclock"])
+        assert f.rule == "wallclock" and f.line == 2
+        assert "time.monotonic" in f.message
+
+    def test_from_import_and_aliased_use_flagged(self):
+        src = ("from time import perf_counter as pc\n"
+               "t0 = pc()\n")
+        found = lint(src, only=["wallclock"])
+        assert rules_of(found) == ["wallclock", "wallclock"]
+
+    def test_datetime_now_flagged(self):
+        src = ("import datetime\n"
+               "stamp = datetime.datetime.now()\n")
+        assert rules_of(lint(src, only=["wallclock"])) == ["wallclock"]
+
+    def test_suppressed(self):
+        src = ("import time\n"
+               "t0 = time.monotonic()  # reprolint: disable=wallclock\n")
+        assert lint(src, only=["wallclock"]) == []
+
+    def test_whitelisted_seam_and_benchmarks(self):
+        src = "import time\nt0 = time.perf_counter()\n"
+        assert lint(src, path="src/repro/runtime/clock.py",
+                    only=["wallclock"]) == []
+        assert lint(src, path="benchmarks/common.py",
+                    only=["wallclock"]) == []
+
+    def test_injected_clock_call_not_flagged(self):
+        src = ("class T:\n"
+               "    def f(self):\n"
+               "        return self.clock()\n")
+        assert lint(src, only=["wallclock"]) == []
+
+
+class TestSleepLiteral:
+    def test_literal_sleep_flagged(self):
+        src = ("import asyncio\n"
+               "async def f():\n"
+               "    await asyncio.sleep(0.5)\n")
+        assert rules_of(lint(src, only=["sleep-literal"])) == ["sleep-literal"]
+
+    def test_zero_yield_and_variable_ok(self):
+        src = ("import asyncio\n"
+               "async def f(d):\n"
+               "    await asyncio.sleep(0)\n"
+               "    await asyncio.sleep(d)\n")
+        assert lint(src, only=["sleep-literal"]) == []
+
+    def test_clock_seam_whitelisted(self):
+        src = "import asyncio\nasync def f():\n    await asyncio.sleep(0.1)\n"
+        assert lint(src, path="src/repro/runtime/clock.py",
+                    only=["sleep-literal"]) == []
+
+    def test_suppressed(self):
+        src = ("import asyncio\n"
+               "async def f():\n"
+               "    await asyncio.sleep(1)"
+               "  # reprolint: disable=sleep-literal\n")
+        assert lint(src, only=["sleep-literal"]) == []
+
+
+class TestUnseededRng:
+    def test_stdlib_random_flagged(self):
+        src = "import random\nx = random.random()\n"
+        found = lint(src, only=["unseeded-rng"])
+        assert found and all(f.rule == "unseeded-rng" for f in found)
+
+    def test_unseeded_default_rng_flagged_seeded_ok(self):
+        src = ("import numpy as np\n"
+               "bad = np.random.default_rng()\n"
+               "good = np.random.default_rng(1234)\n")
+        (f,) = lint(src, only=["unseeded-rng"])
+        assert f.line == 2
+
+    def test_legacy_numpy_global_state_flagged(self):
+        src = "import numpy as np\nnp.random.seed(0)\n"
+        assert rules_of(lint(src, only=["unseeded-rng"])) == ["unseeded-rng"]
+
+    def test_jax_random_and_generator_annotations_ok(self):
+        src = ("import jax\nimport numpy as np\n"
+               "def f(key, rng: np.random.Generator):\n"
+               "    return jax.random.split(key), rng.random()\n")
+        assert lint(src, only=["unseeded-rng"]) == []
+
+    def test_out_of_scope_not_flagged(self):
+        src = "import random\nx = random.random()\n"
+        assert lint(src, path="benchmarks/noise.py",
+                    only=["unseeded-rng"]) == []
+
+
+# ----------------------------------------------------------- async-safety
+class TestDroppedTask:
+    def test_bare_create_task_flagged(self):
+        src = ("import asyncio\n"
+               "async def f(coro):\n"
+               "    asyncio.create_task(coro)\n")
+        assert rules_of(lint(src, only=["dropped-task"])) == ["dropped-task"]
+
+    def test_loop_create_task_flagged(self):
+        src = ("import asyncio\n"
+               "async def f(coro):\n"
+               "    asyncio.get_running_loop().create_task(coro)\n")
+        assert rules_of(lint(src, only=["dropped-task"])) == ["dropped-task"]
+
+    def test_kept_reference_ok(self):
+        src = ("import asyncio\n"
+               "async def f(self, coro):\n"
+               "    t = asyncio.create_task(coro)\n"
+               "    self._tasks.add(asyncio.create_task(coro))\n"
+               "    return t\n")
+        assert lint(src, only=["dropped-task"]) == []
+
+    def test_suppressed(self):
+        src = ("import asyncio\n"
+               "async def f(coro):\n"
+               "    asyncio.create_task(coro)"
+               "  # reprolint: disable=dropped-task\n")
+        assert lint(src, only=["dropped-task"]) == []
+
+
+class TestBlockingInAsync:
+    def test_time_sleep_in_async_flagged(self):
+        src = ("import time\n"
+               "async def f():\n"
+               "    time.sleep(1.0)\n")
+        found = lint(src, only=["blocking-in-async"])
+        assert rules_of(found) == ["blocking-in-async"]
+
+    def test_open_in_async_flagged(self):
+        src = ("async def f(p):\n"
+               "    with open(p) as fh:\n"
+               "        return fh.read()\n")
+        assert rules_of(lint(src, only=["blocking-in-async"])) == [
+            "blocking-in-async"]
+
+    def test_sync_def_ok_even_nested_in_async(self):
+        src = ("import time\n"
+               "def g():\n"
+               "    time.sleep(1.0)\n"
+               "async def f():\n"
+               "    def inner():\n"
+               "        time.sleep(0.5)\n"
+               "    return inner\n")
+        assert lint(src, only=["blocking-in-async"]) == []
+
+    def test_suppressed(self):
+        src = ("import time\n"
+               "async def f():\n"
+               "    time.sleep(1)  # reprolint: disable=blocking-in-async\n")
+        assert lint(src, only=["blocking-in-async"]) == []
+
+
+class TestAwaitInLock:
+    def test_await_under_sync_lock_flagged(self):
+        src = ("async def f(self):\n"
+               "    with self._lock:\n"
+               "        await self.g()\n")
+        (f,) = lint(src, only=["await-in-lock"])
+        assert f.rule == "await-in-lock" and f.line == 2
+
+    def test_async_with_ok(self):
+        src = ("async def f(self):\n"
+               "    async with self._lock:\n"
+               "        await self.g()\n")
+        assert lint(src, only=["await-in-lock"]) == []
+
+    def test_non_lock_context_ok(self):
+        src = ("async def f(self, p):\n"
+               "    with self.tracer.span(p):\n"
+               "        await self.g()\n")
+        assert lint(src, only=["await-in-lock"]) == []
+
+    def test_await_in_nested_def_not_attributed_to_lock(self):
+        src = ("async def f(self):\n"
+               "    with self._lock:\n"
+               "        async def inner():\n"
+               "            await self.g()\n"
+               "        self.k = inner\n")
+        assert lint(src, only=["await-in-lock"]) == []
+
+    def test_inline_threading_lock_flagged(self):
+        src = ("import threading\n"
+               "async def f(self, mu):\n"
+               "    with threading.Lock():\n"
+               "        await self.g()\n")
+        assert rules_of(lint(src, only=["await-in-lock"])) == [
+            "await-in-lock"]
+
+
+# ------------------------------------------------ protocol & ledger rules
+PROTO_SRC = (
+    "from typing import Protocol\n"
+    "class Policy(Protocol):\n"
+    "    def on_request(self, req, now): ...\n"
+    "    def on_timer(self, now): ...\n"
+    "    def stats(self): ...\n")
+REGISTRY_SRC = (
+    "from mod import Complete, Missing, Derived\n"
+    "def make_policy(name):\n"
+    "    if name == 'complete':\n"
+    "        return Complete()\n"
+    "    if name == 'missing':\n"
+    "        return Missing()\n"
+    "    return Derived()\n")
+
+
+class TestPolicyProtocol:
+    def fixture(self, classes_src):
+        return {
+            "src/repro/core/batch_queue.py": PROTO_SRC,
+            "src/repro/core/policies.py": REGISTRY_SRC,
+            "src/repro/core/mod.py": classes_src,
+        }
+
+    def test_missing_member_flagged(self):
+        classes = (
+            "class Complete:\n"
+            "    def on_request(self, req, now): ...\n"
+            "    def on_timer(self, now): ...\n"
+            "    def stats(self): ...\n"
+            "class Missing:\n"
+            "    def on_request(self, req, now): ...\n"
+            "    def stats(self): ...\n"
+            "class Derived(Complete):\n"
+            "    def stats(self): ...\n")
+        found = lint_sources(self.fixture(classes),
+                             only=["policy-protocol"]).findings
+        (f,) = found
+        assert "Missing" in f.message and "on_timer" in f.message
+        assert "Complete" not in f.message
+
+    def test_inherited_members_count(self):
+        classes = (
+            "class Base:\n"
+            "    def on_request(self, req, now): ...\n"
+            "    def on_timer(self, now): ...\n"
+            "class Complete(Base):\n"
+            "    def stats(self): ...\n"
+            "class Missing(Base):\n"
+            "    def on_request(self, req, now): ...\n"
+            "    def on_timer(self, now): ...\n"
+            "    def stats(self): ...\n"
+            "class Derived(Complete):\n"
+            "    pass\n")
+        assert lint_sources(self.fixture(classes),
+                            only=["policy-protocol"]).findings == []
+
+    def test_unresolvable_base_skipped(self):
+        classes = (
+            "from elsewhere import Mystery\n"
+            "class Complete(Mystery):\n"
+            "    pass\n"
+            "class Missing(Mystery):\n"
+            "    pass\n"
+            "class Derived(Mystery):\n"
+            "    pass\n")
+        assert lint_sources(self.fixture(classes),
+                            only=["policy-protocol"]).findings == []
+
+    def test_real_tree_policies_conform(self):
+        # the actual registry must satisfy the actual protocol
+        result = lint_paths([str(ROOT / "src")], only=["policy-protocol"],
+                            root=ROOT)
+        assert result.findings == []
+
+
+LEDGER_PATH = "src/repro/runtime/server.py"
+
+
+class TestLedgerCounter:
+    def test_unsurfaced_counter_flagged(self):
+        src = ("class Server:\n"
+               "    def work(self):\n"
+               "        self.completed += 1\n"
+               "        self.orphaned += 1\n"
+               "        self.elapsed += self.dt\n"
+               "    def summary(self):\n"
+               "        return {'completed': self.completed}\n")
+        (f,) = lint(src, path=LEDGER_PATH, only=["ledger-counter"])
+        assert "orphaned" in f.message and "elapsed" not in f.message
+
+    def test_gauge_with_decrement_exempt(self):
+        src = ("class Server:\n"
+               "    def work(self):\n"
+               "        self.inflight += 1\n"
+               "        self.inflight -= 1\n"
+               "    def stats(self):\n"
+               "        return {}\n")
+        assert lint(src, path=LEDGER_PATH, only=["ledger-counter"]) == []
+
+    def test_class_without_reporting_method_skipped(self):
+        src = ("class Config:\n"
+               "    def bump(self):\n"
+               "        self.n += 1\n")
+        assert lint(src, path=LEDGER_PATH, only=["ledger-counter"]) == []
+
+    def test_non_ledger_module_not_checked(self):
+        src = ("class T:\n"
+               "    def work(self):\n"
+               "        self.hidden += 1\n"
+               "    def summary(self):\n"
+               "        return {}\n")
+        assert lint(src, path="src/repro/core/monitor.py",
+                    only=["ledger-counter"]) == []
+
+    def test_conservation_counts_as_surfacing(self):
+        src = ("class Platform:\n"
+               "    def work(self):\n"
+               "        self.cold_starts += 1\n"
+               "    def conservation(self):\n"
+               "        return {'cold_starts': self.cold_starts}\n")
+        assert lint(src, path="src/repro/serverless/platform.py",
+                    only=["ledger-counter"]) == []
+
+
+class TestSlotsDataclass:
+    def test_missing_slots_flagged(self):
+        src = ("import dataclasses\n"
+               "@dataclasses.dataclass\n"
+               "class Event:\n"
+               "    t: float\n")
+        (f,) = lint(src, path="src/repro/simulation/events2.py",
+                    only=["slots-dataclass"])
+        assert "Event" in f.message
+
+    def test_call_decorator_without_slots_flagged(self):
+        src = ("from dataclasses import dataclass\n"
+               "@dataclass(frozen=True)\n"
+               "class Event:\n"
+               "    t: float\n")
+        assert rules_of(lint(src, path="src/repro/simulation/events2.py",
+                             only=["slots-dataclass"])) == ["slots-dataclass"]
+
+    def test_slots_true_ok(self):
+        src = ("import dataclasses\n"
+               "@dataclasses.dataclass(slots=True)\n"
+               "class Event:\n"
+               "    t: float\n")
+        assert lint(src, path="src/repro/simulation/events2.py",
+                    only=["slots-dataclass"]) == []
+
+    def test_outside_simulation_not_checked(self):
+        src = ("import dataclasses\n"
+               "@dataclasses.dataclass\n"
+               "class Endpoint:\n"
+               "    name: str\n")
+        assert lint(src, path="src/repro/core/frontend.py",
+                    only=["slots-dataclass"]) == []
+
+
+# ------------------------------------------------- engine-level behaviour
+class TestEngineMechanics:
+    def test_parse_error_reported_not_raised(self):
+        (f,) = lint("def broken(:\n")
+        assert f.rule == "parse-error"
+
+    def test_disable_all_suppresses_any_rule(self):
+        src = ("import time\n"
+               "t = time.monotonic()  # reprolint: disable=all\n")
+        assert lint(src, only=["wallclock"]) == []
+
+    def test_suppression_counted(self):
+        src = ("import time\n"
+               "t = time.monotonic()  # reprolint: disable=wallclock\n")
+        result = lint_sources({SRC_PATH: src}, only=["wallclock"])
+        assert result.suppressed == 1 and result.findings == []
+
+    def test_baseline_round_trip(self, tmp_path):
+        src = "import time\nt = time.monotonic()\n"
+        findings = lint(src, only=["wallclock"])
+        path = tmp_path / "baseline.json"
+        save_baseline(path, [{
+            "rule": f.rule, "path": f.path, "message": f.message,
+            "justification": "grandfathered for the test"}
+            for f in findings])
+        entries = load_baseline(path)
+        fresh, baselined, stale = apply_baseline(findings, entries)
+        assert fresh == [] and len(baselined) == 1 and stale == []
+        # a fixed finding leaves its entry stale; a new finding is fresh
+        fresh, baselined, stale = apply_baseline([], entries)
+        assert fresh == [] and baselined == [] and len(stale) == 1
+
+    def test_baseline_rejects_entry_without_justification(self, tmp_path):
+        path = tmp_path / "baseline.json"
+        path.write_text(json.dumps({"entries": [
+            {"rule": "wallclock", "path": "x.py", "message": "m"}]}))
+        with pytest.raises(ValueError, match="justification"):
+            load_baseline(path)
+
+
+class TestCli:
+    def test_list_rules(self, capsys):
+        assert rl_main(["--list-rules"]) == 0
+        out = capsys.readouterr().out
+        for name in rl.RULES:
+            assert name in out
+
+    def test_exit_codes_and_json_report(self, tmp_path, capsys):
+        bad = tmp_path / "src" / "repro" / "mod.py"
+        bad.parent.mkdir(parents=True)
+        bad.write_text("import time\nt = time.monotonic()\n")
+        report = tmp_path / "report.json"
+        code = rl_main([str(bad), "--format", "json", "--no-baseline",
+                        "--output", str(report)])
+        capsys.readouterr()
+        assert code == 1
+        data = json.loads(report.read_text())
+        assert data["findings"] and data["files_checked"] == 1
+        # clean file exits 0
+        good = tmp_path / "clean.py"
+        good.write_text("x = 1\n")
+        assert rl_main([str(good), "--no-baseline"]) == 0
+        capsys.readouterr()
+
+    def test_write_baseline_then_clean(self, tmp_path, capsys):
+        bad = tmp_path / "mod.py"
+        bad.write_text("import asyncio\n"
+                       "async def f(c):\n"
+                       "    asyncio.create_task(c)\n")
+        baseline = tmp_path / "baseline.json"
+        assert rl_main([str(bad), "--baseline", str(baseline),
+                        "--write-baseline"]) == 0
+        capsys.readouterr()
+        entries = load_baseline(baseline)
+        assert len(entries) == 1
+        assert entries[0]["justification"].startswith("TODO")
+        assert rl_main([str(bad), "--baseline", str(baseline)]) == 0
+        capsys.readouterr()
+
+
+def test_tree_is_clean_modulo_baseline():
+    """The self-check: linting the real tree reproduces CI's lint job."""
+    result = lint_paths(
+        [str(ROOT / "src"), str(ROOT / "benchmarks"),
+         str(ROOT / "experiments")], root=ROOT)
+    entries = load_baseline(ROOT / "tools" / "reprolint" / "baseline.json")
+    fresh, _, stale = apply_baseline(result.findings, entries)
+    assert fresh == [], "\n".join(f.render() for f in fresh)
+    assert stale == [], f"stale baseline entries: {stale}"
+    assert result.files_checked > 50  # sanity: the walk saw the tree

@@ -1,0 +1,131 @@
+"""reprolint — a dependency-free AST linter for this repo's invariants.
+
+The repo's core guarantees (bit-identical FakeClock replays, named-stream
+RNG determinism, the exactly-once conservation ledger) are enforced
+dynamically by benches and parity suites. ``reprolint`` moves them to
+static, CI-time checks: a stray ``time.monotonic()`` or fire-and-forget
+``asyncio.create_task`` is rejected before it can silently skew a replay.
+
+Usage::
+
+    python -m tools.reprolint src benchmarks experiments
+    python -m tools.reprolint src --format json --output report.json
+    python -m tools.reprolint --list-rules
+
+Exit status is 0 when every finding is either suppressed inline or
+covered by the baseline, 1 otherwise (2 on usage errors).
+
+Rules
+-----
+Determinism:
+
+``wallclock``
+    Any reference (not just call — a default argument like
+    ``clock=time.monotonic`` counts) to ``time.time/monotonic/
+    perf_counter/process_time`` (and ``*_ns`` variants) or
+    ``datetime.now/utcnow/today`` outside the sanctioned wall-clock
+    seams: ``runtime/clock.py`` (THE seam), measurement modules
+    (``serving/engine.py``, ``runtime/calibrate.py``, ``launch/``) and
+    the ``benchmarks/`` harness. Everything else must take a ``Clock``
+    or an injected ``clock`` callable.
+
+``sleep-literal``
+    ``asyncio.sleep(<nonzero literal>)`` outside ``runtime/clock.py``.
+    Real durations must go through ``Clock.sleep`` so FakeClock replays
+    stay virtual; ``asyncio.sleep(0)`` (a bare event-loop yield) is
+    always allowed.
+
+``unseeded-rng``
+    In ``src/repro``: any use of the stdlib ``random`` module, a
+    zero-argument ``np.random.default_rng()``, or the legacy NumPy
+    global-state API (``np.random.seed/rand/randn/...``). All randomness
+    must flow through named ``SeedSequence`` streams passed in
+    explicitly. ``jax.random`` (explicit-key API) is not flagged.
+
+Async-safety:
+
+``dropped-task``
+    ``asyncio.create_task(...)`` / ``ensure_future(...)`` /
+    ``loop.create_task(...)`` used as a bare expression statement. The
+    event loop holds only a weak reference to tasks, so a dropped task
+    can be garbage-collected mid-flight; keep a reference and discard it
+    in a done-callback (see ``runtime/server.py``'s ``_batch_tasks``).
+
+``blocking-in-async``
+    ``time.sleep``, ``subprocess.*``, ``os.system``, or builtin
+    ``open()`` called inside an ``async def`` body — these block the
+    event loop and stall every in-flight request.
+
+``await-in-lock``
+    ``await`` inside a synchronous ``with`` block whose context manager
+    looks like a lock (name contains ``lock``/``mutex`` or is a
+    ``threading.Lock()``/``RLock()`` call). A threading lock held across
+    an ``await`` deadlocks as soon as the resumed coroutine lands on
+    another waiter; use ``asyncio.Lock`` with ``async with``.
+
+Protocol & ledger discipline:
+
+``policy-protocol``
+    Every class the ``make_policy`` factory can return must statically
+    define the full ``Policy`` protocol surface (``on_request``,
+    ``on_response``, ``on_timer``, ``expire``, ``next_event_time``,
+    ``flush``, ``stats``, ``snapshot``, ``restore``, ``max_bs``,
+    ``queue_len``). Required members are read from the ``Policy``
+    Protocol class itself, so extending the protocol automatically
+    extends the check; inherited members (bases resolved by name across
+    the linted tree) count.
+
+``ledger-counter``
+    In the ledger modules (``serverless/platform.py``,
+    ``runtime/server.py``): every monotonic counter — an attribute only
+    ever ``self.x += <int literal>``, never decremented — must be read
+    in that class's ``summary()``, ``stats()``, or ``conservation()``
+    method. A counter that never surfaces is invisible to the
+    conservation checks and to operators.
+
+``slots-dataclass``
+    Hot-path dataclasses under ``src/repro/simulation/`` must declare
+    ``@dataclass(slots=True)`` — per-event allocations make ``__dict__``
+    overhead measurable in the event-core benchmark.
+
+Suppressions
+------------
+Append ``# reprolint: disable=RULE`` (comma-separate several rules, or
+``disable=all``) to the offending line::
+
+    t0 = time.monotonic()  # reprolint: disable=wallclock
+
+Baseline
+--------
+``tools/reprolint/baseline.json`` grandfathers pre-existing findings so
+the linter can gate CI while old debt is paid down incrementally. Each
+entry carries a mandatory human ``justification``. Entries match on
+``(rule, path, message)`` — line numbers are deliberately excluded so
+unrelated edits don't churn the baseline. Regenerate with
+``--write-baseline`` (then fill in the justifications), and delete
+entries as the underlying findings are fixed; stale entries are reported
+as warnings. The checked-in baseline is empty: the tree is clean.
+
+Adding a rule
+-------------
+1. Write a function in ``tools/reprolint/rules.py`` decorated with
+   ``@rule("my-rule", "one-line description")``. It receives the
+   :class:`~tools.reprolint.engine.Project` and yields
+   :class:`~tools.reprolint.engine.Finding` objects — use
+   ``project.files`` for per-file AST walks and
+   ``FileContext.qualified_name`` to resolve imports/aliases.
+2. Add an inline-fixture test in ``tests/test_reprolint.py`` covering a
+   positive hit, a suppressed hit, and (if applicable) a whitelisted
+   path.
+3. Run ``python -m tools.reprolint src benchmarks experiments`` and fix
+   or baseline (with justification) anything the new rule surfaces.
+"""
+from tools.reprolint.engine import (  # noqa: F401
+    Finding,
+    LintConfig,
+    Project,
+    lint_paths,
+    lint_sources,
+)
+from tools.reprolint import rules as _rules  # noqa: F401  (registers rules)
+from tools.reprolint.engine import RULES  # noqa: F401

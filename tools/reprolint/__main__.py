@@ -1,0 +1,116 @@
+"""CLI entry point: ``python -m tools.reprolint [paths...]``."""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from tools.reprolint.engine import (
+    RULES,
+    LintConfig,
+    apply_baseline,
+    lint_paths,
+    load_baseline,
+    save_baseline,
+)
+from tools.reprolint import rules as _rules  # noqa: F401  (registers rules)
+
+DEFAULT_PATHS = ["src", "benchmarks", "experiments"]
+DEFAULT_BASELINE = Path("tools/reprolint/baseline.json")
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m tools.reprolint",
+        description="AST linter for repo invariants (determinism, "
+                    "async-safety, protocol/ledger discipline).")
+    parser.add_argument("paths", nargs="*", default=None,
+                        help=f"files/dirs to lint (default: "
+                             f"{' '.join(DEFAULT_PATHS)})")
+    parser.add_argument("--format", choices=("human", "json"),
+                        default="human")
+    parser.add_argument("--output", type=Path, default=None,
+                        help="also write the report to this file")
+    parser.add_argument("--baseline", type=Path, default=DEFAULT_BASELINE,
+                        help=f"baseline file (default: {DEFAULT_BASELINE})")
+    parser.add_argument("--no-baseline", action="store_true",
+                        help="ignore the baseline: report every finding")
+    parser.add_argument("--write-baseline", action="store_true",
+                        help="write current findings to the baseline file "
+                             "(new entries get a TODO justification)")
+    parser.add_argument("--rule", action="append", dest="rules",
+                        metavar="RULE",
+                        help="run only this rule (repeatable)")
+    parser.add_argument("--list-rules", action="store_true")
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        width = max(len(name) for name in RULES)
+        for name in sorted(RULES):
+            print(f"{name:<{width}}  {RULES[name].description}")
+        return 0
+
+    if args.rules:
+        unknown = sorted(set(args.rules) - set(RULES))
+        if unknown:
+            parser.error(f"unknown rule(s): {', '.join(unknown)}")
+
+    result = lint_paths(args.paths or DEFAULT_PATHS, LintConfig(),
+                        only=args.rules)
+
+    entries = []
+    if not args.no_baseline and args.baseline.is_file():
+        try:
+            entries = load_baseline(args.baseline)
+        except (ValueError, json.JSONDecodeError) as exc:
+            print(f"error: bad baseline {args.baseline}: {exc}",
+                  file=sys.stderr)
+            return 2
+    fresh, baselined, stale = apply_baseline(result.findings, entries)
+
+    if args.write_baseline:
+        keyed = {(e["rule"], e["path"], e["message"]): e for e in entries}
+        new_entries = []
+        for finding in result.findings:
+            prior = keyed.get(finding.key)
+            new_entries.append({
+                "rule": finding.rule, "path": finding.path,
+                "message": finding.message,
+                "justification": (prior["justification"] if prior
+                                  else "TODO: justify or fix"),
+            })
+        save_baseline(args.baseline, new_entries)
+        print(f"wrote {len(new_entries)} entries to {args.baseline}")
+        return 0
+
+    if args.format == "json":
+        report = json.dumps({
+            "version": 1,
+            "files_checked": result.files_checked,
+            "suppressed": result.suppressed,
+            "findings": [f.to_dict() for f in fresh],
+            "baselined": [f.to_dict() for f in baselined],
+            "stale_baseline": stale,
+        }, indent=2)
+    else:
+        lines = [f.render() for f in fresh]
+        lines.append(
+            f"{len(fresh)} finding(s) ({len(baselined)} baselined, "
+            f"{result.suppressed} suppressed) across "
+            f"{result.files_checked} files")
+        report = "\n".join(lines)
+
+    print(report)
+    if args.output is not None:
+        args.output.parent.mkdir(parents=True, exist_ok=True)
+        args.output.write_text(report + "\n", encoding="utf-8")
+    for entry in stale:
+        print(f"warning: stale baseline entry (fixed? delete it): "
+              f"{entry['rule']} {entry['path']}: {entry['message']}",
+              file=sys.stderr)
+    return 1 if fresh else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,327 @@
+"""Rule engine: file loading, alias resolution, suppressions, baseline.
+
+The engine is deliberately dependency-free (stdlib ``ast`` only) so the
+lint job needs nothing but a Python interpreter. Rules are plain
+functions registered with :func:`rule`; each receives the whole
+:class:`Project` and yields :class:`Finding` objects, so per-file rules
+and cross-file rules (protocol conformance) share one interface.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import re
+from pathlib import Path
+from typing import Callable, Dict, Iterable, Iterator, List, Optional, Set, Tuple
+
+#: rule name -> (description, check function)
+RULES: Dict[str, "Rule"] = {}
+
+_SUPPRESS_RE = re.compile(r"#\s*reprolint:\s*disable=([A-Za-z0-9_,\-\s]+)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    name: str
+    description: str
+    check: Callable[["Project", "LintConfig"], Iterator["Finding"]]
+
+
+def rule(name: str, description: str):
+    """Decorator registering a rule function in :data:`RULES`."""
+
+    def _register(fn):
+        RULES[name] = Rule(name=name, description=description, check=fn)
+        return fn
+
+    return _register
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+
+    @property
+    def key(self) -> Tuple[str, str, str]:
+        # line/col deliberately excluded: baseline entries must survive
+        # unrelated edits that shift line numbers
+        return (self.rule, self.path, self.message)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: [{self.rule}] {self.message}"
+
+
+@dataclasses.dataclass
+class LintConfig:
+    """Path whitelists and anchor points for the rule set.
+
+    Path semantics: entries ending in ``/`` are prefix matches against
+    the posix-relative path being linted; other entries match exactly.
+    ``ledger_modules`` / ``protocol_module`` / ``registry_module`` are
+    *suffix* matches so the rules find their anchor files regardless of
+    whether the tree is linted as ``src`` or ``src/repro``.
+    """
+
+    # determinism ------------------------------------------------------
+    #: modules allowed to touch the wall clock: the Clock seam itself,
+    #: real-measurement modules (engine timing, calibration, launch
+    #: scripts) and the benchmark harness
+    wallclock_allowed: Tuple[str, ...] = (
+        "src/repro/runtime/clock.py",
+        "src/repro/runtime/calibrate.py",
+        "src/repro/serving/engine.py",
+        "src/repro/launch/",
+        "benchmarks/",
+    )
+    #: modules allowed to asyncio.sleep a literal duration (the seam)
+    sleep_allowed: Tuple[str, ...] = ("src/repro/runtime/clock.py",)
+    #: subtree where all randomness must flow through named streams
+    rng_scope: Tuple[str, ...] = ("src/repro/",)
+    # protocol & ledger ------------------------------------------------
+    protocol_module: str = "core/batch_queue.py"
+    protocol_class: str = "Policy"
+    registry_module: str = "core/policies.py"
+    registry_func: str = "make_policy"
+    #: ledger classes live here; counters must surface in reporting
+    ledger_modules: Tuple[str, ...] = (
+        "serverless/platform.py",
+        "runtime/server.py",
+    )
+    ledger_reporting_methods: Tuple[str, ...] = (
+        "summary",
+        "stats",
+        "conservation",
+    )
+    #: subtree whose dataclasses must declare slots=True
+    slots_paths: Tuple[str, ...] = ("src/repro/simulation/",)
+
+    # --- path helpers -------------------------------------------------
+    @staticmethod
+    def path_in(path: str, entries: Iterable[str]) -> bool:
+        for entry in entries:
+            if entry.endswith("/"):
+                if path.startswith(entry):
+                    return True
+            elif path == entry:
+                return True
+        return False
+
+
+class FileContext:
+    """One parsed source file: AST, import aliases, suppressions."""
+
+    def __init__(self, path: str, source: str) -> None:
+        self.path = path
+        self.source = source
+        self.tree = ast.parse(source, filename=path)
+        self.aliases = self._collect_aliases(self.tree)
+        self.suppressions = self._collect_suppressions(source)
+
+    @staticmethod
+    def _collect_aliases(tree: ast.AST) -> Dict[str, str]:
+        """Map local binding -> fully qualified module path.
+
+        ``import numpy as np`` binds ``np -> numpy``; ``from time import
+        monotonic as mono`` binds ``mono -> time.monotonic``. Only the
+        root binding matters — :meth:`qualified_name` extends it through
+        attribute chains.
+        """
+        aliases: Dict[str, str] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    root = alias.name.split(".")[0]
+                    aliases[alias.asname or root] = (
+                        alias.name if alias.asname else root)
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                for alias in node.names:
+                    if alias.name == "*":
+                        continue
+                    aliases[alias.asname or alias.name] = (
+                        f"{node.module}.{alias.name}")
+        return aliases
+
+    @staticmethod
+    def _collect_suppressions(source: str) -> Dict[int, Set[str]]:
+        out: Dict[int, Set[str]] = {}
+        for lineno, line in enumerate(source.splitlines(), start=1):
+            m = _SUPPRESS_RE.search(line)
+            if m:
+                out[lineno] = {
+                    name.strip() for name in m.group(1).split(",")
+                    if name.strip()}
+        return out
+
+    def qualified_name(self, node: ast.AST) -> Optional[str]:
+        """Resolve a Name/Attribute chain to its imported dotted path.
+
+        Returns None for anything not rooted in an import binding
+        (locals, ``self.x``, call results), which is exactly what keeps
+        the determinism rules from flagging injected ``clock()`` calls.
+        """
+        if isinstance(node, ast.Name):
+            return self.aliases.get(node.id)
+        if isinstance(node, ast.Attribute):
+            base = self.qualified_name(node.value)
+            if base is None:
+                return None
+            return f"{base}.{node.attr}"
+        return None
+
+    def suppressed(self, finding: Finding) -> bool:
+        names = self.suppressions.get(finding.line)
+        if not names:
+            return False
+        return "all" in names or finding.rule in names
+
+
+class Project:
+    """The set of files under lint, plus unparsable-file records."""
+
+    def __init__(self, files: List[FileContext],
+                 parse_errors: List[Finding]) -> None:
+        self.files = files
+        self.parse_errors = parse_errors
+        self._by_path = {f.path: f for f in files}
+
+    def find_module(self, suffix: str) -> Optional[FileContext]:
+        """First file whose path ends with ``suffix`` (posix)."""
+        for f in self.files:
+            if f.path == suffix or f.path.endswith("/" + suffix):
+                return f
+        return None
+
+    def class_index(self) -> Dict[str, Tuple[FileContext, ast.ClassDef]]:
+        """Class name -> defining (file, node), first definition wins."""
+        index: Dict[str, Tuple[FileContext, ast.ClassDef]] = {}
+        for f in self.files:
+            for node in ast.walk(f.tree):
+                if isinstance(node, ast.ClassDef) and node.name not in index:
+                    index[node.name] = (f, node)
+        return index
+
+
+@dataclasses.dataclass
+class LintResult:
+    findings: List[Finding]
+    suppressed: int
+    files_checked: int
+
+
+def _build_project(sources: Dict[str, str]) -> Project:
+    files: List[FileContext] = []
+    errors: List[Finding] = []
+    for path in sorted(sources):
+        try:
+            files.append(FileContext(path, sources[path]))
+        except SyntaxError as exc:
+            errors.append(Finding(
+                rule="parse-error", path=path, line=exc.lineno or 1,
+                col=exc.offset or 0, message=f"cannot parse: {exc.msg}"))
+    return Project(files, errors)
+
+
+def run_rules(project: Project, config: LintConfig,
+              only: Optional[Iterable[str]] = None) -> LintResult:
+    selected = sorted(only) if only else sorted(RULES)
+    raw: List[Finding] = list(project.parse_errors)
+    for name in selected:
+        raw.extend(RULES[name].check(project, config))
+    kept: List[Finding] = []
+    suppressed = 0
+    for finding in raw:
+        ctx = project._by_path.get(finding.path)
+        if ctx is not None and ctx.suppressed(finding):
+            suppressed += 1
+        else:
+            kept.append(finding)
+    kept.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return LintResult(findings=kept, suppressed=suppressed,
+                      files_checked=len(project.files))
+
+
+def lint_sources(sources: Dict[str, str],
+                 config: Optional[LintConfig] = None,
+                 only: Optional[Iterable[str]] = None) -> LintResult:
+    """Lint in-memory sources (test fixtures): ``{posix path: source}``."""
+    return run_rules(_build_project(sources), config or LintConfig(),
+                     only=only)
+
+
+def iter_python_files(paths: Iterable[str]) -> Iterator[Path]:
+    for raw in paths:
+        p = Path(raw)
+        if p.is_file() and p.suffix == ".py":
+            yield p
+        elif p.is_dir():
+            for sub in sorted(p.rglob("*.py")):
+                if any(part.startswith(".") or part == "__pycache__"
+                       for part in sub.parts):
+                    continue
+                yield sub
+
+
+def lint_paths(paths: Iterable[str],
+               config: Optional[LintConfig] = None,
+               only: Optional[Iterable[str]] = None,
+               root: Optional[Path] = None) -> LintResult:
+    """Lint files/directories on disk; paths recorded relative to root."""
+    root = (root or Path.cwd()).resolve()
+    sources: Dict[str, str] = {}
+    for file in iter_python_files(paths):
+        resolved = file.resolve()
+        try:
+            rel = resolved.relative_to(root).as_posix()
+        except ValueError:
+            rel = file.as_posix()
+        sources[rel] = resolved.read_text(encoding="utf-8")
+    return run_rules(_build_project(sources), config or LintConfig(),
+                     only=only)
+
+
+# --------------------------------------------------------------- baseline
+def load_baseline(path: Path) -> List[dict]:
+    data = json.loads(path.read_text(encoding="utf-8"))
+    entries = data.get("entries", [])
+    for entry in entries:
+        for field in ("rule", "path", "message", "justification"):
+            if field not in entry:
+                raise ValueError(
+                    f"baseline entry missing '{field}': {entry!r}")
+    return entries
+
+
+def save_baseline(path: Path, entries: List[dict]) -> None:
+    payload = {
+        "comment": ("Grandfathered reprolint findings. Every entry needs a "
+                    "human justification; delete entries as findings are "
+                    "fixed. Matched on (rule, path, message)."),
+        "entries": sorted(entries,
+                          key=lambda e: (e["path"], e["rule"], e["message"])),
+    }
+    path.write_text(json.dumps(payload, indent=2) + "\n", encoding="utf-8")
+
+
+def apply_baseline(findings: List[Finding], entries: List[dict]
+                   ) -> Tuple[List[Finding], List[Finding], List[dict]]:
+    """Split findings into (fresh, baselined); also return stale entries."""
+    keyed = {(e["rule"], e["path"], e["message"]): e for e in entries}
+    fresh: List[Finding] = []
+    baselined: List[Finding] = []
+    used: Set[Tuple[str, str, str]] = set()
+    for finding in findings:
+        if finding.key in keyed:
+            baselined.append(finding)
+            used.add(finding.key)
+        else:
+            fresh.append(finding)
+    stale = [e for k, e in keyed.items() if k not in used]
+    return fresh, baselined, stale

@@ -1,0 +1,445 @@
+"""The rule set. See the package docstring for what each rule protects.
+
+Every rule is a generator taking ``(project, config)`` and yielding
+:class:`~tools.reprolint.engine.Finding`. Per-file rules iterate
+``project.files``; the protocol rule is cross-file (it resolves base
+classes through ``project.class_index()``).
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from tools.reprolint.engine import (
+    FileContext,
+    Finding,
+    LintConfig,
+    Project,
+    rule,
+)
+
+# ----------------------------------------------------------- determinism
+WALLCLOCK_NAMES = frozenset({
+    "time.time", "time.time_ns",
+    "time.monotonic", "time.monotonic_ns",
+    "time.perf_counter", "time.perf_counter_ns",
+    "time.process_time", "time.process_time_ns",
+    "datetime.datetime.now", "datetime.datetime.utcnow",
+    "datetime.date.today",
+})
+
+
+@rule("wallclock",
+      "wall-clock reference outside the Clock seam / measurement modules")
+def check_wallclock(project: Project, config: LintConfig
+                    ) -> Iterator[Finding]:
+    for ctx in project.files:
+        if LintConfig.path_in(ctx.path, config.wallclock_allowed):
+            continue
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, (ast.Name, ast.Attribute)):
+                q = ctx.qualified_name(node)
+                if q in WALLCLOCK_NAMES:
+                    yield Finding(
+                        rule="wallclock", path=ctx.path,
+                        line=node.lineno, col=node.col_offset,
+                        message=(f"reference to {q}; inject a Clock (or a "
+                                 "clock callable) instead so FakeClock "
+                                 "replays stay deterministic"))
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                for alias in node.names:
+                    full = f"{node.module}.{alias.name}"
+                    if full in WALLCLOCK_NAMES:
+                        yield Finding(
+                            rule="wallclock", path=ctx.path,
+                            line=node.lineno, col=node.col_offset,
+                            message=(f"import of {full}; inject a Clock "
+                                     "(or a clock callable) instead"))
+
+
+@rule("sleep-literal",
+      "asyncio.sleep with a literal nonzero duration outside the Clock seam")
+def check_sleep_literal(project: Project, config: LintConfig
+                        ) -> Iterator[Finding]:
+    for ctx in project.files:
+        if LintConfig.path_in(ctx.path, config.sleep_allowed):
+            continue
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if ctx.qualified_name(node.func) != "asyncio.sleep":
+                continue
+            if not node.args:
+                continue
+            arg = node.args[0]
+            if (isinstance(arg, ast.Constant)
+                    and isinstance(arg.value, (int, float))
+                    and arg.value != 0):
+                yield Finding(
+                    rule="sleep-literal", path=ctx.path,
+                    line=node.lineno, col=node.col_offset,
+                    message=(f"asyncio.sleep({arg.value!r}) bypasses the "
+                             "Clock seam; use clock.sleep(...) so virtual "
+                             "time advances in FakeClock runs "
+                             "(asyncio.sleep(0) yields are fine)"))
+
+
+#: legacy NumPy global-state API — hidden process-wide RNG state
+NUMPY_GLOBAL_RNG = frozenset({
+    "numpy.random.seed", "numpy.random.rand", "numpy.random.randn",
+    "numpy.random.randint", "numpy.random.random",
+    "numpy.random.random_sample", "numpy.random.choice",
+    "numpy.random.shuffle", "numpy.random.permutation",
+    "numpy.random.normal", "numpy.random.uniform",
+    "numpy.random.poisson", "numpy.random.exponential",
+})
+
+
+@rule("unseeded-rng",
+      "stdlib random / unseeded or global-state NumPy RNG in src/repro")
+def check_unseeded_rng(project: Project, config: LintConfig
+                       ) -> Iterator[Finding]:
+    for ctx in project.files:
+        if not any(ctx.path.startswith(scope) for scope in config.rng_scope):
+            continue
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, (ast.Name, ast.Attribute)):
+                q = ctx.qualified_name(node)
+                if q is not None and (q == "random"
+                                      or q.startswith("random.")):
+                    yield Finding(
+                        rule="unseeded-rng", path=ctx.path,
+                        line=node.lineno, col=node.col_offset,
+                        message=(f"stdlib {q} uses hidden global state; "
+                                 "draw from a named SeedSequence stream "
+                                 "(np.random.Generator) passed in "
+                                 "explicitly"))
+            elif isinstance(node, ast.Call):
+                q = ctx.qualified_name(node.func)
+                if (q == "numpy.random.default_rng"
+                        and not node.args and not node.keywords):
+                    yield Finding(
+                        rule="unseeded-rng", path=ctx.path,
+                        line=node.lineno, col=node.col_offset,
+                        message=("np.random.default_rng() without a seed is "
+                                 "OS-entropy seeded; pass a SeedSequence "
+                                 "spawn so runs replay bit-identically"))
+                elif q in NUMPY_GLOBAL_RNG:
+                    yield Finding(
+                        rule="unseeded-rng", path=ctx.path,
+                        line=node.lineno, col=node.col_offset,
+                        message=(f"{q} mutates/reads NumPy's process-wide "
+                                 "RNG; use an explicit Generator from a "
+                                 "named SeedSequence stream"))
+
+
+# ----------------------------------------------------------- async-safety
+@rule("dropped-task",
+      "create_task/ensure_future result dropped (GC-cancellation hazard)")
+def check_dropped_task(project: Project, config: LintConfig
+                       ) -> Iterator[Finding]:
+    for ctx in project.files:
+        for node in ast.walk(ctx.tree):
+            if not (isinstance(node, ast.Expr)
+                    and isinstance(node.value, ast.Call)):
+                continue
+            func = node.value.func
+            q = ctx.qualified_name(func)
+            is_spawn = (q in ("asyncio.create_task", "asyncio.ensure_future")
+                        or (isinstance(func, ast.Attribute)
+                            and func.attr in ("create_task",
+                                              "ensure_future")))
+            if is_spawn:
+                yield Finding(
+                    rule="dropped-task", path=ctx.path,
+                    line=node.lineno, col=node.col_offset,
+                    message=("task reference dropped; the event loop only "
+                             "holds a weak ref, so the task can be "
+                             "garbage-collected mid-flight — keep a "
+                             "reference and discard it in a done-callback"))
+
+
+BLOCKING_CALLS = frozenset({
+    "time.sleep", "os.system", "os.popen",
+    "subprocess.run", "subprocess.call", "subprocess.check_call",
+    "subprocess.check_output", "subprocess.Popen",
+    "socket.create_connection", "urllib.request.urlopen",
+    "requests.get", "requests.post", "requests.put", "requests.request",
+})
+
+
+def _walk_scoped(node: ast.AST, in_async: bool
+                 ) -> Iterator[Tuple[ast.AST, bool]]:
+    """Yield (node, inside-async-def) without crossing function scopes
+    incorrectly: a sync def nested in an async def is NOT async context,
+    and vice versa."""
+    for child in ast.iter_child_nodes(node):
+        if isinstance(child, ast.AsyncFunctionDef):
+            yield from _walk_scoped(child, True)
+        elif isinstance(child, (ast.FunctionDef, ast.Lambda)):
+            yield from _walk_scoped(child, False)
+        else:
+            yield child, in_async
+            yield from _walk_scoped(child, in_async)
+
+
+@rule("blocking-in-async",
+      "blocking call (time.sleep / subprocess / open) inside async def")
+def check_blocking_in_async(project: Project, config: LintConfig
+                            ) -> Iterator[Finding]:
+    for ctx in project.files:
+        for node, in_async in _walk_scoped(ctx.tree, False):
+            if not (in_async and isinstance(node, ast.Call)):
+                continue
+            q = ctx.qualified_name(node.func)
+            blocking: Optional[str] = None
+            if q in BLOCKING_CALLS:
+                blocking = q
+            elif (isinstance(node.func, ast.Name)
+                  and node.func.id == "open"
+                  and "open" not in ctx.aliases):
+                blocking = "open"
+            if blocking is not None:
+                yield Finding(
+                    rule="blocking-in-async", path=ctx.path,
+                    line=node.lineno, col=node.col_offset,
+                    message=(f"{blocking}() blocks the event loop inside "
+                             "an async def, stalling every in-flight "
+                             "request; run it in an executor or use the "
+                             "async equivalent"))
+
+
+_LOCKISH_NAME = re.compile(r"(?i)(lock|mutex)")
+_LOCK_FACTORIES = frozenset({
+    "threading.Lock", "threading.RLock", "threading.Condition",
+    "threading.Semaphore", "threading.BoundedSemaphore",
+})
+
+
+def _terminal_name(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Call):
+        return _terminal_name(node.func)
+    return None
+
+
+def _contains_await(node: ast.AST) -> bool:
+    """Await anywhere in this subtree, not descending into nested defs."""
+    for child in ast.iter_child_nodes(node):
+        if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.Lambda)):
+            continue
+        if isinstance(child, ast.Await) or _contains_await(child):
+            return True
+    return False
+
+
+@rule("await-in-lock",
+      "await inside a sync `with <lock>:` block (event-loop deadlock)")
+def check_await_in_lock(project: Project, config: LintConfig
+                        ) -> Iterator[Finding]:
+    for ctx in project.files:
+        for node, in_async in _walk_scoped(ctx.tree, False):
+            if not (in_async and isinstance(node, ast.With)):
+                continue
+            lockish = False
+            for item in node.items:
+                expr = item.context_expr
+                name = _terminal_name(expr)
+                q = ctx.qualified_name(
+                    expr.func) if isinstance(expr, ast.Call) else None
+                if q in _LOCK_FACTORIES or (
+                        name and _LOCKISH_NAME.search(name)):
+                    lockish = True
+            if lockish and _contains_await(node):
+                yield Finding(
+                    rule="await-in-lock", path=ctx.path,
+                    line=node.lineno, col=node.col_offset,
+                    message=("await while holding a threading lock: the "
+                             "coroutine suspends with the lock held and "
+                             "any other waiter deadlocks the loop; use "
+                             "asyncio.Lock with `async with`"))
+
+
+# ------------------------------------------------ protocol & ledger rules
+_PROTOCOL_BASE_EXEMPT = frozenset({"object", "Protocol", "ABC", "Generic"})
+
+
+def _class_member_names(node: ast.ClassDef) -> Set[str]:
+    names: Set[str] = set()
+    for stmt in node.body:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            names.add(stmt.name)
+        elif isinstance(stmt, ast.AnnAssign) and isinstance(
+                stmt.target, ast.Name):
+            names.add(stmt.target.id)
+        elif isinstance(stmt, ast.Assign):
+            for target in stmt.targets:
+                if isinstance(target, ast.Name):
+                    names.add(target.id)
+    return names
+
+
+def _resolve_members(
+        name: str,
+        index: Dict[str, Tuple[FileContext, ast.ClassDef]],
+        seen: Set[str]) -> Optional[Set[str]]:
+    """Full member surface of a class, following bases by name.
+
+    Returns None when any base cannot be resolved inside the linted tree
+    (the rule then skips the class rather than false-positive)."""
+    if name in seen:
+        return set()
+    seen.add(name)
+    entry = index.get(name)
+    if entry is None:
+        return None
+    _, node = entry
+    members = _class_member_names(node)
+    for base in node.bases:
+        base_name = _terminal_name(base)
+        if base_name is None or base_name in _PROTOCOL_BASE_EXEMPT:
+            continue
+        inherited = _resolve_members(base_name, index, seen)
+        if inherited is None:
+            return None
+        members |= inherited
+    return members
+
+
+@rule("policy-protocol",
+      "factory-registered policy class missing Policy protocol members")
+def check_policy_protocol(project: Project, config: LintConfig
+                          ) -> Iterator[Finding]:
+    proto_ctx = project.find_module(config.protocol_module)
+    registry_ctx = project.find_module(config.registry_module)
+    if proto_ctx is None or registry_ctx is None:
+        return  # anchors not under lint (e.g. partial fixture) — no-op
+
+    required: Set[str] = set()
+    for node in ast.walk(proto_ctx.tree):
+        if (isinstance(node, ast.ClassDef)
+                and node.name == config.protocol_class):
+            required = {n for n in _class_member_names(node)
+                        if not n.startswith("_")}
+            break
+    if not required:
+        return
+
+    registered: List[Tuple[str, int]] = []
+    for node in ast.walk(registry_ctx.tree):
+        if (isinstance(node, ast.FunctionDef)
+                and node.name == config.registry_func):
+            for sub in ast.walk(node):
+                if (isinstance(sub, ast.Return)
+                        and isinstance(sub.value, ast.Call)
+                        and isinstance(sub.value.func, ast.Name)):
+                    registered.append(
+                        (sub.value.func.id, sub.value.lineno))
+            break
+
+    index = project.class_index()
+    for cls_name, _ in sorted(set(registered)):
+        entry = index.get(cls_name)
+        if entry is None:
+            continue  # constructed via an alias we can't resolve
+        ctx, node = entry
+        members = _resolve_members(cls_name, index, set())
+        if members is None:
+            continue  # unresolvable base outside the linted tree
+        missing = sorted(required - members)
+        if missing:
+            yield Finding(
+                rule="policy-protocol", path=ctx.path,
+                line=node.lineno, col=node.col_offset,
+                message=(f"class {cls_name} is registered in "
+                         f"{config.registry_func}() but does not define "
+                         f"Policy member(s): {', '.join(missing)}"))
+
+
+@rule("ledger-counter",
+      "monotonic self.<counter> += 1 never surfaced in summary/stats/"
+      "conservation")
+def check_ledger_counter(project: Project, config: LintConfig
+                         ) -> Iterator[Finding]:
+    for ctx in project.files:
+        if not any(ctx.path == m or ctx.path.endswith("/" + m)
+                   for m in config.ledger_modules):
+            continue
+        for cls in ctx.tree.body:
+            if not isinstance(cls, ast.ClassDef):
+                continue
+            reporting_reads: Set[str] = set()
+            has_reporting = False
+            for stmt in cls.body:
+                if (isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef))
+                        and stmt.name in config.ledger_reporting_methods):
+                    has_reporting = True
+                    for node in ast.walk(stmt):
+                        if (isinstance(node, ast.Attribute)
+                                and isinstance(node.value, ast.Name)
+                                and node.value.id == "self"):
+                            reporting_reads.add(node.attr)
+            if not has_reporting:
+                continue  # not a ledger class (config holders etc.)
+            increments: Dict[str, int] = {}
+            decremented: Set[str] = set()
+            for node in ast.walk(cls):
+                if not (isinstance(node, ast.AugAssign)
+                        and isinstance(node.target, ast.Attribute)
+                        and isinstance(node.target.value, ast.Name)
+                        and node.target.value.id == "self"):
+                    continue
+                attr = node.target.attr
+                if (isinstance(node.op, ast.Add)
+                        and isinstance(node.value, ast.Constant)
+                        and isinstance(node.value.value, int)):
+                    increments.setdefault(attr, node.lineno)
+                elif isinstance(node.op, ast.Sub):
+                    decremented.add(attr)  # gauge, not a monotonic counter
+            for attr, lineno in sorted(increments.items(),
+                                       key=lambda kv: kv[1]):
+                if attr in decremented or attr in reporting_reads:
+                    continue
+                yield Finding(
+                    rule="ledger-counter", path=ctx.path,
+                    line=lineno, col=0,
+                    message=(f"counter self.{attr} in class {cls.name} is "
+                             "incremented but never read in "
+                             f"{'/'.join(config.ledger_reporting_methods)}"
+                             "(); invisible counters can't be conserved "
+                             "or monitored"))
+
+
+@rule("slots-dataclass",
+      "hot-path dataclass under simulation/ without slots=True")
+def check_slots_dataclass(project: Project, config: LintConfig
+                          ) -> Iterator[Finding]:
+    for ctx in project.files:
+        if not any(ctx.path.startswith(p) for p in config.slots_paths):
+            continue
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            for deco in node.decorator_list:
+                call_kw = deco.keywords if isinstance(deco, ast.Call) else []
+                target = deco.func if isinstance(deco, ast.Call) else deco
+                if _terminal_name(target) != "dataclass":
+                    continue
+                has_slots = any(
+                    kw.arg == "slots"
+                    and isinstance(kw.value, ast.Constant)
+                    and kw.value.value is True
+                    for kw in call_kw)
+                if not has_slots:
+                    yield Finding(
+                        rule="slots-dataclass", path=ctx.path,
+                        line=node.lineno, col=node.col_offset,
+                        message=(f"dataclass {node.name} allocates per-event"
+                                 " on the sim hot path; declare "
+                                 "@dataclass(slots=True) to drop the "
+                                 "__dict__ overhead"))
