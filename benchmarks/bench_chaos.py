@@ -1,23 +1,55 @@
 """Chaos scenario sweep: every policy through every named fault regime.
 
-For each (scenario, policy) pair this runs the scenario twice — fault
-injection on, and the identical scaling regime with faults off — asserts
-the conservation invariant on both runs (every submitted batch completes
-exactly once; zero lost, zero duplicated, zero left outstanding), and
-reports the violation-rate / cost deltas the fault regime costs each
-policy. A policy that looks cheap in the fault-free sweep but collapses
-under crash churn shows up here.
+Two worlds, one fault taxonomy (the ``world`` column tells rows apart):
+
+* **sim** — for each (scenario, policy) pair the discrete-event platform
+  runs the scenario twice — fault injection on, and the identical scaling
+  regime with faults off — asserts the conservation invariant on both
+  runs (every submitted batch completes exactly once; zero lost, zero
+  duplicated, zero left outstanding), and reports the violation-rate /
+  cost deltas the fault regime costs each policy.
+* **live** — the wall-clock runtime replays each fault regime through a
+  :class:`~repro.runtime.faults.FaultyTarget` under FakeClock, with the
+  proxy-tier retry + circuit-breaker layer on. Each cell also runs the
+  no-fault case twice — the scenario's fault-tolerance config through
+  the zero-probability wrapper versus the plain pre-fault-tolerance
+  runtime on the bare target — and reports whether the two are
+  byte-identical (``nofault_identical``): the retry layer must be a
+  strict no-op when nothing fails. ``recovered_pct`` is the headline the
+  CI chaos smoke gates on (>= 90% of faulted batches recovered within
+  deadline in the crash storm).
+
+A policy that looks cheap in the fault-free sweep but collapses under
+crash churn shows up here — in either world.
 """
 from __future__ import annotations
 
 from typing import Dict, List
 
-from experiments.scenarios import POLICIES, SCENARIOS, run_scenario
+from experiments.scenarios import (
+    LIVE_SCENARIOS,
+    POLICIES,
+    SCENARIOS,
+    run_live_scenario,
+    run_scenario,
+)
+from repro.runtime import RuntimeConfig
 
 from benchmarks.common import write_csv
 
+#: Policies the live sweep runs (one deterministic, one adaptive — the
+#: full five-policy grid lives in the sim world, which is much cheaper).
+LIVE_POLICIES = ("static", "mlproxy")
 
-def run(quick: bool = False) -> List[Dict]:
+#: Summary keys that must match exactly between the no-fault run under
+#: the fault-tolerance config and the plain pre-fault-tolerance runtime.
+_IDENTITY_KEYS = (
+    "completed", "dispatched_batches", "p50", "p95", "p99", "mean_latency",
+    "violation_pct", "timed_out", "rejected", "failed", "throughput",
+)
+
+
+def run_sim(quick: bool = False) -> List[Dict]:
     rows: List[Dict] = []
     for name, scenario in SCENARIOS.items():
         for policy in POLICIES:
@@ -29,6 +61,7 @@ def run(quick: bool = False) -> List[Dict]:
             )
             b, c = base.summary, chaos.summary
             rows.append({
+                "world": "sim",
                 "scenario": name,
                 "policy": policy,
                 "completed": c["completed_batches"],
@@ -51,6 +84,60 @@ def run(quick: bool = False) -> List[Dict]:
                     c["avg_containers"] - b["avg_containers"], 3
                 ),
             })
+    return rows
+
+
+def run_live(quick: bool = False) -> List[Dict]:
+    """Live-runtime half of the sweep; also written to ``chaos_live.csv``
+    on its own for the CI ``runtime-chaos-smoke`` job."""
+    rows: List[Dict] = []
+    for name, scenario in LIVE_SCENARIOS.items():
+        for policy in LIVE_POLICIES:
+            # PR-7-equivalent reference: no wrapper, no retries, no breaker
+            plain = run_live_scenario(scenario, policy, faults=False,
+                                      quick=quick, runtime=RuntimeConfig(),
+                                      bare=True)
+            base = run_live_scenario(scenario, policy, faults=False,
+                                     quick=quick)
+            chaos = run_live_scenario(scenario, policy, faults=True,
+                                      quick=quick)
+            identical = (
+                base.dispatch_log == plain.dispatch_log
+                and all(base.summary[k] == plain.summary[k]
+                        for k in _IDENTITY_KEYS)
+            )
+            c = chaos.conservation
+            faulted = c["faulted_batches"]
+            recovered = c["recovered_batches"]
+            rows.append({
+                "world": "live",
+                "scenario": name,
+                "policy": policy,
+                "completed": c["completed"],
+                "submitted": c["submitted"],
+                "lost": c["lost"],
+                "duplicates": c["duplicate_completions"],
+                "shed": c["shed"],
+                "timed_out": c["timed_out"],
+                "failed": c["failed"],
+                "hedged": c["hedged_batches"],
+                "retried": c["retried_batches"],
+                "retry_exhausted": c["retry_exhausted"],
+                "faulted": faulted,
+                "recovered": recovered,
+                "recovered_pct": round(
+                    100.0 * recovered / faulted if faulted else 100.0, 2
+                ),
+                "viol_pct": round(chaos.summary["violation_pct"], 4),
+                "p95_ms": round(chaos.summary["p95"] * 1000, 1),
+                "nofault_identical": identical,
+            })
+    write_csv("chaos_live.csv", rows)
+    return rows
+
+
+def run(quick: bool = False) -> List[Dict]:
+    rows = run_sim(quick=quick) + run_live(quick=quick)
     write_csv("chaos_scenarios.csv", rows)
     return rows
 

@@ -15,7 +15,8 @@ import importlib
 import inspect
 import sys
 
-# name -> (module under benchmarks/, derive(rows) -> headline)
+# name -> (module under benchmarks/ — optionally "module:attr" for an
+# entry point other than ``run`` — and derive(rows) -> headline)
 BENCHES = {
     "fig3_fig4_batch_scaling": (
         "bench_batch_scaling",
@@ -40,6 +41,13 @@ BENCHES = {
     # value other than 0.0 means the platform lost or duplicated work
     "chaos_scenarios": (
         "bench_chaos",
+        lambda rows: sum(r["lost"] + r["duplicates"] for r in rows)),
+    # live-runtime half of the chaos sweep on its own (the CI
+    # runtime-chaos-smoke job runs exactly this); derived = conservation
+    # violations — anything other than 0.0 means the retry/breaker layer
+    # lost or duplicated work under fault injection
+    "chaos_live": (
+        "bench_chaos:run_live",
         lambda rows: sum(r["lost"] + r["duplicates"] for r in rows)),
     # event-core throughput: derived = requests/sec on the 1M-request
     # Poisson configuration (the scale target every sweep cell runs at)
@@ -93,7 +101,9 @@ def main() -> None:
     for name, (module, derive) in BENCHES.items():
         if args.only and args.only != name:
             continue
-        fn = importlib.import_module(f"benchmarks.{module}").run
+        mod_name, _, attr = module.partition(":")
+        fn = getattr(importlib.import_module(f"benchmarks.{mod_name}"),
+                     attr or "run")
         kwargs = {"quick": args.quick}
         if "jobs" in inspect.signature(fn).parameters:
             kwargs["jobs"] = args.jobs

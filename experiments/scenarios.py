@@ -26,6 +26,17 @@ The five regimes target the failure modes the attempt ledger exists for:
 ``benchmarks/bench_chaos.py`` sweeps these scenarios over every policy and
 reports violation-rate / cost deltas versus the same scenario with fault
 injection disabled.
+
+The LIVE mirror: each :class:`LiveChaosScenario` replays one fault regime
+against the wall-clock runtime (:class:`~repro.runtime.AsyncProxyServer`
+under :class:`~repro.runtime.clock.FakeClock`) with faults injected at the
+dispatch target by :class:`~repro.runtime.faults.FaultyTarget` instead of
+inside the platform model. The five live regimes map one-to-one onto the
+five :class:`~repro.runtime.faults.FaultConfig` fault kinds (crash /
+timeout / straggler / partial / preempt); :func:`run_live_scenario` ends
+every run by asserting the runtime's extended conservation invariant
+(``submitted == completed + rejected + shed + timed_out + failed``, zero
+lost, zero duplicate completions).
 """
 from __future__ import annotations
 
@@ -234,3 +245,184 @@ def run_scenario(
     result = sim.run()
     conservation = sim.platform.assert_conserved(require_drained=True)
     return result, conservation
+
+
+# --------------------------------------------------------------------------
+# live-runtime chaos: the same fault taxonomy against AsyncProxyServer
+# --------------------------------------------------------------------------
+from repro.runtime import (  # noqa: E402 — live suite; keeps the sim
+    AsyncProxyServer,        # section importable without the runtime deps
+    BreakerConfig,
+    FakeClock,
+    FaultConfig,
+    FaultyTarget,
+    LoadGenerator,
+    RuntimeConfig,
+    SyntheticTarget,
+    run,
+)
+
+#: The retry + breaker regime every live scenario runs under. Retries are
+#: the recovery mechanism the acceptance gate measures; the breaker keeps
+#: a DEAD endpoint from burning its whole queue on hopeless retries — its
+#: threshold sits high (0.9) so a noisy-but-alive upstream (25% crash
+#: storm) is absorbed by retries alone, while a hard outage (~100%
+#: failure) trips it within one window.
+LIVE_RUNTIME = RuntimeConfig(
+    max_retries=4,
+    retry_backoff=0.05,
+    retry_backoff_cap=1.0,
+    retry_jitter=0.1,
+    breaker=BreakerConfig(window=20, min_samples=10,
+                          failure_threshold=0.9, open_duration=2.0),
+    brownout_queue=8,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class LiveChaosScenario:
+    """One live fault regime: a FaultyTarget config + arrival shape."""
+
+    name: str
+    description: str
+    faults: FaultConfig
+    workload: str = "pytorch-fashion-mnist"
+    slo_ms: float = 500.0
+    #: Deadline budget as a multiple of the SLO — loose enough that a
+    #: couple of backed-off retries still fit inside it.
+    deadline_factor: float = 8.0
+    rate: float = 15.0
+    duration: float = 120.0
+    runtime: RuntimeConfig = LIVE_RUNTIME
+    seed: int = 11
+
+    def baseline_faults(self) -> FaultConfig:
+        """The same seed with every injection probability zeroed."""
+        return FaultConfig(seed=self.faults.seed)
+
+
+LIVE_SCENARIOS: Dict[str, LiveChaosScenario] = {
+    sc.name: sc
+    for sc in (
+        LiveChaosScenario(
+            name="live-crash-storm",
+            description="1 in 4 dispatch attempts dies before completing",
+            faults=FaultConfig(crash_prob=0.25, crash_latency=0.01),
+        ),
+        LiveChaosScenario(
+            name="live-timeout-flood",
+            description="upstream stalls burn most of the deadline budget",
+            faults=FaultConfig(timeout_prob=0.15, timeout_stall=1.0),
+        ),
+        LiveChaosScenario(
+            name="live-straggler-tail",
+            description="cold-start slowdowns with no hard failures",
+            faults=FaultConfig(straggler_prob=0.2, straggler_delay=0.8),
+        ),
+        LiveChaosScenario(
+            name="live-partial-batch",
+            description="batches execute but lose results; whole-batch retry",
+            faults=FaultConfig(partial_prob=0.2),
+        ),
+        LiveChaosScenario(
+            name="live-preemption",
+            description="the platform reclaims containers mid-execution",
+            faults=FaultConfig(preempt_prob=0.25, preempt_after=0.05),
+        ),
+    )
+}
+
+
+@dataclasses.dataclass
+class LiveScenarioResult:
+    """Outcome of one :func:`run_live_scenario`."""
+
+    summary: dict
+    conservation: dict
+    #: the FaultyTarget's (call index, time, kind) schedule
+    fault_log: list
+    #: the server's (time, endpoint, size, failure #, backoff, error) log
+    retry_log: list
+    dispatch_log: list
+
+
+def run_live_scenario(
+    scenario: LiveChaosScenario | str,
+    policy: str = "mlproxy",
+    *,
+    faults: bool = True,
+    quick: bool = False,
+    seed: Optional[int] = None,
+    runtime: Optional[RuntimeConfig] = None,
+    bare: bool = False,
+) -> LiveScenarioResult:
+    """Run one policy through one live fault regime and enforce the
+    extended conservation invariant at drain.
+
+    The dispatch target is a :class:`SyntheticTarget` on the workload's
+    latency model, wrapped in a :class:`FaultyTarget` carrying the
+    scenario's fault config (all-zero probabilities when ``faults`` is
+    False — RNG-identical to the bare target). ``runtime`` overrides the
+    scenario's retry/breaker regime, and ``bare=True`` skips the
+    FaultyTarget wrapper entirely (the bench's byte-identity check runs
+    the no-fault case both ways: plain default config on the bare target
+    — the pre-fault-tolerance runtime — versus the scenario's retry +
+    breaker regime through the zero-probability wrapper).
+    """
+    if isinstance(scenario, str):
+        scenario = LIVE_SCENARIOS[scenario]
+    duration = min(45.0, scenario.duration) if quick else scenario.duration
+    base_seed = scenario.seed if seed is None else seed
+    workload = get_workload(scenario.workload)
+    policy_kwargs = {}
+    if policy == "static":
+        policy_kwargs = {"batch_size": 8, "timeout": 0.2}
+    elif policy == "oracle":
+        policy_kwargs = {
+            "latency_model": lambda bs, _w=workload: _w.percentile(bs, 95)
+        }
+    clock = FakeClock()
+    server = AsyncProxyServer(
+        clock=clock,
+        config=runtime if runtime is not None else scenario.runtime,
+    )
+    # arrivals/service streams mirror run_replay's named split; the fault
+    # stream is FaultyTarget's own third SeedSequence child
+    arr_ss, svc_ss = np.random.SeedSequence(base_seed).spawn(2)
+    inner = SyntheticTarget(workload, clock,
+                            rng=np.random.default_rng(svc_ss))
+    fault_cfg = scenario.faults if faults else scenario.baseline_faults()
+    fault_cfg = dataclasses.replace(fault_cfg, seed=base_seed)
+    if bare:
+        if faults:
+            raise ValueError("bare=True cannot inject faults")
+        target = inner
+    else:
+        target = FaultyTarget(inner, clock, fault_cfg)
+    sla = SLAConfig(slo_target=ms(scenario.slo_ms),
+                    deadline_factor=scenario.deadline_factor)
+    server.add_endpoint("ep", sla=sla, target=target, policy=policy,
+                        policy_kwargs=policy_kwargs)
+    gen = LoadGenerator(
+        server, PoissonProcess(rate=scenario.rate, duration=duration),
+        duration=duration, rng=np.random.default_rng(arr_ss), endpoint="ep")
+
+    async def main() -> None:
+        await server.start()
+        await gen.run()
+        await server.drain(timeout=60.0)
+        # retrieve every ticket's outcome: TargetError futures otherwise
+        # warn "exception was never retrieved" at GC
+        for t in gen.tickets:
+            if t.future.done():
+                t.future.exception()
+
+    run(clock, main())
+    conservation = server.assert_conserved(require_drained=True)
+    return LiveScenarioResult(
+        summary=server.summary(),
+        conservation=conservation,
+        fault_log=list(getattr(target, "fault_log", [])),
+        retry_log=list(server.retry_log),
+        dispatch_log=list(server.dispatch_log),
+    )

@@ -65,6 +65,11 @@ class Policy(Protocol):
         (e.g. before a queue-depth check counts dead requests)."""
         ...
 
+    def shed(self, now: float, keep: int) -> List[Request]:
+        """Evict queued requests beyond ``keep``, lowest deadline slack
+        first (brownout load shedding); returns the evicted list."""
+        ...
+
     def next_event_time(self, now: float) -> Optional[float]:
         """Earliest future time at which :meth:`on_timer` must run."""
 
@@ -119,6 +124,7 @@ class BatchQueue:
         self.dispatched_batches = 0
         self.dispatched_requests = 0
         self.expired_requests = 0
+        self.shed_requests = 0
         # Deadline bookkeeping for the hot path: how many queued requests
         # carry a deadline, and the earliest of them. Deadline-free
         # workloads (the default) pay one integer check per sweep; with
@@ -188,6 +194,47 @@ class BatchQueue:
         if self.expire_fn is not None:
             self.expire_fn(expired, now)
         return expired
+
+    def shed(self, now: float, keep: int) -> List[Request]:
+        """Evict queued requests beyond ``keep``, lowest slack first.
+
+        Brownout shedding: when an endpoint's circuit breaker opens, the
+        requests least likely to survive the outage are dropped first —
+        the ones with the smallest remaining deadline slack. Deadline-free
+        requests have infinite slack, so they shed last (newest first,
+        preserving the oldest requests' place at the head of the FIFO).
+
+        Shed requests are counted in ``shed_requests`` and returned to the
+        caller for ticket resolution; ``expire_fn`` is NOT invoked —
+        shedding is an admission-control decision, not a deadline expiry
+        (the two are distinct ledger classes).
+        """
+        del now  # slack ordering reduces to deadline ordering (same `now`)
+        excess = len(self._queue) - max(0, keep)
+        if excess <= 0:
+            return []
+        order = sorted(
+            range(len(self._queue)),
+            key=lambda i: (
+                (1, 0.0, -i) if self._queue[i].deadline is None
+                else (0, self._queue[i].deadline, -i)
+            ),
+        )
+        victims = set(order[:excess])
+        evicted = [self._queue[i] for i in order[:excess]]
+        self._queue = [r for i, r in enumerate(self._queue)
+                       if i not in victims]
+        self.shed_requests += len(evicted)
+        deadlines = [r.deadline for r in self._queue if r.deadline is not None]
+        self._deadline_count = len(deadlines)
+        self._min_deadline = min(deadlines, default=None)
+        if self._queue:
+            # FIFO order: the head of the surviving queue is the oldest
+            self.first_arrival = self._queue[0].arrival_time
+        else:
+            self.first_arrival = None
+            self.next_deadline = None
+        return evicted
 
     def next_expiry(self) -> Optional[float]:
         """Earliest queued deadline (None when no queued request has one)."""
@@ -264,6 +311,7 @@ class BatchQueue:
             "dispatched_batches": self.dispatched_batches,
             "dispatched_requests": self.dispatched_requests,
             "expired_requests": self.expired_requests,
+            "shed_requests": self.shed_requests,
         }
 
     def restore(self, state: dict) -> None:
@@ -272,8 +320,10 @@ class BatchQueue:
         self.next_deadline = state["next_deadline"]
         self.dispatched_batches = state["dispatched_batches"]
         self.dispatched_requests = state["dispatched_requests"]
-        # pre-deadline snapshots carry no expiry state
+        # pre-deadline snapshots carry no expiry state; pre-brownout
+        # snapshots carry no shed accounting
         self.expired_requests = state.get("expired_requests", 0)
+        self.shed_requests = state.get("shed_requests", 0)
         deadlines = [r.deadline for r in self._queue if r.deadline is not None]
         self._deadline_count = len(deadlines)
         self._min_deadline = min(deadlines, default=None)

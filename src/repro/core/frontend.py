@@ -163,6 +163,10 @@ class ProxyFrontend:
         agg_upstream = sum(s.get("upstream_batches", 0) for s in per.values())
         agg_slots = sum(s.get("dispatched_slots", 0) for s in per.values())
         agg_padded = sum(s.get("padded_slots", 0) for s in per.values())
+        agg_attempts = sum(
+            s.get("upstream_attempts", s.get("upstream_batches", 0))
+            for s in per.values())
+        agg_failed = sum(s.get("failed_attempts", 0) for s in per.values())
         return {
             "endpoints": per,
             "aggregate": {
@@ -172,12 +176,19 @@ class ProxyFrontend:
                 "dispatched_requests": agg_requests,
                 # deadline-expired requests evicted before dispatch
                 "expired": sum(s.get("expired", 0) for s in per.values()),
+                # brownout-shed requests evicted at admission pressure
+                "shed": sum(s.get("shed", 0) for s in per.values()),
                 "avg_batch_size": agg_requests / agg_batches if agg_batches else 0.0,
                 # platform-side crash retries / hedges, observed through
                 # Batch.attempts on the completion path; rate is over
                 # *completed* upstream batches, same as per-endpoint stats
                 "retried_batches": agg_retried,
                 "retry_rate": agg_retried / agg_upstream if agg_upstream else 0.0,
+                # failed upstream attempts (target errors / injected
+                # faults), over all attempts that reached the target
+                "failed_attempts": agg_failed,
+                "failure_rate": (agg_failed / (agg_attempts + agg_failed)
+                                 if (agg_attempts + agg_failed) else 0.0),
                 # bucket slots burned on padding, over all dispatched slots
                 # (0.0 on unbucketed endpoints: every slot is a request)
                 "padding_waste": agg_padded / agg_slots if agg_slots else 0.0,

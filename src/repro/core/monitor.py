@@ -260,6 +260,10 @@ class SmartMonitor:
         self.lifetime_upstream_batches = 0
         self.lifetime_upstream_attempts = 0
         self.lifetime_retried_batches = 0
+        # failed dispatch attempts (target raised / injected fault); they
+        # never enter the latency windows — there is no completion latency
+        # to learn from — but they feed failure_rate()
+        self.lifetime_failed_attempts = 0
         # padding accounting on bucketed backends: a dispatch of n requests
         # into a bucket of size b occupies b slots, b - n of them padding
         self.lifetime_dispatched_slots = 0
@@ -291,6 +295,18 @@ class SmartMonitor:
                 est = P2Quantile(self.sla.percentile / 100.0)
                 self._p2[batch_size] = est
             est.add(latency)
+
+    def record_failure(self, batch_size: int, now: float) -> None:
+        """Record one FAILED upstream dispatch attempt.
+
+        The attempt produced no completion latency, so nothing enters the
+        per-size windows; only the failure counter moves. ``batch_size``
+        and ``now`` mirror :meth:`record_upstream`'s signature for callers
+        that treat the two symmetrically (and for future per-size failure
+        tracking).
+        """
+        del batch_size, now
+        self.lifetime_failed_attempts += 1
 
     def record_e2e(self, latency: float, now: float) -> None:
         """Record one end-to-end (user-observed) response time."""
@@ -406,6 +422,13 @@ class SmartMonitor:
             return 0.0
         return self.lifetime_retried_batches / self.lifetime_upstream_batches
 
+    def failure_rate(self) -> float:
+        """Fraction of all upstream dispatch attempts that failed."""
+        total = self.lifetime_upstream_attempts + self.lifetime_failed_attempts
+        if total == 0:
+            return 0.0
+        return self.lifetime_failed_attempts / total
+
     def padding_waste(self) -> float:
         """Lifetime fraction of dispatched bucket slots that were padding."""
         if self.lifetime_dispatched_slots == 0:
@@ -433,6 +456,7 @@ class SmartMonitor:
                 self.lifetime_upstream_attempts,
                 self.lifetime_retried_batches,
             ),
+            "lifetime_failed_attempts": self.lifetime_failed_attempts,
             "lifetime_padding": (
                 self.lifetime_dispatched_slots,
                 self.lifetime_padded_slots,
@@ -457,6 +481,8 @@ class SmartMonitor:
             self.lifetime_upstream_attempts,
             self.lifetime_retried_batches,
         ) = state.get("lifetime_upstream", (0, 0, 0))
+        # pre-fault-tolerance snapshots carry no failure accounting
+        self.lifetime_failed_attempts = state.get("lifetime_failed_attempts", 0)
         (
             self.lifetime_dispatched_slots,
             self.lifetime_padded_slots,

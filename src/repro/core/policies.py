@@ -156,6 +156,10 @@ class BatchingPolicy:
         """Evict deadline-expired queued requests (O(1) when none)."""
         return self.queue.expire(now)
 
+    def shed(self, now: float, keep: int) -> List[Request]:
+        """Evict queued requests beyond ``keep``, lowest slack first."""
+        return self.queue.shed(now, keep)
+
     def next_event_time(self, now: float) -> Optional[float]:
         # dispatch deadline merged with the earliest request expiry
         return self.queue.next_event_time()
@@ -176,12 +180,15 @@ class BatchingPolicy:
             "dispatched_requests": self.queue.dispatched_requests,
             "avg_batch_size": self.queue.avg_batch_size,
             "expired": self.queue.expired_requests,
+            "shed": self.queue.shed_requests,
             "e2e_p": self.monitor.e2e_percentile(now),
             "violation_rate": self.monitor.violation_rate(),
             "timeout_ratio": self.monitor.timeout_ratio(),
             "upstream_batches": self.monitor.lifetime_upstream_batches,
             "retried_batches": self.monitor.lifetime_retried_batches,
             "retry_rate": self.monitor.retry_rate(),
+            "failed_attempts": self.monitor.lifetime_failed_attempts,
+            "failure_rate": self.monitor.failure_rate(),
             "dispatched_slots": self.monitor.lifetime_dispatched_slots,
             "padded_slots": self.monitor.lifetime_padded_slots,
             "padding_waste": self.monitor.padding_waste(),

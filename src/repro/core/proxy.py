@@ -90,6 +90,10 @@ class MLProxy:
         """Evict deadline-expired queued requests (O(1) when none)."""
         return self.scheduler.queue.expire(now)
 
+    def shed(self, now: float, keep: int) -> List[Request]:
+        """Evict queued requests beyond ``keep``, lowest slack first."""
+        return self.scheduler.queue.shed(now, keep)
+
     def flush(self, now: float) -> None:
         self.scheduler.flush(now)
 
@@ -111,12 +115,15 @@ class MLProxy:
             "dispatched_requests": self.scheduler.dispatched_requests,
             "avg_batch_size": self.scheduler.queue.avg_batch_size,
             "expired": self.scheduler.queue.expired_requests,
+            "shed": self.scheduler.queue.shed_requests,
             "e2e_p": self.monitor.e2e_percentile(now),
             "violation_rate": self.monitor.violation_rate(),
             "timeout_ratio": self.monitor.timeout_ratio(),
             "upstream_batches": self.monitor.lifetime_upstream_batches,
             "retried_batches": self.monitor.lifetime_retried_batches,
             "retry_rate": self.monitor.retry_rate(),
+            "failed_attempts": self.monitor.lifetime_failed_attempts,
+            "failure_rate": self.monitor.failure_rate(),
             "dispatched_slots": self.monitor.lifetime_dispatched_slots,
             "padded_slots": self.monitor.lifetime_padded_slots,
             "padding_waste": self.monitor.padding_waste(),

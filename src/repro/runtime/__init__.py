@@ -4,34 +4,54 @@ Layer map (README "Live runtime"): the same routing/policy/queue core the
 simulators drive (`ProxyFrontend` → `Policy` → `BatchQueue`) is driven
 here by real timers (:mod:`repro.runtime.clock`), real dispatch execution
 against pluggable targets (:mod:`repro.runtime.targets`), replayed
-arrival processes (:mod:`repro.runtime.loadgen`) and the sim↔real
-calibration bridge (:mod:`repro.runtime.calibrate`).
+arrival processes (:mod:`repro.runtime.loadgen`), the sim↔real
+calibration bridge (:mod:`repro.runtime.calibrate`), and the fault
+tolerance layer — deterministic chaos injection
+(:mod:`repro.runtime.faults`) and per-endpoint circuit breaking
+(:mod:`repro.runtime.breaker`).
 """
+from repro.runtime.breaker import BreakerConfig, CircuitBreaker
 from repro.runtime.calibrate import BucketStat, Calibration, measure_engine
 from repro.runtime.clock import Clock, FakeClock, WallClock, run
+from repro.runtime.faults import (CrashFault, FaultConfig, FaultyTarget,
+                                  InjectedFault, PartialBatchFault,
+                                  PreemptedFault, UpstreamTimeout, fault_rng)
 from repro.runtime.loadgen import (LoadGenerator, ReplayResult, run_replay)
-from repro.runtime.server import (AsyncProxyServer, DeadlineExceeded,
-                                  DrainTimeout, RequestTicket,
-                                  RuntimeConfig, clamp_policy_kwargs)
+from repro.runtime.server import (AsyncProxyServer, BrownoutShed,
+                                  DeadlineExceeded, DrainTimeout,
+                                  RequestTicket, RuntimeConfig, TargetError,
+                                  clamp_policy_kwargs)
 from repro.runtime.targets import DispatchTarget, EngineTarget, SyntheticTarget
 
 __all__ = [
     "AsyncProxyServer",
+    "BreakerConfig",
+    "BrownoutShed",
     "BucketStat",
     "Calibration",
+    "CircuitBreaker",
     "Clock",
+    "CrashFault",
     "DeadlineExceeded",
     "DispatchTarget",
     "DrainTimeout",
     "EngineTarget",
     "FakeClock",
+    "FaultConfig",
+    "FaultyTarget",
+    "InjectedFault",
     "LoadGenerator",
+    "PartialBatchFault",
+    "PreemptedFault",
     "ReplayResult",
     "RequestTicket",
     "RuntimeConfig",
     "SyntheticTarget",
+    "TargetError",
+    "UpstreamTimeout",
     "WallClock",
     "clamp_policy_kwargs",
+    "fault_rng",
     "measure_engine",
     "run",
     "run_replay",

@@ -30,11 +30,24 @@ timers instead of a simulated event heap. Policies are clock-free
   configured quantile of its bucket's measured latency is re-issued to
   the target; first completion wins and the loser is cancelled (the
   proxy-side mirror of the platform's hedge ledger);
+* **deadline-aware retries** — a failed dispatch attempt is retried with
+  capped exponential backoff plus seeded jitter, but never past the
+  batch's tightest deadline: leftover budget resolves the tickets
+  ``timed_out`` (the SLA already lost), an exhausted retry budget
+  resolves them ``failed`` with a :class:`TargetError`;
+* **circuit breaking + brownout shedding** — an optional per-endpoint
+  :class:`~repro.runtime.breaker.CircuitBreaker` opens on a windowed
+  failure rate; while it is not closed, admission runs in brownout
+  (tightened ``max_queue``/``max_outstanding`` caps) and the open
+  transition sheds the endpoint's lowest-slack queued requests — both
+  accounted in the dedicated ``shed`` ledger class, distinct from
+  ``rejected`` (hard caps) and ``timed_out`` (deadlines);
 * **graceful drain** — ``drain(timeout=...)`` stops admissions, flushes
-  every queue, awaits in-flight work (cancelling stragglers at the
+  every queue, awaits in-flight work (cancelling stragglers — including
+  batches parked on a retry backoff or a breaker probe wait — at the
   timeout) and asserts the runtime conservation invariant
-  (``submitted == completed + rejected + timed_out + failed``, zero
-  lost — the live mirror of the platform's ``assert_conserved``).
+  (``submitted == completed + rejected + shed + timed_out + failed``,
+  zero lost — the live mirror of the platform's ``assert_conserved``).
 
 All interaction with the server must happen on its event loop (asyncio is
 single-threaded; policies are not thread-safe).
@@ -53,6 +66,7 @@ import numpy as np
 from repro.core.config import SLAConfig
 from repro.core.frontend import ProxyFrontend
 from repro.core.request import Batch, Request
+from repro.runtime.breaker import CLOSED, BreakerConfig, CircuitBreaker
 from repro.runtime.clock import Clock, WallClock
 from repro.runtime.targets import DispatchTarget
 from repro.simulation.stats import CompletionLog
@@ -71,6 +85,27 @@ class DrainTimeout(Exception):
     """A dispatched batch was cancelled because ``drain(timeout=...)``
     expired before its target completed; its requests are accounted as
     ``failed`` and their tickets resolve with this error."""
+
+
+class TargetError(Exception):
+    """A dispatch target kept failing until the retry budget ran out.
+
+    The final upstream exception is chained as ``__cause__``; the batch's
+    requests are accounted as ``failed`` and their tickets resolve with
+    this error — a buggy target degrades one batch, not the whole drain.
+    """
+
+    def __init__(self, message: str, attempts: int = 1) -> None:
+        super().__init__(message)
+        self.attempts = attempts
+
+
+class BrownoutShed(Exception):
+    """A request was shed by brownout admission control: its endpoint's
+    circuit breaker is not closed, so the proxy is deliberately dropping
+    load it cannot serve within SLA. The ticket resolves normally with
+    ``shed=True`` and this error attached; the request was never
+    dispatched or billed (a distinct ledger class from ``rejected``)."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -102,6 +137,33 @@ class RuntimeConfig:
     #: Minimum in-window latency samples for a bucket before hedging arms
     #: (a cold bucket has no trustworthy straggler threshold).
     hedge_min_samples: int = 10
+    #: Proxy-tier retry budget per batch: a failed dispatch attempt is
+    #: retried up to this many times with capped exponential backoff,
+    #: never past the batch's tightest deadline. 0 disables retries (a
+    #: failed batch resolves immediately — the pre-fault-tolerance
+    #: behaviour, and the byte-identity default).
+    max_retries: int = 0
+    #: Backoff before the first retry; attempt k waits
+    #: ``min(retry_backoff * 2**(k-1), retry_backoff_cap)`` seconds.
+    retry_backoff: float = 0.05
+    retry_backoff_cap: float = 2.0
+    #: Uniform jitter fraction multiplied onto each backoff (decorrelates
+    #: retry storms); drawn from the seeded retry stream, one draw per
+    #: retry actually scheduled, so no-retry runs never touch the stream.
+    retry_jitter: float = 0.1
+    #: Seed of the retry-jitter stream.
+    retry_seed: int = 0
+    #: Per-endpoint circuit breaker; None disables breaking (and with it
+    #: brownout shedding).
+    breaker: Optional[BreakerConfig] = None
+    #: Brownout queue cap while an endpoint's breaker is not closed: the
+    #: endpoint's pending queue is held at this depth (excess submissions
+    #: are shed, and the open transition sheds queued requests down to
+    #: it, lowest slack first). 0 disables queue brownout.
+    brownout_queue: int = 4
+    #: Brownout cap on total outstanding requests while ANY breaker is
+    #: not closed. 0 disables outstanding brownout.
+    brownout_outstanding: int = 0
 
     def __post_init__(self) -> None:
         if self.oversize not in ("clamp", "error"):
@@ -115,6 +177,14 @@ class RuntimeConfig:
             )
         if self.hedge_min_samples < 1:
             raise ValueError("hedge_min_samples must be >= 1")
+        if self.max_retries < 0:
+            raise ValueError("max_retries must be >= 0")
+        if self.retry_backoff <= 0 or self.retry_backoff_cap <= 0:
+            raise ValueError("retry backoffs must be > 0")
+        if self.retry_jitter < 0:
+            raise ValueError("retry_jitter must be >= 0")
+        if self.brownout_queue < 0 or self.brownout_outstanding < 0:
+            raise ValueError("brownout caps must be >= 0 (0 disables)")
 
 
 class RequestTicket:
@@ -122,13 +192,14 @@ class RequestTicket:
 
     ``future`` resolves with the ticket when the request completes — or
     immediately with ``rejected=True`` when admission control turns it
-    away, or with ``timed_out=True`` (and ``error`` set to a
-    :class:`DeadlineExceeded`) when the request's deadline expired while
-    it was still queued.
+    away, with ``shed=True`` (and ``error`` set to a
+    :class:`BrownoutShed`) when brownout admission dropped it, or with
+    ``timed_out=True`` (and ``error`` set to a :class:`DeadlineExceeded`)
+    when the request's deadline expired while it was still queued.
     """
 
     __slots__ = ("request", "future", "rejected", "endpoint", "timed_out",
-                 "error")
+                 "shed", "error")
 
     def __init__(self, request: Request, future: asyncio.Future,
                  endpoint: str, rejected: bool = False) -> None:
@@ -137,6 +208,7 @@ class RequestTicket:
         self.endpoint = endpoint
         self.rejected = rejected
         self.timed_out = False
+        self.shed = False
         self.error: Optional[BaseException] = None
 
     @property
@@ -215,18 +287,21 @@ class AsyncProxyServer:
         self._target_takes_deadline: Dict[str, bool] = {}
 
         # conservation ledger:
-        #   submitted == completed + rejected + timed_out + failed
+        #   submitted == completed + rejected + shed + timed_out + failed
         #                + outstanding   (drained: outstanding == 0)
         self.submitted = 0
         self.completed = 0
         self.rejected = 0
+        self.shed = 0  # brownout admission drop; never dispatched
         self.timed_out = 0  # deadline expired while queued; never dispatched
         self.failed = 0  # target raised; requests resolved with the error
-        # Subset of `failed` that drain(timeout=) itself cancelled — the
-        # only failures a clean shutdown tolerates (any other failure at
-        # drain still trips assert_conserved, preserving the pre-deadline
-        # "buggy target cannot slip through drain()" signal).
+        # Subset of `failed` that drain(timeout=) itself cancelled, and the
+        # subset a target's exhausted retry budget produced (TargetError).
+        # A clean shutdown tolerates exactly their sum — any OTHER failure
+        # at drain still trips assert_conserved, preserving the "lost
+        # accounting cannot slip through drain()" signal.
         self.drain_cancelled = 0
+        self.target_failures = 0
         self._tickets: Dict[int, RequestTicket] = {}  # req_id → outstanding
 
         # active-window anchors for summary() throughput (the clock may
@@ -237,6 +312,23 @@ class AsyncProxyServer:
         # proxy-tier straggler hedging
         self.hedged_batches = 0  # duplicates issued
         self.hedge_wins = 0      # duplicates that finished first
+
+        # proxy-tier retries + circuit breaking (fault tolerance)
+        self.retried_batches = 0    # batches that needed >= 1 proxy retry
+        self.retry_exhausted = 0    # batches whose retry budget ran out
+        self.faulted_batches = 0    # batches with >= 1 failed attempt
+        self.recovered_batches = 0  # faulted batches that still completed
+        # completions whose ticket was already resolved — must stay 0;
+        # the "zero duplicate completions" half of the chaos invariant
+        self.duplicate_completions = 0
+        #: (time, endpoint, batch size, failure #, backoff, error type)
+        #: per retry actually scheduled — the fault-determinism artifact.
+        self.retry_log: List[Tuple[float, str, int, int, float, str]] = []
+        self._breakers: Dict[str, CircuitBreaker] = {}
+        # seeded retry-jitter stream; drawn once per scheduled retry, in
+        # scheduling order, so FakeClock runs stay bit-identical
+        self._retry_rng = np.random.default_rng(
+            np.random.SeedSequence(self.config.retry_seed))
 
         # dispatch bookkeeping
         self._batch_tasks: Set[asyncio.Task] = set()
@@ -301,6 +393,8 @@ class AsyncProxyServer:
         self._target_takes_deadline[name] = takes_deadline
         self.completions[name] = CompletionLog()
         self.bucket_samples[name] = {}
+        if self.config.breaker is not None:
+            self._breakers[name] = CircuitBreaker(self.config.breaker)
 
         def dispatch(batch: Batch, _name: str = name) -> None:
             self._on_dispatch(_name, batch)
@@ -405,12 +499,12 @@ class AsyncProxyServer:
             self._first_submit = now
 
         cfg = self.config
-        if cfg.max_queue > 0:
+        if cfg.max_queue > 0 or self._breakers:
             # dead requests the timer hasn't swept yet must not count
             # toward the queue cap (they would spuriously reject this one)
             ep.policy.expire(now)
         outstanding = self.submitted - self.completed - self.rejected \
-            - self.timed_out - self.failed - 1  # excluding this request
+            - self.shed - self.timed_out - self.failed - 1  # excl. this one
         reject = (
             not self._accepting
             or (cfg.max_outstanding > 0 and outstanding >= cfg.max_outstanding)
@@ -419,6 +513,33 @@ class AsyncProxyServer:
         if reject:
             self.rejected += 1
             ticket = RequestTicket(request, future, ep.name, rejected=True)
+            future.set_result(ticket)
+            return ticket
+
+        # Brownout admission: while this endpoint's breaker is not closed
+        # the queue cap tightens to brownout_queue, and while ANY breaker
+        # is not closed the outstanding cap tightens to
+        # brownout_outstanding. A submission admitted under the normal
+        # caps but dropped by the tightened ones is `shed`, not
+        # `rejected` — a deliberate brownout decision, not backpressure.
+        breaker = self._breakers.get(ep.name)
+        browned_ep = breaker is not None and breaker.state(now) != CLOSED
+        drop = (
+            browned_ep and cfg.brownout_queue > 0
+            and ep.policy.queue_len >= cfg.brownout_queue
+        )
+        if (not drop and cfg.brownout_outstanding > 0
+                and outstanding >= cfg.brownout_outstanding):
+            drop = any(b.state(now) != CLOSED for b in self._breakers.values())
+        if drop:
+            self.shed += 1
+            ticket = RequestTicket(request, future, ep.name)
+            ticket.shed = True
+            ticket.error = BrownoutShed(
+                f"request {request.req_id} shed at t={now:.6f}: endpoint "
+                f"{ep.name!r} is browned out (breaker "
+                f"{breaker.state(now) if breaker else 'n/a'})"
+            )
             future.set_result(ticket)
             return ticket
 
@@ -553,27 +674,165 @@ class AsyncProxyServer:
         with contextlib.suppress(asyncio.CancelledError, Exception):
             await task
 
+    def _brownout_shed(self, name: str, now: float) -> None:
+        """Breaker opened on ``name``: shed its queue down to the brownout
+        cap, lowest-slack first, and resolve the victims' tickets."""
+        keep = self.config.brownout_queue
+        if keep <= 0:
+            return
+        victims = self.frontend.endpoint(name).policy.shed(now, keep)
+        for r in victims:
+            ticket = self._tickets.pop(r.req_id, None)
+            if ticket is not None and not ticket.future.done():
+                ticket.shed = True
+                ticket.error = BrownoutShed(
+                    f"request {r.req_id} shed at t={now:.6f}: endpoint "
+                    f"{name!r} circuit opened"
+                )
+                ticket.future.set_result(ticket)
+        self.shed += len(victims)
+        if victims:
+            self._wake.set()
+
+    def _record_failure(self, name: str, batch: Batch, now: float) -> None:
+        """One dispatch attempt failed: feed the monitor's failure stats
+        and the breaker; an opening breaker triggers brownout shedding."""
+        monitor = getattr(self.frontend.endpoint(name).policy, "monitor", None)
+        if monitor is not None:
+            monitor.record_failure(batch.effective_size, now)
+        breaker = self._breakers.get(name)
+        if breaker is not None and breaker.record_failure(now):
+            self._brownout_shed(name, now)
+
+    def _backoff(self, failures: int) -> float:
+        """Capped exponential backoff before retry #``failures``, with
+        seeded uniform jitter (one stream draw per scheduled retry)."""
+        cfg = self.config
+        backoff = min(cfg.retry_backoff_cap,
+                      cfg.retry_backoff * (2.0 ** (failures - 1)))
+        if cfg.retry_jitter > 0:
+            backoff *= 1.0 + cfg.retry_jitter * float(self._retry_rng.random())
+        return backoff
+
+    async def _breaker_gate(self, name: str,
+                            deadline: Optional[float]) -> bool:
+        """Park until ``name``'s breaker admits a dispatch attempt.
+
+        While open, sleeps to the probe instant; while half-open with the
+        single probe slot taken, polls at ``probe_interval`` until the
+        probe's outcome settles the state. Returns False when the next
+        admissible attempt instant already lies past ``deadline`` — the
+        batch cannot possibly complete in time, so the caller resolves it
+        ``timed_out`` instead of waiting. The waits are plain clock sleeps
+        inside the batch task, so ``drain(timeout=)`` cancels them like
+        any other parked sleeper. The loop is bounded by the breaker's
+        own dynamics (each pass sleeps a full open interval or a probe
+        beat) and by the deadline cutoff.
+        """
+        breaker = self._breakers.get(name)
+        if breaker is None:
+            return True
+        while True:
+            now = self.clock.now()
+            until = breaker.blocked_until(now)
+            if until is not None:
+                # open: sleep out the remaining interval
+                if deadline is not None and until >= deadline:
+                    return False
+                await self.clock.sleep(until - now)
+                continue
+            if breaker.try_probe(now):
+                return True
+            # half-open, probe slot taken: wait a beat for its verdict
+            beat = breaker.config.probe_interval
+            if deadline is not None and now + beat >= deadline:
+                return False
+            await self.clock.sleep(beat)
+
     async def _run_batch(self, name: str, batch: Batch, t0: float) -> None:
+        cfg = self.config
+        breaker = self._breakers.get(name)
+        deadline = batch.tightest_deadline
         error: Optional[BaseException] = None
-        attempts = 1
+        timed_out = False
+        attempts = 0
+        failures = 0
+        retries_issued = 0
         try:
-            attempts = await self._execute_hedged(
-                name, batch, batch.tightest_deadline)
+            while True:  # bounded by max_retries and the batch deadline
+                if not await self._breaker_gate(name, deadline):
+                    # every admissible probe instant is past the deadline:
+                    # the SLA is already lost, stop burning the upstream
+                    timed_out = True
+                    break
+                try:
+                    attempts += await self._execute_hedged(
+                        name, batch, deadline)
+                    error = None
+                    if breaker is not None:
+                        breaker.record_success(self.clock.now())
+                    break
+                except asyncio.CancelledError:
+                    raise
+                except Exception as exc:  # noqa: BLE001 — retried/resolved
+                    attempts += 1
+                    failures += 1
+                    error = exc
+                    now = self.clock.now()
+                    self._record_failure(name, batch, now)
+                    if failures > cfg.max_retries:
+                        self.retry_exhausted += 1
+                        break
+                    backoff = self._backoff(failures)
+                    if deadline is not None and now + backoff >= deadline:
+                        # leftover budget cannot fit another attempt:
+                        # deadline semantics win over retry semantics
+                        timed_out = True
+                        break
+                    retries_issued += 1
+                    self.retry_log.append(
+                        (now, name, batch.size, failures, backoff,
+                         type(exc).__name__)
+                    )
+                    await self.clock.sleep(backoff)
         except asyncio.CancelledError:
-            # drain(timeout=) gave up on this batch: account its requests
-            # as failed rather than hanging the process (the task itself
-            # completes normally so drain's gather() can collect it).
+            # drain(timeout=) gave up on this batch — possibly mid-attempt,
+            # parked on a retry backoff, or waiting out an open breaker:
+            # account its requests as failed rather than hanging the
+            # process (the task itself completes normally so drain's
+            # gather() can collect it).
             error = DrainTimeout(
                 f"batch of {batch.size} on {name!r} cancelled at drain "
                 "timeout"
             )
+            timed_out = False
             self.drain_cancelled += batch.size
-        except Exception as exc:  # noqa: BLE001 — resolved into tickets
-            error = exc
         now = self.clock.now()
         self.inflight_batches -= 1
+        if failures:
+            self.faulted_batches += 1
+        if retries_issued:
+            self.retried_batches += 1
+        if timed_out:
+            # the batch was never completed by the upstream; its requests
+            # exhaust their deadline exactly like a queue expiry would
+            for r in batch.requests:
+                ticket = self._tickets.pop(r.req_id, None)
+                if ticket is not None and not ticket.future.done():
+                    ticket.timed_out = True
+                    ticket.error = DeadlineExceeded(
+                        f"request {r.req_id} ran out of deadline budget at "
+                        f"t={now:.6f} after {failures} failed dispatch "
+                        f"attempt(s) on {name!r}"
+                    )
+                    ticket.future.set_result(ticket)
+            self.timed_out += batch.size
+            self._wake.set()
+            return
         if error is None:
-            batch.attempts = attempts
+            batch.attempts = max(1, attempts)
+            if failures:
+                self.recovered_batches += 1
             latency = now - t0
             self.frontend.on_response(batch, latency, now)
             self.bucket_samples[name].setdefault(
@@ -585,9 +844,25 @@ class AsyncProxyServer:
                 ticket = self._tickets.pop(r.req_id, None)
                 if ticket is not None and not ticket.future.done():
                     ticket.future.set_result(ticket)
+                else:
+                    # a completion with no live ticket means the request
+                    # was resolved twice — the invariant chaos must not
+                    # be able to break
+                    self.duplicate_completions += 1
             self.completed += batch.size
             self._last_completion = now
         else:
+            if not isinstance(error, DrainTimeout):
+                # exhausted retry budget: classify as a target failure so
+                # the drained assert can tell it from lost accounting
+                wrapped = TargetError(
+                    f"batch of {batch.size} on {name!r} failed after "
+                    f"{max(1, attempts)} attempt(s): {error!r}",
+                    attempts=max(1, attempts),
+                )
+                wrapped.__cause__ = error
+                error = wrapped
+                self.target_failures += batch.size
             for r in batch.requests:
                 ticket = self._tickets.pop(r.req_id, None)
                 if ticket is not None and not ticket.future.done():
@@ -617,41 +892,54 @@ class AsyncProxyServer:
             for ep in self.frontend.stats(self.clock.now())["endpoints"].values()
         )
         outstanding = len(self._tickets)
-        lost = (self.submitted - self.completed - self.rejected
+        lost = (self.submitted - self.completed - self.rejected - self.shed
                 - self.timed_out - self.failed - outstanding)
         return {
             "submitted": self.submitted,
             "completed": self.completed,
             "rejected": self.rejected,
+            "shed": self.shed,
             "timed_out": self.timed_out,
             "failed": self.failed,
             "drain_cancelled": self.drain_cancelled,
+            "target_failures": self.target_failures,
             "outstanding": outstanding,
             "queued": queue_len,
             "inflight_batches": self.inflight_batches,
             "hedged_batches": self.hedged_batches,
+            "retried_batches": self.retried_batches,
+            "retry_exhausted": self.retry_exhausted,
+            "faulted_batches": self.faulted_batches,
+            "recovered_batches": self.recovered_batches,
+            "duplicate_completions": self.duplicate_completions,
             "lost": lost,
         }
 
     def assert_conserved(self, require_drained: bool = False) -> dict:
         """Raise ``AssertionError`` on any broken runtime invariant.
 
-        Mirrors ``ServerlessPlatform.assert_conserved``: nothing lost at
-        any instant; with ``require_drained``, nothing outstanding either
-        (``submitted == completed + rejected + timed_out + failed`` —
-        every terminal state explicitly accounted, zero lost) and the
-        only tolerated failures are the ones ``drain(timeout=)`` itself
-        cancelled — a target that raised mid-run still fails shutdown.
+        Mirrors ``ServerlessPlatform.assert_conserved``: nothing lost and
+        nothing completed twice at any instant; with ``require_drained``,
+        nothing outstanding either (``submitted == completed + rejected +
+        shed + timed_out + failed`` — every terminal state explicitly
+        accounted, zero lost) and every failure is *classified*: either
+        ``drain(timeout=)`` cancelled it or an exhausted retry budget
+        resolved it as a :class:`TargetError`. An unclassified failure at
+        drain still trips the assert — lost accounting cannot slip
+        through shutdown.
         """
         c = self.conservation()
         if c["lost"] != 0:
             raise AssertionError(f"runtime lost requests: {c}")
+        if c["duplicate_completions"] != 0:
+            raise AssertionError(f"duplicate completions: {c}")
         if require_drained:
             if c["outstanding"] or c["queued"] or c["inflight_batches"]:
                 raise AssertionError(f"undrained work at shutdown: {c}")
-            if c["failed"] != c["drain_cancelled"]:
-                raise AssertionError(f"failed dispatches at shutdown: {c}")
-            if c["submitted"] != (c["completed"] + c["rejected"]
+            if c["failed"] != c["drain_cancelled"] + c["target_failures"]:
+                raise AssertionError(
+                    f"unclassified failed dispatches at shutdown: {c}")
+            if c["submitted"] != (c["completed"] + c["rejected"] + c["shed"]
                                   + c["timed_out"] + c["failed"]):
                 raise AssertionError(f"conservation imbalance: {c}")
         return c
@@ -684,9 +972,14 @@ class AsyncProxyServer:
                 "dispatched_batches": float(st.get("dispatched_batches", 0)),
                 "max_bs": float(st.get("max_bs", 1)),
                 "retry_rate": float(st.get("retry_rate", 0.0)),
+                "failure_rate": float(st.get("failure_rate", 0.0)),
                 "timed_out": float(st.get("expired", 0)),
+                "shed": float(st.get("shed", 0)),
                 "padding_waste": float(st.get("padding_waste", 0.0)),
             }
+            breaker = self._breakers.get(name)
+            if breaker is not None:
+                per[name]["breaker"] = breaker.stats(now)
         e2e = np.concatenate(all_e2e) if all_e2e else np.empty(0)
         n = len(e2e)
         cons = self.conservation()
@@ -713,10 +1006,16 @@ class AsyncProxyServer:
             ),
             "submitted": float(cons["submitted"]),
             "rejected": float(cons["rejected"]),
+            "shed": float(cons["shed"]),
             "timed_out": float(cons["timed_out"]),
             "failed": float(cons["failed"]),
             "hedged_batches": float(self.hedged_batches),
             "hedge_wins": float(self.hedge_wins),
+            "retried_batches": float(self.retried_batches),
+            "retry_exhausted": float(self.retry_exhausted),
+            "faulted_batches": float(self.faulted_batches),
+            "recovered_batches": float(self.recovered_batches),
+            "duplicate_completions": float(self.duplicate_completions),
             "padding_waste": fstats["aggregate"]["padding_waste"],
             "lost": float(cons["lost"]),
             "throughput": throughput,

@@ -80,6 +80,9 @@ class SyntheticTarget(DispatchTarget):
         self.batches = 0
         self.requests = 0
         self.cancelled = 0
+        #: calls that began executing (>= batches: a preempted / hedged /
+        #: drain-cancelled call starts but never completes)
+        self.started = 0
         #: tightest deadline of the most recent call (propagation probe)
         self.last_deadline: Optional[float] = None
 
@@ -88,6 +91,7 @@ class SyntheticTarget(DispatchTarget):
         # Sample BEFORE awaiting the slot: service-time draws happen in
         # dispatch order, so the stream stays deterministic under FakeClock
         # regardless of how long slot waits interleave.
+        self.started += 1
         self.last_deadline = deadline
         service = float(self.latency.sample_batch(batch, self.rng))
         try:

@@ -608,9 +608,14 @@ class TestDrainTimeout:
         assert server.failed == 0 and server.completed == 1
         assert clock.now() < 1.0  # did not sit out the full timeout
 
-    def test_midrun_target_failure_still_fails_drained_assert(self):
-        """Only drain-cancelled failures are tolerated at shutdown: a
-        target that raised mid-run must still trip assert_conserved."""
+    def test_midrun_target_failure_resolves_as_target_error(self):
+        """A target that raises mid-run degrades ONE batch, not shutdown:
+        its tickets resolve with a classified TargetError (original
+        exception chained) and the drained conservation assert passes —
+        the fault-tolerance reversal of the pre-PR-8 behaviour, where
+        any mid-run failure tripped assert_conserved at drain."""
+        from repro.runtime.server import TargetError
+
         class BrokenTarget:
             max_batch = None
 
@@ -625,13 +630,17 @@ class TestDrainTimeout:
         async def main():
             await server.start()
             ticket = server.submit(endpoint="ep")
-            with pytest.raises(RuntimeError, match="upstream bug"):
+            with pytest.raises(TargetError, match="upstream bug"):
                 await ticket.future
-            with pytest.raises(AssertionError, match="failed dispatches"):
-                await server.drain(timeout=10.0)
+            assert isinstance(ticket.future.exception().__cause__,
+                              RuntimeError)
+            await server.drain(timeout=10.0)  # drained assert passes
 
         run(clock, main())
         assert server.failed == 1 and server.drain_cancelled == 0
+        assert server.target_failures == 1
+        c = server.assert_conserved(require_drained=True)
+        assert c["lost"] == 0 and c["retry_exhausted"] == 1
 
     def test_wall_clock_drain_timeout_returns(self):
         """Real wall-clock: a stuck upstream cannot hang drain()."""

@@ -397,6 +397,78 @@ class TestSlotsDataclass:
                     only=["slots-dataclass"]) == []
 
 
+class TestUnboundedRetry:
+    def test_while_true_retry_flagged(self):
+        src = ("async def pump(target, batch):\n"
+               "    while True:\n"
+               "        try:\n"
+               "            return await target(batch)\n"
+               "        except RuntimeError:\n"
+               "            continue\n")
+        (f,) = lint(src, only=["unbounded-retry"])
+        assert "target" in f.message and "while" in f.message
+
+    def test_itertools_count_retry_flagged(self):
+        src = ("import itertools\n"
+               "async def pump(dispatch, batch):\n"
+               "    for _ in itertools.count():\n"
+               "        try:\n"
+               "            return await dispatch(batch)\n"
+               "        except RuntimeError:\n"
+               "            continue\n")
+        assert rules_of(lint(src, only=["unbounded-retry"])) == [
+            "unbounded-retry"]
+
+    def test_deadline_bound_ok(self):
+        src = ("async def pump(clock, target, batch, deadline):\n"
+               "    while True:\n"
+               "        try:\n"
+               "            return await target(batch)\n"
+               "        except RuntimeError:\n"
+               "            if clock.now() >= deadline:\n"
+               "                raise\n")
+        assert lint(src, only=["unbounded-retry"]) == []
+
+    def test_attempt_cap_ok(self):
+        src = ("async def pump(cfg, target, batch):\n"
+               "    failures = 0\n"
+               "    while True:\n"
+               "        try:\n"
+               "            return await target(batch)\n"
+               "        except RuntimeError:\n"
+               "            failures += 1\n"
+               "            if failures > cfg.max_retries:\n"
+               "                raise\n")
+        assert lint(src, only=["unbounded-retry"]) == []
+
+    def test_bounded_while_condition_not_flagged(self):
+        src = ("async def pump(queue, target):\n"
+               "    while queue:\n"
+               "        await target(queue.pop())\n")
+        assert lint(src, only=["unbounded-retry"]) == []
+
+    def test_non_dispatch_loop_not_flagged(self):
+        src = ("async def serve(handler):\n"
+               "    while True:\n"
+               "        await handler.step()\n")
+        assert lint(src, only=["unbounded-retry"]) == []
+
+    def test_bound_in_nested_def_does_not_count(self):
+        src = ("async def pump(target, batch):\n"
+               "    while True:\n"
+               "        def helper(deadline):\n"
+               "            return deadline\n"
+               "        await target(batch)\n")
+        assert rules_of(lint(src, only=["unbounded-retry"])) == [
+            "unbounded-retry"]
+
+    def test_suppressed(self):
+        src = ("async def pump(target, batch):\n"
+               "    while True:  # reprolint: disable=unbounded-retry\n"
+               "        await target(batch)\n")
+        assert lint(src, only=["unbounded-retry"]) == []
+
+
 # ------------------------------------------------- engine-level behaviour
 class TestEngineMechanics:
     def test_parse_error_reported_not_raised(self):

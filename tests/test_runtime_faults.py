@@ -1,0 +1,550 @@
+"""Fault-tolerant live runtime (ISSUE 8): chaos injection, retries,
+circuit breaking, and brownout shedding.
+
+Covers the acceptance points: deterministic FaultyTarget injection for
+all five fault kinds (byte-identical fault schedule / retry log /
+summary under the same seed + FakeClock), deadline-aware proxy-tier
+retries (backoff never scheduled past the batch deadline; leftover
+budget resolves ``timed_out``, not ``failed``), the circuit-breaker
+state machine (closed→open→half-open with a single probe slot),
+brownout shedding at admission and on the open transition (lowest slack
+first, the distinct ``shed`` ledger class), the no-fault byte-identity
+guarantee of the retry layer, and the ``drain(timeout=)`` regressions —
+parked backoff sleepers and breaker-gate waiters are cancelled and
+resolved through the existing DrainTimeout path.
+"""
+import asyncio
+
+import numpy as np
+import pytest
+
+from experiments.scenarios import LIVE_SCENARIOS, run_live_scenario
+from repro.core import SLAConfig, ms
+from repro.core.batch_queue import BatchQueue
+from repro.core.request import Batch, Request
+from repro.runtime import (AsyncProxyServer, BreakerConfig, BrownoutShed,
+                           CircuitBreaker, CrashFault, DrainTimeout,
+                           FakeClock, FaultConfig, FaultyTarget,
+                           PartialBatchFault, PreemptedFault, RuntimeConfig,
+                           SyntheticTarget, TargetError, UpstreamTimeout,
+                           fault_rng, run)
+from repro.runtime.breaker import CLOSED, HALF_OPEN, OPEN
+from repro.serverless.latency import AffineLatency
+
+SLA = SLAConfig(slo_target=ms(500))
+#: deterministic 50 ms upstream, so fault timing asserts are exact
+DET = AffineLatency(a=0.05, c=0.0, noise_cv=0.0)
+
+
+def one_batch(n=1, t=0.0, deadline=None):
+    return Batch(requests=[Request(arrival_time=t, deadline=deadline)
+                           for _ in range(n)],
+                 dispatch_time=t, cause="full")
+
+
+class FlakyTarget(SyntheticTarget):
+    """Fails the first ``fail_first`` dispatch attempts, then succeeds."""
+
+    def __init__(self, *args, fail_first=2, fail_delay=0.0, **kw):
+        super().__init__(*args, **kw)
+        self.fail_first = fail_first
+        self.fail_delay = fail_delay
+        self.attempts_seen = 0
+
+    async def __call__(self, batch, deadline=None):
+        self.attempts_seen += 1
+        if self.attempts_seen <= self.fail_first:
+            if self.fail_delay > 0:
+                await self.clock.sleep(self.fail_delay)
+            raise RuntimeError(f"flaky attempt {self.attempts_seen}")
+        return await super().__call__(batch, deadline=deadline)
+
+
+class _PoisonRng:
+    """Sentinel RNG that fails the test if the fault stream is touched."""
+
+    def random(self):
+        raise AssertionError("fault RNG touched on a zero-fault config")
+
+
+# ---------------------------------------------------------- FaultyTarget
+class TestFaultyTarget:
+    def _pair(self, clock, cfg):
+        inner = SyntheticTarget(DET, clock, rng=np.random.default_rng(1))
+        return inner, FaultyTarget(inner, clock, cfg)
+
+    def test_crash_surfaces_after_latency_inner_untouched(self):
+        clock = FakeClock()
+        inner, target = self._pair(
+            clock, FaultConfig(crash_prob=1.0, crash_latency=0.25))
+
+        async def main():
+            with pytest.raises(CrashFault):
+                await target(one_batch())
+
+        run(clock, main())
+        assert inner.started == 0
+        assert clock.now() == 0.25
+        assert target.injected["crash"] == 1
+        assert target.fault_log == [(0, 0.0, "crash")]
+
+    def test_timeout_burns_stall_budget(self):
+        clock = FakeClock()
+        inner, target = self._pair(
+            clock, FaultConfig(timeout_prob=1.0, timeout_stall=0.5))
+
+        async def main():
+            with pytest.raises(UpstreamTimeout):
+                await target(one_batch())
+
+        run(clock, main())
+        assert inner.started == 0
+        assert clock.now() == 0.5
+
+    def test_straggler_delays_then_completes_normally(self):
+        clock = FakeClock()
+        inner, target = self._pair(
+            clock, FaultConfig(straggler_prob=1.0, straggler_delay=0.4))
+
+        async def main():
+            await target(one_batch())
+
+        run(clock, main())
+        assert inner.batches == 1
+        assert clock.now() == pytest.approx(0.45)  # 0.4 extra + 50ms work
+
+    def test_partial_runs_inner_to_completion_then_fails(self):
+        clock = FakeClock()
+        inner, target = self._pair(clock, FaultConfig(partial_prob=1.0))
+
+        async def main():
+            with pytest.raises(PartialBatchFault):
+                await target(one_batch(n=4))
+
+        run(clock, main())
+        assert inner.batches == 1  # the work WAS done; results discarded
+        assert clock.now() > 0.0
+
+    def test_preempt_cancels_slow_inner(self):
+        clock = FakeClock()
+        inner, target = self._pair(
+            clock, FaultConfig(preempt_prob=1.0, preempt_after=0.01))
+
+        async def main():
+            with pytest.raises(PreemptedFault):
+                await target(one_batch())
+
+        run(clock, main())
+        assert inner.started == 1 and inner.batches == 0  # begun, reclaimed
+        assert clock.now() == pytest.approx(0.01)
+
+    def test_preempt_timer_loses_to_fast_inner(self):
+        clock = FakeClock()
+        fast = SyntheticTarget(AffineLatency(a=0.001, c=0.0, noise_cv=0.0),
+                               clock, rng=np.random.default_rng(1))
+        target = FaultyTarget(
+            fast, clock, FaultConfig(preempt_prob=1.0, preempt_after=0.05))
+
+        async def main():
+            await target(one_batch())
+
+        run(clock, main())
+        assert fast.batches == 1
+        assert target.injected["preempt"] == 1  # drawn, but the work won
+
+    def test_mirrors_inner_shape_contract(self):
+        clock = FakeClock()
+        inner = SyntheticTarget(DET, clock, rng=np.random.default_rng(0),
+                                batch_buckets=(4, 8, 16))
+        target = FaultyTarget(inner, clock, FaultConfig())
+        assert target.max_batch == inner.max_batch
+        assert target.batch_buckets == (4, 8, 16)
+
+    def test_zero_fault_config_never_touches_rng(self):
+        clock = FakeClock()
+        inner = SyntheticTarget(DET, clock, rng=np.random.default_rng(1))
+        target = FaultyTarget(inner, clock, FaultConfig(),
+                              rng=_PoisonRng())
+
+        async def main():
+            await target(one_batch())
+
+        run(clock, main())
+        assert target.fault_log == [(0, 0.0, "ok")]
+
+    def test_probabilities_must_sum_to_at_most_one(self):
+        with pytest.raises(ValueError, match="sum"):
+            FaultConfig(crash_prob=0.7, timeout_prob=0.4)
+        with pytest.raises(ValueError, match=">= 0"):
+            FaultConfig(crash_prob=0.1, crash_latency=-1.0)
+
+    def test_same_seed_same_fault_schedule(self):
+        cfg = FaultConfig(crash_prob=0.2, timeout_prob=0.1,
+                          straggler_prob=0.1, partial_prob=0.1,
+                          preempt_prob=0.1, seed=7)
+        clock = FakeClock()
+        a = FaultyTarget(SyntheticTarget(DET, clock), clock, cfg)
+        b = FaultyTarget(SyntheticTarget(DET, clock), clock, cfg)
+        kinds_a = [a._draw() for _ in range(200)]
+        kinds_b = [b._draw() for _ in range(200)]
+        assert kinds_a == kinds_b
+        assert len(set(kinds_a)) == 6  # all five kinds + "ok" appear
+
+    def test_fault_stream_is_third_seed_sequence_child(self):
+        streams = np.random.SeedSequence(3).spawn(3)
+        expect = np.random.default_rng(streams[2]).random(8)
+        np.testing.assert_array_equal(fault_rng(3).random(8), expect)
+
+
+# --------------------------------------------------------------- retries
+class TestRetries:
+    def _server(self, clock, target, config, sla=SLA):
+        server = AsyncProxyServer(clock=clock, config=config)
+        server.add_endpoint("ep", sla=sla, target=target,
+                            policy="passthrough")
+        return server
+
+    def test_flaky_target_recovers_within_budget(self):
+        clock = FakeClock()
+        target = FlakyTarget(DET, clock, rng=np.random.default_rng(0),
+                             fail_first=2)
+        server = self._server(
+            clock, target,
+            RuntimeConfig(max_retries=4, retry_backoff=0.02,
+                          retry_jitter=0.0))
+
+        async def main():
+            await server.start()
+            ticket = server.submit(endpoint="ep")
+            await ticket.future
+            await server.drain()
+            return ticket
+
+        ticket = run(clock, main())
+        assert ticket.error is None and not ticket.timed_out
+        c = server.conservation()
+        assert c["completed"] == 1 and c["failed"] == 0
+        assert c["retried_batches"] == 1
+        assert c["faulted_batches"] == 1 and c["recovered_batches"] == 1
+        assert len(server.retry_log) == 2
+        # failed attempts feed the monitor's retry stats, not its latency
+        stats = server.frontend.endpoint("ep").policy.stats(clock.now())
+        assert stats["failed_attempts"] == 2
+        assert 0.0 < stats["failure_rate"] < 1.0
+
+    def test_exhausted_budget_resolves_target_error(self):
+        clock = FakeClock()
+        target = FlakyTarget(DET, clock, rng=np.random.default_rng(0),
+                             fail_first=10**9)
+        server = self._server(
+            clock, target,
+            RuntimeConfig(max_retries=2, retry_backoff=0.02,
+                          retry_jitter=0.0))
+
+        async def main():
+            await server.start()
+            ticket = server.submit(endpoint="ep")
+            with pytest.raises(TargetError) as err:
+                await ticket.future
+            await server.drain()
+            return err.value
+
+        err = run(clock, main())
+        assert err.attempts == 3  # first try + 2 retries
+        assert isinstance(err.__cause__, RuntimeError)
+        c = server.conservation()
+        assert c["failed"] == 1 and c["target_failures"] == 1
+        assert c["retry_exhausted"] == 1 and c["lost"] == 0
+
+    def test_backoff_never_scheduled_past_deadline(self):
+        """Leftover deadline budget < backoff → ``timed_out``, not failed."""
+        clock = FakeClock()
+        target = FlakyTarget(DET, clock, rng=np.random.default_rng(0),
+                             fail_first=10**9)
+        server = self._server(
+            clock, target,
+            RuntimeConfig(max_retries=5, retry_backoff=0.2,
+                          retry_jitter=0.0),
+            sla=SLAConfig(slo_target=ms(100), deadline_factor=1.0))
+
+        async def main():
+            await server.start()
+            ticket = server.submit(endpoint="ep")
+            await ticket.future
+            await server.drain()
+            return ticket
+
+        ticket = run(clock, main())
+        assert ticket.timed_out and not ticket.rejected
+        c = server.conservation()
+        assert c["timed_out"] == 1 and c["failed"] == 0
+        assert c["retry_exhausted"] == 0  # deadline won, not the budget
+        assert server.retry_log == []  # the retry was never scheduled
+
+    def test_backoff_growth_is_capped(self):
+        clock = FakeClock()
+        server = AsyncProxyServer(
+            clock=clock,
+            config=RuntimeConfig(max_retries=4, retry_backoff=0.05,
+                                 retry_backoff_cap=0.2, retry_jitter=0.0))
+        assert [server._backoff(k) for k in (1, 2, 3, 4)] == \
+            [0.05, 0.1, 0.2, 0.2]
+
+    def test_jitter_stream_untouched_without_failures(self):
+        """The no-fault byte-identity guarantee at the unit level: a run
+        with the retry layer armed but nothing failing draws zero jitter."""
+        clock = FakeClock()
+        target = SyntheticTarget(DET, clock, rng=np.random.default_rng(0))
+        server = self._server(
+            clock, target, RuntimeConfig(max_retries=4, retry_jitter=0.5))
+        state_before = server._retry_rng.bit_generator.state
+
+        async def main():
+            await server.start()
+            tickets = [server.submit(endpoint="ep") for _ in range(5)]
+            await asyncio.gather(*(t.future for t in tickets))
+            await server.drain()
+
+        run(clock, main())
+        assert server.completed == 5
+        assert server._retry_rng.bit_generator.state == state_before
+
+
+# -------------------------------------------------------- circuit breaker
+class TestCircuitBreaker:
+    CFG = BreakerConfig(window=10, min_samples=5, failure_threshold=0.5,
+                        open_duration=1.0)
+
+    def test_opens_only_past_min_samples_and_threshold(self):
+        br = CircuitBreaker(self.CFG)
+        assert not br.record_failure(0.0)  # rate 1.0 but 1 sample < 5
+        assert not br.record_failure(0.1)
+        br.record_success(0.2)
+        br.record_success(0.3)
+        assert br.state(0.3) == CLOSED
+        assert br.record_failure(0.4)  # 3/5 = 0.6 >= 0.5, samples ok
+        assert br.state(0.4) == OPEN and br.opened == 1
+
+    def test_open_blocks_until_lazy_half_open(self):
+        br = CircuitBreaker(self.CFG)
+        for t in range(5):
+            br.record_failure(float(t))
+        assert br.state(4.0) == OPEN
+        assert br.blocked_until(4.0) == 5.0  # opened_at 4.0 + 1.0
+        assert not br.try_probe(4.5)
+        assert br.state(5.0) == HALF_OPEN  # no timer task: lazy promote
+
+    def test_half_open_admits_single_probe(self):
+        br = CircuitBreaker(self.CFG)
+        for t in range(5):
+            br.record_failure(float(t))
+        assert br.try_probe(5.0)       # the one probe slot
+        assert not br.try_probe(5.0)   # the herd keeps waiting
+        br.record_success(5.1)
+        assert br.state(5.1) == CLOSED and br.closed == 1
+        # the outage's window was cleared: a single fresh failure must
+        # not re-trip the recovered endpoint
+        assert br.failure_rate() == 0.0
+        assert not br.record_failure(5.2)
+        assert br.state(5.2) == CLOSED
+
+    def test_probe_failure_reopens_full_interval(self):
+        br = CircuitBreaker(self.CFG)
+        for t in range(5):
+            br.record_failure(float(t))
+        assert br.try_probe(5.0)
+        assert br.record_failure(5.3)  # probe verdict: still down
+        assert br.reopened == 1
+        assert br.blocked_until(5.3) == 6.3
+
+    def test_close_after_two_releases_probe_slot_between(self):
+        br = CircuitBreaker(BreakerConfig(
+            window=10, min_samples=5, failure_threshold=0.5,
+            open_duration=1.0, close_after=2))
+        for t in range(5):
+            br.record_failure(float(t))
+        assert br.try_probe(5.0)
+        br.record_success(5.1)
+        assert br.state(5.1) == HALF_OPEN  # one success of the two
+        assert br.try_probe(5.1)           # slot released for probe #2
+        br.record_success(5.2)
+        assert br.state(5.2) == CLOSED
+
+    def test_config_validation(self):
+        with pytest.raises(ValueError, match="min_samples"):
+            BreakerConfig(window=4, min_samples=5)
+        with pytest.raises(ValueError, match="failure_threshold"):
+            BreakerConfig(failure_threshold=0.0)
+        with pytest.raises(ValueError, match="probe_interval"):
+            BreakerConfig(probe_interval=0.0)
+
+
+# ------------------------------------------------------ brownout shedding
+class TestBrownoutShedding:
+    def test_queue_shed_orders_lowest_slack_first(self):
+        q = BatchQueue(lambda batch: None)
+        reqs = [Request(arrival_time=0.0, deadline=d)
+                for d in (5.0, 1.0, 3.0)]
+        reqs.append(Request(arrival_time=0.0))  # deadline-free: sheds last
+        for r in reqs:
+            q.append(r, 0.0)
+        victims = q.shed(0.0, keep=2)
+        assert [r.deadline for r in victims] == [1.0, 3.0]
+        assert q.queue_len == 2 and q.shed_requests == 2
+        assert q._min_deadline == 5.0
+
+    def test_open_transition_sheds_and_admission_sheds_while_open(self):
+        clock = FakeClock()
+        # upstream that stalls 0.2s then dies — long enough for queued
+        # arrivals to pile up behind the in-flight batch before the
+        # breaker sees the failure
+        target = FlakyTarget(DET, clock, rng=np.random.default_rng(0),
+                             fail_first=10**9, fail_delay=0.2)
+        server = AsyncProxyServer(clock=clock, config=RuntimeConfig(
+            max_retries=0,
+            breaker=BreakerConfig(window=4, min_samples=1,
+                                  failure_threshold=0.5, open_duration=5.0),
+            brownout_queue=2,
+        ))
+        server.add_endpoint(
+            "ep", sla=SLAConfig(slo_target=ms(500), deadline_factor=8.0),
+            target=target, policy="static",
+            policy_kwargs={"batch_size": 10, "timeout": 300.0})
+
+        async def main():
+            await server.start()
+            inflight = [server.submit(endpoint="ep") for _ in range(10)]
+            queued = []
+            for _ in range(5):
+                await clock.sleep(0.02)  # distinct deadlines => slack order
+                queued.append(server.submit(endpoint="ep"))
+            await clock.sleep(0.15)  # failure at t=0.2 opens the breaker
+            late = server.submit(endpoint="ep")
+            for t in inflight:
+                with pytest.raises(TargetError):
+                    await t.future
+            await server.drain(timeout=1.0)
+            return queued, late
+
+        queued, late = run(clock, main())
+        # open transition shed the queue down to brownout_queue=2,
+        # lowest slack (earliest deadline = earliest arrival) first
+        assert [t.shed for t in queued] == [True, True, True, False, False]
+        assert all(isinstance(t.error, BrownoutShed)
+                   for t in queued if t.shed)
+        # admission while the breaker is open sheds, not rejects
+        assert late.shed and not late.rejected
+        c = server.conservation()
+        assert c["shed"] == 4 and c["failed"] == 10 and c["lost"] == 0
+        # the two survivors were flush-dispatched into an open breaker
+        # whose probe instant lies past their deadline → timed_out
+        assert c["timed_out"] == 2
+        per = server.summary()["endpoints"]["ep"]
+        assert per["breaker"]["state"] == OPEN
+        assert per["breaker"]["opened"] == 1
+
+
+# ------------------------------------------------------- drain(timeout=)
+class TestDrainCancelsParkedSleepers:
+    def test_drain_cancels_backoff_sleeper(self):
+        """Satellite regression: a batch parked on a 100s retry backoff
+        must not hang ``drain(timeout=)`` — it resolves via DrainTimeout."""
+        clock = FakeClock()
+        target = FlakyTarget(DET, clock, rng=np.random.default_rng(0),
+                             fail_first=10**9)
+        server = AsyncProxyServer(clock=clock, config=RuntimeConfig(
+            max_retries=3, retry_backoff=100.0, retry_jitter=0.0))
+        server.add_endpoint("ep", sla=SLA, target=target,
+                            policy="passthrough")
+
+        async def main():
+            await server.start()
+            ticket = server.submit(endpoint="ep")
+            await clock.sleep(0.01)  # first attempt fails; backoff parks
+            t0 = clock.now()
+            await server.drain(timeout=1.0)
+            assert clock.now() == pytest.approx(t0 + 1.0)
+            with pytest.raises(DrainTimeout):
+                await ticket.future
+
+        run(clock, main())
+        c = server.conservation()
+        assert c["drain_cancelled"] == 1 and c["failed"] == 1
+        assert c["retried_batches"] == 1  # the retry WAS scheduled
+        assert c["lost"] == 0
+
+    def test_drain_cancels_breaker_gate_waiter(self):
+        """Satellite regression: a batch parked on an open breaker's
+        probe instant is cancelled by the drain timeout, not awaited."""
+        clock = FakeClock()
+        target = FlakyTarget(DET, clock, rng=np.random.default_rng(0),
+                             fail_first=10**9, fail_delay=0.01)
+        server = AsyncProxyServer(clock=clock, config=RuntimeConfig(
+            max_retries=0,
+            breaker=BreakerConfig(window=4, min_samples=1,
+                                  failure_threshold=0.5,
+                                  open_duration=100.0),
+            brownout_queue=0,  # no queue brownout: let the batch dispatch
+        ))
+        server.add_endpoint("ep", sla=SLA, target=target,
+                            policy="passthrough")
+
+        async def main():
+            await server.start()
+            first = server.submit(endpoint="ep")
+            await clock.sleep(0.02)  # fails → breaker opens for 100s
+            parked = server.submit(endpoint="ep")  # gate-parked dispatch
+            await clock.sleep(0.01)
+            await server.drain(timeout=1.0)
+            with pytest.raises(TargetError):
+                await first.future
+            with pytest.raises(DrainTimeout):
+                await parked.future
+
+        run(clock, main())
+        c = server.conservation()
+        assert c["drain_cancelled"] == 1 and c["failed"] == 2
+        assert c["lost"] == 0
+
+
+# ------------------------------------------------- scenario determinism
+class TestChaosDeterminism:
+    @pytest.mark.parametrize("name", sorted(LIVE_SCENARIOS))
+    def test_same_seed_byte_identical_run(self, name):
+        """Same seed + FakeClock ⇒ identical fault schedule, retry log,
+        dispatch log, and summary counters — for every fault kind."""
+        a = run_live_scenario(name, "static", quick=True)
+        b = run_live_scenario(name, "static", quick=True)
+        assert a.fault_log == b.fault_log
+        assert len(a.fault_log) > 0
+        assert a.retry_log == b.retry_log
+        assert a.dispatch_log == b.dispatch_log
+        assert a.conservation == b.conservation
+        assert a.summary == b.summary
+        assert a.conservation["lost"] == 0
+        assert a.conservation["duplicate_completions"] == 0
+
+    def test_different_seed_differs(self):
+        a = run_live_scenario("live-crash-storm", "static", quick=True)
+        b = run_live_scenario("live-crash-storm", "static", quick=True,
+                              seed=99)
+        assert a.fault_log != b.fault_log
+
+    def test_no_fault_runs_byte_identical_to_bare_runtime(self):
+        """Zero-probability wrapper + retry/breaker config ⇒ the exact
+        dispatch schedule of the plain pre-fault-tolerance runtime."""
+        plain = run_live_scenario("live-crash-storm", "static", faults=False,
+                                  quick=True, runtime=RuntimeConfig(),
+                                  bare=True)
+        base = run_live_scenario("live-crash-storm", "static", faults=False,
+                                 quick=True)
+        assert base.dispatch_log == plain.dispatch_log
+        assert base.retry_log == [] and base.conservation["shed"] == 0
+        for key in ("completed", "p50", "p95", "p99", "violation_pct",
+                    "timed_out", "rejected", "failed", "throughput"):
+            assert base.summary[key] == plain.summary[key], key
+
+    def test_bare_cannot_inject_faults(self):
+        with pytest.raises(ValueError, match="bare"):
+            run_live_scenario("live-crash-storm", "static", faults=True,
+                              quick=True, bare=True)

@@ -415,6 +415,81 @@ def check_ledger_counter(project: Project, config: LintConfig
                              "or monitored"))
 
 
+# ----------------------------------------------------------- fault safety
+#: callee terminal names that look like an upstream dispatch — the thing
+#: a retry loop re-invokes
+_RETRY_CALLEE = re.compile(
+    r"(?i)(target|upstream|dispatch|execute|invoke|probe|attempt)")
+#: identifiers that evidence the loop is bounded by a retry cap or a
+#: deadline budget
+_RETRY_BOUND = re.compile(
+    r"(?i)(deadline|retr|attempt|budget|cap|max|limit|bound)")
+
+
+def _infinite_loop_header(ctx: FileContext, node: ast.AST) -> Optional[str]:
+    """Human-readable header when the loop can only exit via break/raise."""
+    if isinstance(node, ast.While):
+        test = node.test
+        if isinstance(test, ast.Constant) and bool(test.value):
+            return f"while {test.value!r}"
+    elif isinstance(node, ast.For):
+        it = node.iter
+        if (isinstance(it, ast.Call)
+                and (ctx.qualified_name(it.func) == "itertools.count"
+                     or _terminal_name(it.func) == "count")):
+            return "for ... in count()"
+    return None
+
+
+def _iter_loop_scope(node: ast.AST) -> Iterator[ast.AST]:
+    """Loop subtree without descending into nested defs/lambdas."""
+    for child in ast.iter_child_nodes(node):
+        if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.Lambda)):
+            continue
+        yield child
+        yield from _iter_loop_scope(child)
+
+
+@rule("unbounded-retry",
+      "infinite loop re-invoking an upstream target with no retry cap or "
+      "deadline bound in sight")
+def check_unbounded_retry(project: Project, config: LintConfig
+                          ) -> Iterator[Finding]:
+    for ctx in project.files:
+        for node in ast.walk(ctx.tree):
+            header = _infinite_loop_header(ctx, node)
+            if header is None:
+                continue
+            dispatch_call: Optional[str] = None
+            bounded = False
+            for sub in _iter_loop_scope(node):
+                if isinstance(sub, ast.Call):
+                    name = _terminal_name(sub.func)
+                    if (dispatch_call is None and name
+                            and _RETRY_CALLEE.search(name)):
+                        dispatch_call = name
+                if isinstance(sub, ast.Name):
+                    ident: Optional[str] = sub.id
+                elif isinstance(sub, ast.Attribute):
+                    ident = sub.attr
+                else:
+                    ident = None
+                if ident and _RETRY_BOUND.search(ident):
+                    bounded = True
+                    break
+            if dispatch_call is not None and not bounded:
+                yield Finding(
+                    rule="unbounded-retry", path=ctx.path,
+                    line=node.lineno, col=node.col_offset,
+                    message=(f"`{header}` loop re-invokes "
+                             f"{dispatch_call}() with no visible retry cap "
+                             "or deadline bound; an endpoint that fails "
+                             "forever spins this loop forever — bound it "
+                             "by a max-attempts counter or the batch "
+                             "deadline"))
+
+
 @rule("slots-dataclass",
       "hot-path dataclass under simulation/ without slots=True")
 def check_slots_dataclass(project: Project, config: LintConfig
