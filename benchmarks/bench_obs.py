@@ -1,0 +1,198 @@
+"""Observability-plane bench: span waterfalls, identity, overhead, postmortem.
+
+Four row kinds (the CI ``obs-smoke`` job gates on all of them):
+
+* ``waterfall`` — an MMPP2 bursty-load chaos run in EACH world (discrete-
+  event sim and FakeClock live runtime) with the tracer on; the full span
+  log is exported as a Chrome ``trace_event`` JSON (load it in
+  chrome://tracing or https://ui.perfetto.dev) plus a flat per-request
+  CSV with the queue-wait / service / retry-overhead breakdown.
+* ``identity`` — the same run with the tracer off must be byte-identical
+  to the instrumented build's untraced path: dispatch, retry, and fault
+  logs (live) and the summary dict (sim) are compared across a traced and
+  an untraced run of the same seed. Any divergence means the tracing seam
+  leaked into control flow.
+* ``overhead`` — tracing-on cost on the scalar proxy decision loop
+  (minimum over base/traced/base sandwich trials — same estimator as
+  ``bench_proxy_overhead``, see ``tracing_overhead``); the CI gate
+  asserts <= 10%.
+* ``flightrec`` — a forced outage (crash_prob=1.0 through the breaker)
+  must produce a parseable flight-recorder dump with a breaker_open
+  reason and a non-empty event ring.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict, List
+
+from benchmarks.common import OUT_DIR, write_csv
+
+#: Where the waterfall artifacts and flight-recorder dumps land.
+OBS_DIR = os.path.join(OUT_DIR, "obs")
+
+
+def _obs_path(name: str) -> str:
+    os.makedirs(OBS_DIR, exist_ok=True)
+    return os.path.join(OBS_DIR, name)
+
+
+def _mmpp(duration: float, rate: float):
+    from repro.simulation.arrivals import MMPP2
+
+    # bursty 2-state load: quiet floor at 20% of the target rate, bursts
+    # at 180%, sojourns short enough that a 45 s quick run sees several
+    return MMPP2(rate_lo=0.2 * rate, rate_hi=1.8 * rate,
+                 mean_lo=8.0, mean_hi=4.0, duration=duration)
+
+
+# ---------------------------------------------------------------- sim world
+def _sim_run(duration: float, tracer=None, recorder=None):
+    from repro.core import SLAConfig
+    from repro.serverless.latency import get_workload
+    from repro.serverless.platform import PlatformConfig
+    from repro.simulation.simulator import Simulator
+
+    workload = get_workload("pytorch-fashion-mnist")
+    sim = Simulator(
+        policy="mlproxy",
+        sla=SLAConfig(slo_target=0.5),
+        workload=workload,
+        arrivals=_mmpp(duration, rate=25.0),
+        platform_config=PlatformConfig(
+            failure_prob_per_batch=0.05,
+            straggler_prob=0.05,
+            straggler_mult=4.0,
+            hedge_factor=3.0,
+        ),
+        duration=duration,
+        drain_grace=120.0,
+        seed=11,
+        tracer=tracer,
+        recorder=recorder,
+    )
+    result = sim.run()
+    sim.platform.assert_conserved(require_drained=True)
+    return result
+
+
+# --------------------------------------------------------------- live world
+def _live_run(duration: float, tracer=None, recorder=None, *,
+              crash_prob: float = 0.15):
+    from experiments.scenarios import (
+        LIVE_SCENARIOS,
+        run_live_scenario,
+    )
+    from repro.runtime import FaultConfig
+
+    sc = dataclasses.replace(
+        LIVE_SCENARIOS["live-crash-storm"],
+        faults=FaultConfig(crash_prob=crash_prob, crash_latency=0.01),
+        duration=duration,
+    )
+    return run_live_scenario(sc, "mlproxy", faults=True,
+                             tracer=tracer, recorder=recorder)
+
+
+def _waterfall_row(world: str, tracer) -> Dict:
+    from repro.obs import (
+        build_batch_spans,
+        build_request_spans,
+        write_chrome_trace,
+        write_request_csv,
+    )
+
+    events = tracer.events()
+    trace_path = _obs_path(f"waterfall_{world}.trace.json")
+    csv_path = _obs_path(f"waterfall_{world}.requests.csv")
+    write_chrome_trace(trace_path, events)
+    write_request_csv(csv_path, events)
+    spans = build_request_spans(events)
+    return {
+        "kind": "waterfall",
+        "world": world,
+        "events": len(events),
+        "requests": len(spans),
+        "batches": len(build_batch_spans(events)),
+        "completed_spans": sum(1 for s in spans
+                               if s["outcome"] == "completed"),
+        "dropped": tracer.dropped,
+        "trace_json": os.path.relpath(trace_path, OUT_DIR),
+        "request_csv": os.path.relpath(csv_path, OUT_DIR),
+    }
+
+
+def run(quick: bool = False) -> List[Dict]:
+    from repro.obs import FlightRecorder, Tracer
+
+    sim_dur = 60.0 if quick else 300.0
+    live_dur = 30.0 if quick else 90.0
+    rows: List[Dict] = []
+
+    # -------- waterfalls: MMPP2 chaos run, tracer on, both worlds
+    sim_tracer = Tracer()
+    sim_traced = _sim_run(sim_dur, tracer=sim_tracer)
+    rows.append(_waterfall_row("sim", sim_tracer))
+
+    live_tracer = Tracer()
+    live_traced = _live_run(live_dur, tracer=live_tracer)
+    rows.append(_waterfall_row("live", live_tracer))
+
+    # -------- identity: tracer off must not change a single decision
+    sim_plain = _sim_run(sim_dur)
+    live_plain = _live_run(live_dur)
+    sim_identical = sim_plain.summary == sim_traced.summary
+    live_identical = (
+        live_plain.dispatch_log == live_traced.dispatch_log
+        and live_plain.retry_log == live_traced.retry_log
+        and live_plain.fault_log == live_traced.fault_log
+        and live_plain.summary == live_traced.summary
+    )
+    rows.append({"kind": "identity", "world": "sim",
+                 "identical": sim_identical})
+    rows.append({"kind": "identity", "world": "live",
+                 "identical": live_identical})
+
+    # -------- overhead: tracing-on cost of the scalar decision loop
+    from benchmarks.bench_proxy_overhead import tracing_overhead
+
+    n = 20_000 if quick else 50_000
+    base, traced, overhead_pct = tracing_overhead(n)
+    rows.append({
+        "kind": "overhead",
+        "world": "core",
+        "base_per_s": round(base),
+        "traced_per_s": round(traced),
+        "overhead_pct": round(overhead_pct, 2),
+    })
+
+    # -------- flight recorder: a forced outage must leave a postmortem
+    recorder = FlightRecorder(out_dir=OBS_DIR)
+    _live_run(15.0 if quick else 30.0, tracer=None, recorder=recorder,
+              crash_prob=1.0)
+    parseable = False
+    dump_path = ""
+    if recorder.dumps:
+        dump_path = recorder.dumps[-1]
+        with open(dump_path) as f:
+            doc = json.load(f)
+        parseable = (bool(doc.get("reason"))
+                     and isinstance(doc.get("events"), list)
+                     and len(doc["events"]) > 0)
+    rows.append({
+        "kind": "flightrec",
+        "world": "live",
+        "dumps": len(recorder.dumps),
+        "parseable": parseable,
+        "dump_path": (os.path.relpath(dump_path, OUT_DIR)
+                      if dump_path else ""),
+    })
+
+    write_csv("bench_obs.csv", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run(quick=True):
+        print(r)

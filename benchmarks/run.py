@@ -73,6 +73,17 @@ BENCHES = {
     "deadlines": (
         "bench_deadlines",
         lambda rows: sum(r["violations"] for r in rows)),
+    # observability plane: span waterfalls (both worlds), tracing-off
+    # identity, tracing-on overhead, flight-recorder postmortem; derived =
+    # tracing overhead % when every identity/flightrec gate passes, else -1
+    "obs": (
+        "bench_obs",
+        lambda rows: (
+            next(r["overhead_pct"] for r in rows if r["kind"] == "overhead")
+            if (all(r["identical"] for r in rows if r["kind"] == "identity")
+                and all(r["parseable"] for r in rows
+                        if r["kind"] == "flightrec"))
+            else -1.0)),
     # JAX data plane: fused decode loop vs per-token reference + packing
     # cost at equal SLA; derived = fused speedup on the best
     # decode-dominated config (0 if ANY bucket's outputs diverge from the

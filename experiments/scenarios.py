@@ -212,11 +212,15 @@ def run_scenario(
     faults: bool = True,
     quick: bool = False,
     seed: Optional[int] = None,
+    tracer=None,
+    recorder=None,
 ) -> Tuple[SimResult, dict]:
     """Run one policy through one scenario and enforce conservation.
 
     Returns ``(SimResult, conservation_dict)``. Raises ``AssertionError``
     if any submitted batch is lost, duplicated, or left undrained.
+    ``tracer``/``recorder`` thread the optional observability plane
+    (:mod:`repro.obs`) through the simulator.
     """
     if isinstance(scenario, str):
         scenario = SCENARIOS[scenario]
@@ -241,6 +245,8 @@ def run_scenario(
         duration=duration,
         drain_grace=scenario.drain_grace,
         seed=scenario.seed if seed is None else seed,
+        tracer=tracer,
+        recorder=recorder,
     )
     result = sim.run()
     conservation = sim.platform.assert_conserved(require_drained=True)
@@ -355,6 +361,8 @@ def run_live_scenario(
     seed: Optional[int] = None,
     runtime: Optional[RuntimeConfig] = None,
     bare: bool = False,
+    tracer=None,
+    recorder=None,
 ) -> LiveScenarioResult:
     """Run one policy through one live fault regime and enforce the
     extended conservation invariant at drain.
@@ -385,6 +393,8 @@ def run_live_scenario(
     server = AsyncProxyServer(
         clock=clock,
         config=runtime if runtime is not None else scenario.runtime,
+        tracer=tracer,
+        recorder=recorder,
     )
     # arrivals/service streams mirror run_replay's named split; the fault
     # stream is FaultyTarget's own third SeedSequence child
@@ -398,7 +408,7 @@ def run_live_scenario(
             raise ValueError("bare=True cannot inject faults")
         target = inner
     else:
-        target = FaultyTarget(inner, clock, fault_cfg)
+        target = FaultyTarget(inner, clock, fault_cfg, tracer=tracer)
     sla = SLAConfig(slo_target=ms(scenario.slo_ms),
                     deadline_factor=scenario.deadline_factor)
     server.add_endpoint("ep", sla=sla, target=target, policy=policy,

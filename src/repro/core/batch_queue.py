@@ -21,11 +21,16 @@ is testable without inheritance.
 """
 from __future__ import annotations
 
-from typing import Callable, List, Optional, Protocol, runtime_checkable
+from typing import TYPE_CHECKING, Callable, List, Optional, Protocol, \
+    runtime_checkable
 
 from repro.core.config import bucket_of
 from repro.core.monitor import SmartMonitor
 from repro.core.request import Batch, Request
+
+if TYPE_CHECKING:  # imported lazily so the core stays obs-optional
+    from repro.obs.metrics import MetricsRegistry
+    from repro.obs.trace import Tracer
 
 DispatchFn = Callable[[Batch], None]
 #: Called with (expired_requests, now) whenever the expiry sweep evicts
@@ -113,11 +118,16 @@ class BatchQueue:
         monitor: Optional[SmartMonitor] = None,
         bucketing: Optional[str] = None,
         expire_fn: Optional[ExpireFn] = None,
+        tracer: Optional["Tracer"] = None,
     ) -> None:
         self.dispatch_fn = dispatch_fn
         self.monitor = monitor
         self.bucketing = bucketing
         self.expire_fn = expire_fn
+        # Lifecycle span tracer (repro.obs.trace). None (the default)
+        # means every emission site below is a single attribute check —
+        # tracing off must cost nothing and perturb nothing.
+        self.tracer = tracer
         self._queue: List[Request] = []
         self.first_arrival: Optional[float] = None
         self.next_deadline: Optional[float] = None
@@ -125,6 +135,8 @@ class BatchQueue:
         self.dispatched_requests = 0
         self.expired_requests = 0
         self.shed_requests = 0
+        # Deepest the queue has ever been (admission-time high-water mark).
+        self.queue_depth_hwm = 0
         # Deadline bookkeeping for the hot path: how many queued requests
         # carry a deadline, and the earliest of them. Deadline-free
         # workloads (the default) pay one integer check per sweep; with
@@ -146,6 +158,14 @@ class BatchQueue:
         if not self._queue:
             self.first_arrival = now
         self._queue.append(request)
+        if len(self._queue) > self.queue_depth_hwm:
+            self.queue_depth_hwm = len(self._queue)
+        # Deliberately no span event here: a per-arrival emission would
+        # dominate the tracing-on overhead budget, and the queue-entry
+        # instant is recoverable — the "batched"/"expired"/"shed" event
+        # that resolves this request carries ``arrival_time`` in its
+        # value field, so exporters reconstruct the queue-wait span
+        # without a hot-path event.
         if request.deadline is not None:
             self._deadline_count += 1
             if (self._min_deadline is None
@@ -184,6 +204,10 @@ class BatchQueue:
         self.expired_requests += len(expired)
         for r in expired:
             r.timed_out = True
+        if self.tracer is not None:
+            for r in expired:
+                self.tracer.emit(now, "expired", r.endpoint or "",
+                                 r.req_id, -1, 0, r.arrival_time)
         if self._queue:
             # FIFO order: the head of the surviving queue is the oldest;
             # re-anchor FRT on its arrival instant.
@@ -209,7 +233,8 @@ class BatchQueue:
         shedding is an admission-control decision, not a deadline expiry
         (the two are distinct ledger classes).
         """
-        del now  # slack ordering reduces to deadline ordering (same `now`)
+        # slack ordering reduces to deadline ordering (same `now`); `now`
+        # is only used to timestamp shed span events
         excess = len(self._queue) - max(0, keep)
         if excess <= 0:
             return []
@@ -225,6 +250,10 @@ class BatchQueue:
         self._queue = [r for i, r in enumerate(self._queue)
                        if i not in victims]
         self.shed_requests += len(evicted)
+        if self.tracer is not None:
+            for r in evicted:
+                self.tracer.emit(now, "shed", r.endpoint or "",
+                                 r.req_id, -1, 0, r.arrival_time)
         deadlines = [r.deadline for r in self._queue if r.deadline is not None]
         self._deadline_count = len(deadlines)
         self._min_deadline = min(deadlines, default=None)
@@ -294,6 +323,30 @@ class BatchQueue:
         if self.monitor is not None:
             self.monitor.record_dispatch(batch.size, cause,
                                          effective_size=batch.effective_size)
+        tracer = self.tracer
+        if tracer is not None:
+            bid = batch.trace_id = tracer.next_batch_id()
+            reqs = batch.requests
+            ep = reqs[0].endpoint or "" if reqs else ""
+            # inlined tracer.emit (see Tracer docstring): this is the
+            # hottest emission site on the decision path. Membership is
+            # packed columnar — ONE "batched" event per batch whose req
+            # slot holds the member-id tuple and whose value slot holds
+            # the matching arrival-time tuple — because per-member
+            # events are what blow the ≤10% tracing-on overhead budget:
+            # the retained ring allocations, not the emit calls, are the
+            # measured cost. The ring evicts oldest-first on its own
+            # (deque maxlen); drops are accounted up front, which is
+            # exactly what per-event checks would have counted.
+            buf = tracer.buf
+            overflow = len(buf) + 2 - tracer.capacity
+            if overflow > 0:
+                tracer.dropped += overflow
+            buf.append((now, "dispatched", ep, -1, bid, batch.size, 0.0,
+                        cause))
+            buf.append((now, "batched", ep,
+                        tuple([r.req_id for r in reqs]), bid, batch.size,
+                        tuple([r.arrival_time for r in reqs]), ""))
         self.dispatch_fn(batch)
         return batch
 
@@ -301,6 +354,54 @@ class BatchQueue:
     def avg_batch_size(self) -> float:
         return (self.dispatched_requests / self.dispatched_batches
                 if self.dispatched_batches else 0.0)
+
+    def stats(self, monitor: SmartMonitor, now: float, *,
+              max_bs: int, max_bs_raw: float) -> dict:
+        """The one canonical per-policy stats dict.
+
+        Every policy's ``stats()`` delegates here, so the key set cannot
+        drift between MLProxy and the baselines (regression-tested in
+        the stats-parity tests)."""
+        burn = monitor.burn.rates(now)
+        return {
+            "max_bs": max_bs,
+            "max_bs_raw": max_bs_raw,
+            "queue_len": self.queue_len,
+            "queue_depth_hwm": self.queue_depth_hwm,
+            "dispatched_batches": self.dispatched_batches,
+            "dispatched_requests": self.dispatched_requests,
+            "avg_batch_size": self.avg_batch_size,
+            "expired": self.expired_requests,
+            "shed": self.shed_requests,
+            "e2e_p": monitor.e2e_percentile(now),
+            "violation_rate": monitor.violation_rate(),
+            "timeout_ratio": monitor.timeout_ratio(),
+            "upstream_batches": monitor.lifetime_upstream_batches,
+            "upstream_attempts": monitor.lifetime_upstream_attempts,
+            "retried_batches": monitor.lifetime_retried_batches,
+            "retry_rate": monitor.retry_rate(),
+            "failed_attempts": monitor.lifetime_failed_attempts,
+            "failure_rate": monitor.failure_rate(),
+            "dispatched_slots": monitor.lifetime_dispatched_slots,
+            "padded_slots": monitor.lifetime_padded_slots,
+            "padding_waste": monitor.padding_waste(),
+            "burn_rate_fast": burn["burn_rate_fast"],
+            "burn_rate_slow": burn["burn_rate_slow"],
+        }
+
+    # -------------------------------------------------------------- metrics
+    def register_metrics(self, registry: "MetricsRegistry",
+                         prefix: str = "queue") -> None:
+        """Bind this queue's ledger counters into a MetricsRegistry."""
+        registry.bind(f"{prefix}.dispatched_batches",
+                      lambda: self.dispatched_batches)
+        registry.bind(f"{prefix}.dispatched_requests",
+                      lambda: self.dispatched_requests)
+        registry.bind(f"{prefix}.expired_requests",
+                      lambda: self.expired_requests)
+        registry.bind(f"{prefix}.shed_requests", lambda: self.shed_requests)
+        registry.bind(f"{prefix}.depth", lambda: len(self._queue))
+        registry.bind(f"{prefix}.depth_hwm", lambda: self.queue_depth_hwm)
 
     # ------------------------------------------------------ fault tolerance
     def snapshot(self) -> dict:
@@ -312,6 +413,7 @@ class BatchQueue:
             "dispatched_requests": self.dispatched_requests,
             "expired_requests": self.expired_requests,
             "shed_requests": self.shed_requests,
+            "queue_depth_hwm": self.queue_depth_hwm,
         }
 
     def restore(self, state: dict) -> None:
@@ -321,9 +423,11 @@ class BatchQueue:
         self.dispatched_batches = state["dispatched_batches"]
         self.dispatched_requests = state["dispatched_requests"]
         # pre-deadline snapshots carry no expiry state; pre-brownout
-        # snapshots carry no shed accounting
+        # snapshots carry no shed accounting; pre-obs snapshots carry no
+        # high-water mark
         self.expired_requests = state.get("expired_requests", 0)
         self.shed_requests = state.get("shed_requests", 0)
+        self.queue_depth_hwm = state.get("queue_depth_hwm", len(self._queue))
         deadlines = [r.deadline for r in self._queue if r.deadline is not None]
         self._deadline_count = len(deadlines)
         self._min_deadline = min(deadlines, default=None)

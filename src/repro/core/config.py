@@ -92,6 +92,11 @@ class MonitorConfig:
         full window horizon, driving DTO ≤ 0 and disabling batching right
         when batching would absorb the burst. 0 disables (paper-faithful
         raw percentile).
+      burn_fast_window / burn_slow_window: window lengths (seconds) of the
+        SLO burn-rate meter fed by every end-to-end completion (see
+        :mod:`repro.obs.burnrate`). The fast window catches sharp
+        regressions, the slow window confirms them; ``burn_rate_fast`` /
+        ``burn_rate_slow`` surface through every stats path.
     """
 
     window_size: int = 256
@@ -105,12 +110,18 @@ class MonitorConfig:
     min_samples: int = 3
     optimistic_default: float = 0.0
     outlier_mult: float = 5.0
+    burn_fast_window: float = 60.0
+    burn_slow_window: float = 600.0
 
     def __post_init__(self) -> None:
         if self.estimator not in ("window", "regression", "p2"):
             raise ValueError(f"unknown estimator {self.estimator!r}")
         if self.window_size < 8:
             raise ValueError("window_size must be >= 8")
+        if not 0 < self.burn_fast_window <= self.burn_slow_window:
+            raise ValueError(
+                "need 0 < burn_fast_window <= burn_slow_window, got "
+                f"{self.burn_fast_window}/{self.burn_slow_window}")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -43,10 +43,17 @@ class Endpoint:
 
 
 class ProxyFrontend:
-    """Routes requests across N endpoints, each with its own policy + SLA."""
+    """Routes requests across N endpoints, each with its own policy + SLA.
 
-    def __init__(self) -> None:
+    ``tracer`` (optional :class:`repro.obs.trace.Tracer`) turns on
+    lifecycle span emission: the frontend stamps ``admitted`` at
+    admission and hands the tracer down to every endpoint's policy
+    queue. None (the default) costs one attribute check per arrival.
+    """
+
+    def __init__(self, tracer=None) -> None:
         self._endpoints: Dict[str, Endpoint] = {}
+        self._tracer = tracer
 
     # ------------------------------------------------------------- topology
     def add_endpoint(
@@ -81,7 +88,7 @@ class ProxyFrontend:
             _fn(batch)
 
         pol = make_policy(policy, sla, stamped_dispatch, expire_fn=expire_fn,
-                          **(policy_kwargs or {}))
+                          tracer=self._tracer, **(policy_kwargs or {}))
         ep = Endpoint(name=name, policy=pol, sla=sla, dispatch_fn=dispatch_fn)
         self._endpoints[name] = ep
         return ep
@@ -129,6 +136,8 @@ class ProxyFrontend:
         request.endpoint = ep.name
         if request.deadline is None and ep.deadline_budget is not None:
             request.deadline = now + ep.deadline_budget
+        if self._tracer is not None:
+            self._tracer.emit(now, "admitted", ep.name, request.req_id)
         ep.policy.on_request(request, now)
 
     def on_response(self, batch: Batch, upstream_latency: float, now: float) -> None:
@@ -172,6 +181,11 @@ class ProxyFrontend:
             "aggregate": {
                 "n_endpoints": len(per),
                 "queue_len": sum(s["queue_len"] for s in per.values()),
+                # deepest any single endpoint queue has been (max, not sum:
+                # the HWMs of different endpoints happen at different times)
+                "queue_depth_hwm": max(
+                    (s.get("queue_depth_hwm", 0) for s in per.values()),
+                    default=0),
                 "dispatched_batches": agg_batches,
                 "dispatched_requests": agg_requests,
                 # deadline-expired requests evicted before dispatch
@@ -179,6 +193,12 @@ class ProxyFrontend:
                 # brownout-shed requests evicted at admission pressure
                 "shed": sum(s.get("shed", 0) for s in per.values()),
                 "avg_batch_size": agg_requests / agg_batches if agg_batches else 0.0,
+                # upstream completion/attempt ledger (drift-audit parity
+                # with the per-endpoint stats surface)
+                "upstream_batches": agg_upstream,
+                "upstream_attempts": agg_attempts,
+                "dispatched_slots": agg_slots,
+                "padded_slots": agg_padded,
                 # platform-side crash retries / hedges, observed through
                 # Batch.attempts on the completion path; rate is over
                 # *completed* upstream batches, same as per-endpoint stats
@@ -192,6 +212,14 @@ class ProxyFrontend:
                 # bucket slots burned on padding, over all dispatched slots
                 # (0.0 on unbucketed endpoints: every slot is a request)
                 "padding_waste": agg_padded / agg_slots if agg_slots else 0.0,
+                # worst-endpoint SLO burn (max, not mean: the alerting
+                # question is "is ANY endpoint burning its budget")
+                "burn_rate_fast": max(
+                    (s.get("burn_rate_fast", 0.0) for s in per.values()),
+                    default=0.0),
+                "burn_rate_slow": max(
+                    (s.get("burn_rate_slow", 0.0) for s in per.values()),
+                    default=0.0),
             },
         }
 

@@ -20,6 +20,8 @@ import math
 from typing import Deque, Dict, List, Optional, Tuple
 
 from repro.core.config import MonitorConfig, SLAConfig
+from repro.obs.burnrate import BurnRateMeter
+from repro.obs.metrics import MetricsRegistry
 
 
 class LatencyWindow:
@@ -251,23 +253,90 @@ class SmartMonitor:
         # dispatch-cause counters for the *current* optimizer interval
         self._timeout_dispatches = 0
         self._total_dispatches = 0
-        # lifetime counters (metrics/reporting)
-        self.lifetime_dispatches = 0
-        self.lifetime_requests = 0
-        self.lifetime_violations = 0
+        # Lifetime counters, migrated onto typed obs Counters in an owned
+        # MetricsRegistry. The `lifetime_*` read surface is preserved as
+        # properties below; snapshot/restore keeps the historical tuple
+        # format so old snapshots load unchanged.
+        self.metrics = MetricsRegistry()
+        c = self.metrics.counter
+        self._c_dispatches = c("lifetime_dispatches")
+        self._c_requests = c("lifetime_requests")
+        self._c_violations = c("lifetime_violations")
         # retry-aware upstream accounting (platform-side crash retries and
         # hedges, reported via Batch.attempts)
-        self.lifetime_upstream_batches = 0
-        self.lifetime_upstream_attempts = 0
-        self.lifetime_retried_batches = 0
+        self._c_upstream_batches = c("lifetime_upstream_batches")
+        self._c_upstream_attempts = c("lifetime_upstream_attempts")
+        self._c_retried_batches = c("lifetime_retried_batches")
         # failed dispatch attempts (target raised / injected fault); they
         # never enter the latency windows — there is no completion latency
         # to learn from — but they feed failure_rate()
-        self.lifetime_failed_attempts = 0
+        self._c_failed_attempts = c("lifetime_failed_attempts")
         # padding accounting on bucketed backends: a dispatch of n requests
         # into a bucket of size b occupies b slots, b - n of them padding
-        self.lifetime_dispatched_slots = 0
-        self.lifetime_padded_slots = 0
+        self._c_dispatched_slots = c("lifetime_dispatched_slots")
+        self._c_padded_slots = c("lifetime_padded_slots")
+        # SLO burn-rate meter fed by every end-to-end completion: the
+        # windowed violation rate over the SLA's error budget, on a fast
+        # and a slow window (SRE-style multi-window burn alerting).
+        self.burn = BurnRateMeter.for_percentile(
+            sla.percentile,
+            fast_window=config.burn_fast_window,
+            slow_window=config.burn_slow_window)
+
+    # ------------------------------------------------- lifetime read surface
+    @property
+    def lifetime_dispatches(self) -> int:
+        return self._c_dispatches.value
+
+    @property
+    def lifetime_requests(self) -> int:
+        return self._c_requests.value
+
+    @property
+    def lifetime_violations(self) -> int:
+        return self._c_violations.value
+
+    @property
+    def lifetime_upstream_batches(self) -> int:
+        return self._c_upstream_batches.value
+
+    @property
+    def lifetime_upstream_attempts(self) -> int:
+        return self._c_upstream_attempts.value
+
+    @property
+    def lifetime_retried_batches(self) -> int:
+        return self._c_retried_batches.value
+
+    @property
+    def lifetime_failed_attempts(self) -> int:
+        return self._c_failed_attempts.value
+
+    @property
+    def lifetime_dispatched_slots(self) -> int:
+        return self._c_dispatched_slots.value
+
+    @property
+    def lifetime_padded_slots(self) -> int:
+        return self._c_padded_slots.value
+
+    def register_metrics(self, registry: MetricsRegistry,
+                         prefix: str = "monitor") -> None:
+        """Bind this monitor's counters into an external registry.
+
+        Aggregators (the live server, sims) call this with a per-endpoint
+        prefix so one registry exposes every endpoint's monitor."""
+        for name in self.metrics.names():
+            counter = self.metrics.counter(name)
+            registry.bind(f"{prefix}.{name}",
+                          lambda c=counter: c.value)
+        registry.bind(f"{prefix}.interval_timeout_dispatches",
+                      lambda: self._timeout_dispatches)
+        registry.bind(f"{prefix}.interval_dispatches",
+                      lambda: self._total_dispatches)
+        registry.bind(f"{prefix}.burn_samples", lambda: self.burn.total)
+        registry.bind(f"{prefix}.burn_violations",
+                      lambda: self.burn.violations)
 
     # ---------------------------------------------------------------- record
     def record_upstream(self, batch_size: int, latency: float, now: float,
@@ -280,10 +349,10 @@ class SmartMonitor:
         """
         if batch_size <= 0:
             raise ValueError("batch_size must be >= 1")
-        self.lifetime_upstream_batches += 1
-        self.lifetime_upstream_attempts += max(1, attempts)
+        self._c_upstream_batches.inc()
+        self._c_upstream_attempts.inc(max(1, attempts))
         if attempts > 1:
-            self.lifetime_retried_batches += 1
+            self._c_retried_batches.inc()
         win = self._upstream.get(batch_size)
         if win is None:
             win = LatencyWindow(self.config.window_size, self.config.window_horizon)
@@ -306,14 +375,16 @@ class SmartMonitor:
         tracking).
         """
         del batch_size, now
-        self.lifetime_failed_attempts += 1
+        self._c_failed_attempts.inc()
 
     def record_e2e(self, latency: float, now: float) -> None:
         """Record one end-to-end (user-observed) response time."""
         self._e2e.add(now, latency)
-        self.lifetime_requests += 1
-        if latency > self.sla.slo_target:
-            self.lifetime_violations += 1
+        self._c_requests.inc()
+        violated = latency > self.sla.slo_target
+        if violated:
+            self._c_violations.inc()
+        self.burn.record(now, violated)
 
     def record_dispatch(self, batch_size: int, cause: str,
                         effective_size: Optional[int] = None) -> None:
@@ -324,12 +395,12 @@ class SmartMonitor:
         the gap feeds the padding-waste counters.
         """
         self._total_dispatches += 1
-        self.lifetime_dispatches += 1
+        self._c_dispatches.inc()
         if cause == "timeout":
             self._timeout_dispatches += 1
         eff = effective_size if effective_size is not None else batch_size
-        self.lifetime_dispatched_slots += eff
-        self.lifetime_padded_slots += max(0, eff - batch_size)
+        self._c_dispatched_slots.inc(eff)
+        self._c_padded_slots.inc(max(0, eff - batch_size))
 
     # -------------------------------------------------------------- estimate
     def upstream_percentile(self, batch_size: int, now: float) -> float:
@@ -461,6 +532,7 @@ class SmartMonitor:
                 self.lifetime_dispatched_slots,
                 self.lifetime_padded_slots,
             ),
+            "burn": self.burn.snapshot(),
         }
 
     def restore(self, state: dict) -> None:
@@ -471,19 +543,24 @@ class SmartMonitor:
         self._e2e = LatencyWindow.restore(state["e2e"])
         self._timeout_dispatches = state["timeout_dispatches"]
         self._total_dispatches = state["total_dispatches"]
+        # The historical tuple formats predate the typed-counter migration;
+        # they remain the canonical snapshot encoding so old snapshots load.
         (
-            self.lifetime_dispatches,
-            self.lifetime_requests,
-            self.lifetime_violations,
+            self._c_dispatches.value,
+            self._c_requests.value,
+            self._c_violations.value,
         ) = state["lifetime"]
         (
-            self.lifetime_upstream_batches,
-            self.lifetime_upstream_attempts,
-            self.lifetime_retried_batches,
+            self._c_upstream_batches.value,
+            self._c_upstream_attempts.value,
+            self._c_retried_batches.value,
         ) = state.get("lifetime_upstream", (0, 0, 0))
         # pre-fault-tolerance snapshots carry no failure accounting
-        self.lifetime_failed_attempts = state.get("lifetime_failed_attempts", 0)
+        self._c_failed_attempts.value = state.get("lifetime_failed_attempts", 0)
         (
-            self.lifetime_dispatched_slots,
-            self.lifetime_padded_slots,
+            self._c_dispatched_slots.value,
+            self._c_padded_slots.value,
         ) = state.get("lifetime_padding", (0, 0))
+        # pre-obs snapshots carry no burn-meter state (restore() with an
+        # empty dict resets the meter)
+        self.burn.restore(state.get("burn", {}))

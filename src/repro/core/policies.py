@@ -61,7 +61,8 @@ class BatchingPolicy:
                  monitor_config: Optional[MonitorConfig] = None,
                  bucketing=None,
                  expire_fn: Optional[ExpireFn] = None,
-                 pack_buckets: Optional[Sequence[int]] = None) -> None:
+                 pack_buckets: Optional[Sequence[int]] = None,
+                 tracer=None) -> None:
         self.sla = sla
         if pack_buckets is not None:
             pack_buckets = validate_buckets(pack_buckets, "pack_buckets")
@@ -70,7 +71,7 @@ class BatchingPolicy:
         self.pack_buckets = pack_buckets
         self.monitor = SmartMonitor(monitor_config or MonitorConfig(), sla)
         self.queue = BatchQueue(dispatch_fn, self.monitor, bucketing=bucketing,
-                                expire_fn=expire_fn)
+                                expire_fn=expire_fn, tracer=tracer)
 
     # -------- subclass interface ------------------------------------------
     def target_batch_size(self, now: float) -> int:
@@ -173,26 +174,11 @@ class BatchingPolicy:
         return self.target_batch_size(0.0)
 
     def stats(self, now: float) -> dict:
-        return {
-            "max_bs": self.target_batch_size(now),
-            "queue_len": self.queue.queue_len,
-            "dispatched_batches": self.queue.dispatched_batches,
-            "dispatched_requests": self.queue.dispatched_requests,
-            "avg_batch_size": self.queue.avg_batch_size,
-            "expired": self.queue.expired_requests,
-            "shed": self.queue.shed_requests,
-            "e2e_p": self.monitor.e2e_percentile(now),
-            "violation_rate": self.monitor.violation_rate(),
-            "timeout_ratio": self.monitor.timeout_ratio(),
-            "upstream_batches": self.monitor.lifetime_upstream_batches,
-            "retried_batches": self.monitor.lifetime_retried_batches,
-            "retry_rate": self.monitor.retry_rate(),
-            "failed_attempts": self.monitor.lifetime_failed_attempts,
-            "failure_rate": self.monitor.failure_rate(),
-            "dispatched_slots": self.monitor.lifetime_dispatched_slots,
-            "padded_slots": self.monitor.lifetime_padded_slots,
-            "padding_waste": self.monitor.padding_waste(),
-        }
+        # One canonical key set for every policy — see BatchQueue.stats.
+        # Baselines have no AIMD fractional state, so raw == effective.
+        target = self.target_batch_size(now)
+        return self.queue.stats(self.monitor, now,
+                                max_bs=target, max_bs_raw=float(target))
 
     def snapshot(self) -> dict:
         return {
@@ -326,21 +312,28 @@ class OracleStaticPolicy(BatchingPolicy):
 
 
 def make_policy(name: str, sla: SLAConfig, dispatch_fn,
-                expire_fn: Optional[ExpireFn] = None, **kwargs):
+                expire_fn: Optional[ExpireFn] = None, tracer=None, **kwargs):
     """Factory used by the simulator, the frontend, and benchmarks.
 
     ``expire_fn(requests, now)`` (optional) is invoked by the policy's
     queue whenever the expiry sweep evicts already-dead requests.
+    ``tracer`` (optional :class:`repro.obs.trace.Tracer`) turns on
+    lifecycle span emission in the policy's queue.
     """
     if name == "mlproxy":
         proxy_cfg = kwargs.pop("proxy_config", None) or ProxyConfig(sla=sla, **kwargs)
-        return MLProxy(proxy_cfg, dispatch_fn, expire_fn=expire_fn)
+        return MLProxy(proxy_cfg, dispatch_fn, expire_fn=expire_fn,
+                       tracer=tracer)
     if name == "passthrough":
-        return PassthroughPolicy(sla, dispatch_fn, expire_fn=expire_fn, **kwargs)
+        return PassthroughPolicy(sla, dispatch_fn, expire_fn=expire_fn,
+                                 tracer=tracer, **kwargs)
     if name == "static":
-        return StaticBatchPolicy(sla, dispatch_fn, expire_fn=expire_fn, **kwargs)
+        return StaticBatchPolicy(sla, dispatch_fn, expire_fn=expire_fn,
+                                 tracer=tracer, **kwargs)
     if name == "clipper":
-        return ClipperAIMDPolicy(sla, dispatch_fn, expire_fn=expire_fn, **kwargs)
+        return ClipperAIMDPolicy(sla, dispatch_fn, expire_fn=expire_fn,
+                                 tracer=tracer, **kwargs)
     if name == "oracle":
-        return OracleStaticPolicy(sla, dispatch_fn, expire_fn=expire_fn, **kwargs)
+        return OracleStaticPolicy(sla, dispatch_fn, expire_fn=expire_fn,
+                                  tracer=tracer, **kwargs)
     raise ValueError(f"unknown policy {name!r}")

@@ -36,7 +36,7 @@ class MLProxy:
     """Single-endpoint adaptive batching proxy (the paper's contribution)."""
 
     def __init__(self, config: ProxyConfig, dispatch_fn: Callable[[Batch], None],
-                 expire_fn: Optional[ExpireFn] = None) -> None:
+                 expire_fn: Optional[ExpireFn] = None, tracer=None) -> None:
         self.config = config
         self.monitor = SmartMonitor(config.monitor, config.sla)
         self.optimizer = AIMDBatchOptimizer(config.optimizer, config.sla, self.monitor)
@@ -46,6 +46,7 @@ class MLProxy:
             dispatch_fn=dispatch_fn,
             max_bs_fn=lambda: self.optimizer.max_bs,
             expire_fn=expire_fn,
+            tracer=tracer,
         )
         self._started = False
 
@@ -107,27 +108,11 @@ class MLProxy:
         return self.scheduler.queue_len
 
     def stats(self, now: float) -> dict:
-        return {
-            "max_bs": self.optimizer.max_bs,
-            "max_bs_raw": self.optimizer.max_bs_raw,
-            "queue_len": self.scheduler.queue_len,
-            "dispatched_batches": self.scheduler.dispatched_batches,
-            "dispatched_requests": self.scheduler.dispatched_requests,
-            "avg_batch_size": self.scheduler.queue.avg_batch_size,
-            "expired": self.scheduler.queue.expired_requests,
-            "shed": self.scheduler.queue.shed_requests,
-            "e2e_p": self.monitor.e2e_percentile(now),
-            "violation_rate": self.monitor.violation_rate(),
-            "timeout_ratio": self.monitor.timeout_ratio(),
-            "upstream_batches": self.monitor.lifetime_upstream_batches,
-            "retried_batches": self.monitor.lifetime_retried_batches,
-            "retry_rate": self.monitor.retry_rate(),
-            "failed_attempts": self.monitor.lifetime_failed_attempts,
-            "failure_rate": self.monitor.failure_rate(),
-            "dispatched_slots": self.monitor.lifetime_dispatched_slots,
-            "padded_slots": self.monitor.lifetime_padded_slots,
-            "padding_waste": self.monitor.padding_waste(),
-        }
+        # One canonical key set for every policy — see BatchQueue.stats.
+        return self.scheduler.queue.stats(
+            self.monitor, now,
+            max_bs=self.optimizer.max_bs,
+            max_bs_raw=self.optimizer.max_bs_raw)
 
     # ------------------------------------------------------ fault tolerance
     def snapshot(self) -> dict:

@@ -8,6 +8,22 @@ from typing import Any, List, Optional
 _req_counter = itertools.count()
 
 
+def _next_req_id() -> int:
+    return next(_req_counter)
+
+
+def reset_request_ids() -> None:
+    """Restart the process-global request-id sequence (test seam).
+
+    Request ids record allocation order, not randomness: without a reset,
+    two same-seed runs in one process draw disjoint id ranges, which is
+    the one thing standing between their span logs and byte-identity.
+    Never call this while requests from a previous run are still live.
+    """
+    global _req_counter
+    _req_counter = itertools.count()
+
+
 @dataclasses.dataclass(slots=True)
 class Request:
     """One inference request as seen by the proxy.
@@ -19,7 +35,7 @@ class Request:
 
     arrival_time: float
     payload: Any = None
-    req_id: int = dataclasses.field(default_factory=_req_counter.__next__)
+    req_id: int = dataclasses.field(default_factory=_next_req_id)
     # Routing key used by the multi-endpoint frontend (None on the
     # single-endpoint path).
     endpoint: Optional[str] = None
@@ -68,6 +84,10 @@ class Batch:
     # (crash retries + hedges) this batch took before it finished. The
     # monitor uses it for retry-aware upstream statistics.
     attempts: int = 1
+    # Span id stamped by a tracing BatchQueue at dispatch (-1 = untraced);
+    # correlates retry/hedge/terminal events in the drivers back to the
+    # ``dispatched`` event and its member ``batched`` events.
+    trace_id: int = -1
 
     @property
     def size(self) -> int:

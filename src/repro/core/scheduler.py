@@ -39,12 +39,13 @@ class QueueScheduler:
         dispatch_fn: DispatchFn,
         max_bs_fn: Callable[[], int],
         expire_fn: Optional[ExpireFn] = None,
+        tracer=None,
     ) -> None:
         self.config = config
         self.monitor = monitor
         self.max_bs_fn = max_bs_fn
         self.queue = BatchQueue(dispatch_fn, monitor, bucketing=config.bucketing,
-                                expire_fn=expire_fn)
+                                expire_fn=expire_fn, tracer=tracer)
 
     # ------------------------------------------------------------------ api
     @property

@@ -1,0 +1,58 @@
+"""Unified observability plane shared by the sim and live worlds.
+
+One instrumentation surface rides on the unmodified core:
+
+- :mod:`repro.obs.trace` — ring-buffered lifecycle span tracer
+  (``admitted → expired|shed|batched → dispatched →
+  (retry|hedge|breaker_wait)* → completed|timed_out|failed``), emitted
+  from hooks in ``BatchQueue``, ``ProxyFrontend``, ``AsyncProxyServer``,
+  ``ServerlessPlatform`` and ``FaultyTarget``.
+- :mod:`repro.obs.export` — exporters: Chrome ``trace_event`` JSON
+  (open in chrome://tracing or Perfetto) and a flat per-request CSV
+  with the queue-wait / service / retry-overhead breakdown.
+- :mod:`repro.obs.metrics` — typed ``Counter``/``Gauge``/``Histogram``
+  in a central ``MetricsRegistry``; existing hand-rolled ledger counters
+  bind into it via each component's ``register_metrics``.
+- :mod:`repro.obs.burnrate` — multi-window SLO burn-rate meters
+  (fast/slow burn a la SRE alerting).
+- :mod:`repro.obs.recorder` — bounded flight recorder that dumps a JSON
+  postmortem on conservation failure, drain timeout, or breaker-open.
+
+Everything is deterministic under ``FakeClock`` (no wall-clock reads,
+no RNG) and zero-cost when disabled: every emission site in the
+instrumented modules is guarded by ``if tracer is not None``.
+"""
+from repro.obs.burnrate import BurnRateMeter
+from repro.obs.export import (build_batch_spans, build_request_spans,
+                              chrome_trace, write_chrome_trace,
+                              write_request_csv)
+from repro.obs.metrics import Counter, Gauge, Histogram, MetricsRegistry
+from repro.obs.recorder import FlightRecorder
+from repro.obs.trace import (EV_BATCH, EV_DETAIL, EV_ENDPOINT, EV_KIND,
+                             EV_REQ, EV_SIZE, EV_T, EV_VALUE, SPAN_KINDS,
+                             Tracer, serialize_events)
+
+__all__ = [
+    "BurnRateMeter",
+    "Counter",
+    "EV_BATCH",
+    "EV_DETAIL",
+    "EV_ENDPOINT",
+    "EV_KIND",
+    "EV_REQ",
+    "EV_SIZE",
+    "EV_T",
+    "EV_VALUE",
+    "FlightRecorder",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "SPAN_KINDS",
+    "Tracer",
+    "build_batch_spans",
+    "build_request_spans",
+    "chrome_trace",
+    "serialize_events",
+    "write_chrome_trace",
+    "write_request_csv",
+]

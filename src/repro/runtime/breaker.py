@@ -178,6 +178,14 @@ class CircuitBreaker:
         return False
 
     # ----------------------------------------------------------------- stats
+    def register_metrics(self, registry, prefix: str = "breaker") -> None:
+        """Bind the lifetime transition counters into a MetricsRegistry."""
+        b = registry.bind
+        b(f"{prefix}.opened", lambda: self.opened)
+        b(f"{prefix}.reopened", lambda: self.reopened)
+        b(f"{prefix}.closed", lambda: self.closed)
+        b(f"{prefix}.transitions", lambda: len(self.transitions))
+
     def stats(self, now: float) -> dict:
         return {
             "state": self.state(now),

@@ -142,10 +142,12 @@ class FaultyTarget(DispatchTarget):
 
     def __init__(self, inner: DispatchTarget, clock: Clock,
                  config: FaultConfig,
-                 rng: Optional[np.random.Generator] = None) -> None:
+                 rng: Optional[np.random.Generator] = None,
+                 tracer=None) -> None:
         self.inner = inner
         self.clock = clock
         self.config = config
+        self.tracer = tracer
         self.rng = rng if rng is not None else fault_rng(config.seed)
         # mirror the inner target's shape contract so cap clamping and
         # bucket-aware packing behave identically through the wrapper
@@ -168,6 +170,15 @@ class FaultyTarget(DispatchTarget):
         #: (call index, clock time, kind) per dispatch attempt, including
         #: clean ones — the byte-identity artifact of the determinism tests.
         self.fault_log: List[Tuple[int, float, str]] = []
+
+    # --------------------------------------------------------------- metrics
+    def register_metrics(self, registry, prefix: str = "chaos") -> None:
+        """Bind the injection ledger into a MetricsRegistry."""
+        b = registry.bind
+        b(f"{prefix}.calls", lambda: self.calls)
+        for kind in (*FAULT_KINDS, "ok"):
+            b(f"{prefix}.injected.{kind}",
+              lambda k=kind: self.injected[k])
 
     # --------------------------------------------------------------- helpers
     def _draw(self) -> str:
@@ -193,7 +204,12 @@ class FaultyTarget(DispatchTarget):
         self.calls += 1
         kind = self._draw()
         self.injected[kind] += 1
-        self.fault_log.append((idx, self.clock.now(), kind))
+        now = self.clock.now()
+        self.fault_log.append((idx, now, kind))
+        if self.tracer is not None:
+            self.tracer.emit(now, "attempt", batch.endpoint,
+                             batch=batch.trace_id, size=batch.size,
+                             detail=kind)
         cfg = self.config
         if kind == "crash":
             await self.clock.sleep(cfg.crash_latency)

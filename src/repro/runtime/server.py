@@ -65,6 +65,7 @@ import numpy as np
 
 from repro.core.config import SLAConfig
 from repro.core.frontend import ProxyFrontend
+from repro.obs.metrics import MetricsRegistry
 from repro.core.request import Batch, Request
 from repro.runtime.breaker import CLOSED, BreakerConfig, CircuitBreaker
 from repro.runtime.clock import Clock, WallClock
@@ -279,10 +280,18 @@ class AsyncProxyServer:
     """Asyncio reverse proxy running the shared batching core live."""
 
     def __init__(self, clock: Optional[Clock] = None,
-                 config: Optional[RuntimeConfig] = None) -> None:
+                 config: Optional[RuntimeConfig] = None,
+                 tracer=None, recorder=None) -> None:
         self.clock = clock if clock is not None else WallClock()
         self.config = config or RuntimeConfig()
-        self.frontend = ProxyFrontend()
+        # Observability plane (both optional and zero-cost when None):
+        # ``tracer`` (repro.obs.trace.Tracer) records lifecycle spans,
+        # ``recorder`` (repro.obs.recorder.FlightRecorder) keeps the
+        # bounded postmortem ring dumped on conservation failure, drain
+        # timeout, or breaker-open.
+        self.tracer = tracer
+        self.recorder = recorder
+        self.frontend = ProxyFrontend(tracer=tracer)
         self._targets: Dict[str, DispatchTarget] = {}
         self._target_takes_deadline: Dict[str, bool] = {}
 
@@ -312,6 +321,11 @@ class AsyncProxyServer:
         # proxy-tier straggler hedging
         self.hedged_batches = 0  # duplicates issued
         self.hedge_wins = 0      # duplicates that finished first
+        self._hedged_by_ep: Dict[str, int] = {}
+        self._hedge_wins_by_ep: Dict[str, int] = {}
+        # per-endpoint admissions (the sim surfaces submitted_requests per
+        # endpoint; key-parity requires the live summary to match)
+        self._submitted_by_ep: Dict[str, int] = {}
 
         # proxy-tier retries + circuit breaking (fault tolerance)
         self.retried_batches = 0    # batches that needed >= 1 proxy retry
@@ -341,10 +355,47 @@ class AsyncProxyServer:
         self.bucket_samples: Dict[str, Dict[int, List[float]]] = {}
         self.completions: Dict[str, CompletionLog] = {}
 
+        # event-loop work counter: one tick per handled event (admission,
+        # dispatch, expiry sweep, batch resolution, timer pass) — the live
+        # mirror of the simulator drivers' ``events_processed``
+        self.events_processed = 0
+
         self._wake = asyncio.Event()
         self._accepting = True
         self._running = False
         self._timer_task: Optional[asyncio.Task] = None
+
+        # Central metrics surface: every hand-rolled ledger counter above
+        # is bound (read-only, zero hot-path cost) into one registry.
+        self.metrics = MetricsRegistry()
+        self.register_metrics(self.metrics)
+
+    def register_metrics(self, registry: "MetricsRegistry",
+                         prefix: str = "server") -> None:
+        """Bind the runtime ledger into a MetricsRegistry.
+
+        Enforced by the ``unregistered-counter`` reprolint rule: every
+        monotonic counter this class increments must be bound here (or
+        carry an explicit suppression)."""
+        b = registry.bind
+        b(f"{prefix}.submitted", lambda: self.submitted)
+        b(f"{prefix}.completed", lambda: self.completed)
+        b(f"{prefix}.rejected", lambda: self.rejected)
+        b(f"{prefix}.shed", lambda: self.shed)
+        b(f"{prefix}.timed_out", lambda: self.timed_out)
+        b(f"{prefix}.failed", lambda: self.failed)
+        b(f"{prefix}.drain_cancelled", lambda: self.drain_cancelled)
+        b(f"{prefix}.target_failures", lambda: self.target_failures)
+        b(f"{prefix}.hedged_batches", lambda: self.hedged_batches)
+        b(f"{prefix}.hedge_wins", lambda: self.hedge_wins)
+        b(f"{prefix}.retried_batches", lambda: self.retried_batches)
+        b(f"{prefix}.retry_exhausted", lambda: self.retry_exhausted)
+        b(f"{prefix}.faulted_batches", lambda: self.faulted_batches)
+        b(f"{prefix}.recovered_batches", lambda: self.recovered_batches)
+        b(f"{prefix}.duplicate_completions",
+          lambda: self.duplicate_completions)
+        b(f"{prefix}.inflight_batches", lambda: self.inflight_batches)
+        b(f"{prefix}.events_processed", lambda: self.events_processed)
 
     # ------------------------------------------------------------- topology
     def add_endpoint(self, name: str, *, sla: SLAConfig,
@@ -393,8 +444,13 @@ class AsyncProxyServer:
         self._target_takes_deadline[name] = takes_deadline
         self.completions[name] = CompletionLog()
         self.bucket_samples[name] = {}
+        self._submitted_by_ep[name] = 0
+        self._hedged_by_ep[name] = 0
+        self._hedge_wins_by_ep[name] = 0
         if self.config.breaker is not None:
             self._breakers[name] = CircuitBreaker(self.config.breaker)
+            self._breakers[name].register_metrics(
+                self.metrics, prefix=f"endpoint.{name}.breaker")
 
         def dispatch(batch: Batch, _name: str = name) -> None:
             self._on_dispatch(_name, batch)
@@ -403,9 +459,18 @@ class AsyncProxyServer:
                    _name: str = name) -> None:
             self._on_expired(_name, requests, now)
 
-        self.frontend.add_endpoint(name, sla=sla, dispatch_fn=dispatch,
-                                   policy=policy, policy_kwargs=policy_kwargs,
-                                   expire_fn=expire)
+        ep = self.frontend.add_endpoint(
+            name, sla=sla, dispatch_fn=dispatch,
+            policy=policy, policy_kwargs=policy_kwargs, expire_fn=expire)
+        monitor = getattr(ep.policy, "monitor", None)
+        if monitor is not None:
+            monitor.register_metrics(self.metrics,
+                                     prefix=f"endpoint.{name}")
+        queue = getattr(
+            getattr(ep.policy, "scheduler", ep.policy), "queue", None)
+        if queue is not None:
+            queue.register_metrics(self.metrics,
+                                   prefix=f"endpoint.{name}.queue")
 
     # ------------------------------------------------------------ lifecycle
     async def start(self) -> None:
@@ -468,6 +533,10 @@ class AsyncProxyServer:
             return
         await self._cancel(waiter)
         stragglers = list(self._batch_tasks)
+        if stragglers and self.recorder is not None:
+            self.recorder.dump("drain_timeout", now=self.clock.now(),
+                               extra={"stragglers": len(stragglers),
+                                      "timeout": timeout})
         for t in stragglers:
             t.cancel()
         # _run_batch converts the cancellation into failed-accounting and
@@ -495,6 +564,9 @@ class AsyncProxyServer:
         loop = asyncio.get_running_loop()
         future: asyncio.Future = loop.create_future()
         self.submitted += 1
+        self._submitted_by_ep[ep.name] = \
+            self._submitted_by_ep.get(ep.name, 0) + 1
+        self.events_processed += 1
         if self._first_submit is None:
             self._first_submit = now
 
@@ -512,6 +584,9 @@ class AsyncProxyServer:
         )
         if reject:
             self.rejected += 1
+            if self.tracer is not None:
+                self.tracer.emit(now, "rejected", ep.name,
+                                 req_id=request.req_id)
             ticket = RequestTicket(request, future, ep.name, rejected=True)
             future.set_result(ticket)
             return ticket
@@ -533,6 +608,9 @@ class AsyncProxyServer:
             drop = any(b.state(now) != CLOSED for b in self._breakers.values())
         if drop:
             self.shed += 1
+            if self.tracer is not None:
+                self.tracer.emit(now, "shed", ep.name,
+                                 req_id=request.req_id, detail="brownout")
             ticket = RequestTicket(request, future, ep.name)
             ticket.shed = True
             ticket.error = BrownoutShed(
@@ -557,6 +635,11 @@ class AsyncProxyServer:
             (now, name, batch.size, batch.effective_size, batch.cause)
         )
         self.inflight_batches += 1
+        self.events_processed += 1
+        if self.recorder is not None:
+            self.recorder.note(now, "dispatch", endpoint=name,
+                               batch=batch.trace_id, size=batch.size,
+                               cause=batch.cause)
         task = asyncio.get_running_loop().create_task(
             self._run_batch(name, batch, now)
         )
@@ -582,6 +665,7 @@ class AsyncProxyServer:
                 )
                 ticket.future.set_result(ticket)
         self.timed_out += len(requests)
+        self.events_processed += 1
         self._wake.set()
 
     def _hedge_threshold(self, name: str, batch: Batch) -> Optional[float]:
@@ -637,6 +721,11 @@ class AsyncProxyServer:
             await self._cancel(timer)
             children.discard(timer)
             self.hedged_batches += 1
+            self._hedged_by_ep[name] = self._hedged_by_ep.get(name, 0) + 1
+            if self.tracer is not None:
+                self.tracer.emit(self.clock.now(), "hedge", name,
+                                 batch=batch.trace_id, size=batch.size,
+                                 value=threshold)
             hedge = start()
             children.add(hedge)
             done, pending = await asyncio.wait(
@@ -659,6 +748,8 @@ class AsyncProxyServer:
                     children.discard(t)
             if winner is hedge:
                 self.hedge_wins += 1
+                self._hedge_wins_by_ep[name] = \
+                    self._hedge_wins_by_ep.get(name, 0) + 1
             winner.result()
             return 2
         except asyncio.CancelledError:
@@ -702,6 +793,13 @@ class AsyncProxyServer:
             monitor.record_failure(batch.effective_size, now)
         breaker = self._breakers.get(name)
         if breaker is not None and breaker.record_failure(now):
+            if self.tracer is not None:
+                self.tracer.emit(now, "breaker_open", name,
+                                 batch=batch.trace_id)
+            if self.recorder is not None:
+                self.recorder.note(now, "breaker_open", endpoint=name)
+                self.recorder.dump("breaker_open", now=now,
+                                   extra={"endpoint": name})
             self._brownout_shed(name, now)
 
     def _backoff(self, failures: int) -> float:
@@ -715,7 +813,8 @@ class AsyncProxyServer:
         return backoff
 
     async def _breaker_gate(self, name: str,
-                            deadline: Optional[float]) -> bool:
+                            deadline: Optional[float],
+                            trace_id: int = -1) -> bool:
         """Park until ``name``'s breaker admits a dispatch attempt.
 
         While open, sleeps to the probe instant; while half-open with the
@@ -739,6 +838,10 @@ class AsyncProxyServer:
                 # open: sleep out the remaining interval
                 if deadline is not None and until >= deadline:
                     return False
+                if self.tracer is not None:
+                    self.tracer.emit(now, "breaker_wait", name,
+                                     batch=trace_id, value=until - now,
+                                     detail="open")
                 await self.clock.sleep(until - now)
                 continue
             if breaker.try_probe(now):
@@ -747,6 +850,10 @@ class AsyncProxyServer:
             beat = breaker.config.probe_interval
             if deadline is not None and now + beat >= deadline:
                 return False
+            if self.tracer is not None:
+                self.tracer.emit(now, "breaker_wait", name,
+                                 batch=trace_id, value=beat,
+                                 detail="half_open")
             await self.clock.sleep(beat)
 
     async def _run_batch(self, name: str, batch: Batch, t0: float) -> None:
@@ -760,7 +867,8 @@ class AsyncProxyServer:
         retries_issued = 0
         try:
             while True:  # bounded by max_retries and the batch deadline
-                if not await self._breaker_gate(name, deadline):
+                if not await self._breaker_gate(name, deadline,
+                                                batch.trace_id):
                     # every admissible probe instant is past the deadline:
                     # the SLA is already lost, stop burning the upstream
                     timed_out = True
@@ -779,6 +887,11 @@ class AsyncProxyServer:
                     failures += 1
                     error = exc
                     now = self.clock.now()
+                    if self.tracer is not None:
+                        self.tracer.emit(now, "fault", name,
+                                         batch=batch.trace_id,
+                                         size=batch.size,
+                                         detail=type(exc).__name__)
                     self._record_failure(name, batch, now)
                     if failures > cfg.max_retries:
                         self.retry_exhausted += 1
@@ -794,6 +907,17 @@ class AsyncProxyServer:
                         (now, name, batch.size, failures, backoff,
                          type(exc).__name__)
                     )
+                    if self.tracer is not None:
+                        self.tracer.emit(now, "retry", name,
+                                         batch=batch.trace_id,
+                                         size=batch.size, value=backoff,
+                                         detail=type(exc).__name__)
+                    if self.recorder is not None:
+                        self.recorder.note(now, "retry", endpoint=name,
+                                           batch=batch.trace_id,
+                                           failures=failures,
+                                           backoff=backoff,
+                                           error=type(exc).__name__)
                     await self.clock.sleep(backoff)
         except asyncio.CancelledError:
             # drain(timeout=) gave up on this batch — possibly mid-attempt,
@@ -809,6 +933,7 @@ class AsyncProxyServer:
             self.drain_cancelled += batch.size
         now = self.clock.now()
         self.inflight_batches -= 1
+        self.events_processed += 1
         if failures:
             self.faulted_batches += 1
         if retries_issued:
@@ -827,6 +952,9 @@ class AsyncProxyServer:
                     )
                     ticket.future.set_result(ticket)
             self.timed_out += batch.size
+            if self.tracer is not None:
+                self.tracer.emit(now, "timed_out", name,
+                                 batch=batch.trace_id, size=batch.size)
             self._wake.set()
             return
         if error is None:
@@ -851,6 +979,10 @@ class AsyncProxyServer:
                     self.duplicate_completions += 1
             self.completed += batch.size
             self._last_completion = now
+            if self.tracer is not None:
+                self.tracer.emit(now, "completed", name,
+                                 batch=batch.trace_id, size=batch.size,
+                                 value=latency)
         else:
             if not isinstance(error, DrainTimeout):
                 # exhausted retry budget: classify as a target failure so
@@ -869,6 +1001,10 @@ class AsyncProxyServer:
                     ticket.error = error
                     ticket.future.set_exception(error)
             self.failed += batch.size
+            if self.tracer is not None:
+                self.tracer.emit(now, "failed", name,
+                                 batch=batch.trace_id, size=batch.size,
+                                 detail=type(error).__name__)
         self._wake.set()
 
     # ---------------------------------------------------------------- timer
@@ -876,6 +1012,7 @@ class AsyncProxyServer:
         cfg = self.config
         while self._running:
             now = self.clock.now()
+            self.events_processed += 1
             self.frontend.on_timer(now)
             nxt = self.frontend.next_event_time(now)
             if nxt is None:
@@ -929,19 +1066,27 @@ class AsyncProxyServer:
         through shutdown.
         """
         c = self.conservation()
+
+        def trip(reason: str) -> AssertionError:
+            # the flight recorder dumps its ring BEFORE the raise so the
+            # postmortem survives even if the caller swallows the error
+            if self.recorder is not None:
+                self.recorder.dump(f"conservation-{reason}",
+                                   now=self.clock.now(), extra=c)
+            return AssertionError(f"{reason}: {c}")
+
         if c["lost"] != 0:
-            raise AssertionError(f"runtime lost requests: {c}")
+            raise trip("runtime lost requests")
         if c["duplicate_completions"] != 0:
-            raise AssertionError(f"duplicate completions: {c}")
+            raise trip("duplicate completions")
         if require_drained:
             if c["outstanding"] or c["queued"] or c["inflight_batches"]:
-                raise AssertionError(f"undrained work at shutdown: {c}")
+                raise trip("undrained work at shutdown")
             if c["failed"] != c["drain_cancelled"] + c["target_failures"]:
-                raise AssertionError(
-                    f"unclassified failed dispatches at shutdown: {c}")
+                raise trip("unclassified failed dispatches at shutdown")
             if c["submitted"] != (c["completed"] + c["rejected"] + c["shed"]
                                   + c["timed_out"] + c["failed"]):
-                raise AssertionError(f"conservation imbalance: {c}")
+                raise trip("conservation imbalance")
         return c
 
     # --------------------------------------------------------------- metrics
@@ -971,11 +1116,20 @@ class AsyncProxyServer:
                 "avg_batch_size": st.get("avg_batch_size", 0.0),
                 "dispatched_batches": float(st.get("dispatched_batches", 0)),
                 "max_bs": float(st.get("max_bs", 1)),
+                "upstream_batches": float(st.get("upstream_batches", 0)),
+                "retried_batches": float(st.get("retried_batches", 0)),
                 "retry_rate": float(st.get("retry_rate", 0.0)),
                 "failure_rate": float(st.get("failure_rate", 0.0)),
                 "timed_out": float(st.get("expired", 0)),
                 "shed": float(st.get("shed", 0)),
                 "padding_waste": float(st.get("padding_waste", 0.0)),
+                "submitted_requests": float(
+                    self._submitted_by_ep.get(name, 0)),
+                "queue_depth_hwm": float(st.get("queue_depth_hwm", 0)),
+                "burn_rate_fast": float(st.get("burn_rate_fast", 0.0)),
+                "burn_rate_slow": float(st.get("burn_rate_slow", 0.0)),
+                "hedged_batches": float(self._hedged_by_ep.get(name, 0)),
+                "hedge_wins": float(self._hedge_wins_by_ep.get(name, 0)),
             }
             breaker = self._breakers.get(name)
             if breaker is not None:
@@ -1019,6 +1173,11 @@ class AsyncProxyServer:
             "padding_waste": fstats["aggregate"]["padding_waste"],
             "lost": float(cons["lost"]),
             "throughput": throughput,
+            "events_processed": float(self.events_processed),
+            "queue_depth_hwm": float(
+                fstats["aggregate"]["queue_depth_hwm"]),
+            "burn_rate_fast": fstats["aggregate"]["burn_rate_fast"],
+            "burn_rate_slow": fstats["aggregate"]["burn_rate_slow"],
             "endpoints": per,
         }
         return summary

@@ -167,6 +167,8 @@ class ServerlessPlatform:
         rng: np.random.Generator,
         on_batch_done: Callable[[Batch, float, float], None],
         fault_rng: Optional[np.random.Generator] = None,
+        tracer=None,
+        recorder=None,
     ) -> None:
         """``on_batch_done(batch, upstream_latency, now)`` fires once per batch.
 
@@ -174,6 +176,12 @@ class ServerlessPlatform:
         stream) draws crash/straggler outcomes. The simulator passes two
         spawned streams so fault injection cannot shift service-time draws
         (and vice versa) when either path changes.
+
+        ``tracer``/``recorder`` are the optional observability seams (see
+        :mod:`repro.obs`): the tracer receives one span per ledger
+        transition (attempt / fault / hedge / completion), the recorder's
+        ring is dumped when :meth:`assert_conserved` trips. Both default
+        to None, which keeps the hot path untouched.
         """
         self.config = config
         self.latency = latency_model
@@ -181,6 +189,8 @@ class ServerlessPlatform:
         self.rng = rng
         self.fault_rng = fault_rng if fault_rng is not None else rng
         self.on_batch_done = on_batch_done
+        self.tracer = tracer
+        self.recorder = recorder
 
         self.containers: List[_Container] = []
         self.pending: Deque[_WorkItem] = collections.deque()
@@ -448,6 +458,11 @@ class ServerlessPlatform:
         item.live.append(a)
         c.attempts.append(a)
         self._live_attempts += 1
+        if self.tracer is not None:
+            self.tracer.emit(now, "attempt", item.batch.endpoint,
+                             batch=item.batch.trace_id,
+                             size=item.batch.size, value=service,
+                             detail=f"try{item.attempts}")
         if fail:
             # crash at a uniform point during service; every live attempt
             # on the container is requeued in _crash
@@ -473,6 +488,10 @@ class ServerlessPlatform:
         self._accrue_conc(now)  # charge the pre-hedge interval at the old level
         item.hedges += 1
         self.hedged_dispatches += 1
+        if self.tracer is not None:
+            self.tracer.emit(now, "hedge", item.batch.endpoint,
+                             batch=item.batch.trace_id,
+                             size=item.batch.size)
         self._enqueue(item, front=True)
         self._try_assign(now)
 
@@ -484,6 +503,10 @@ class ServerlessPlatform:
             return
         self._accrue_conc(now)
         self.failed_attempts += 1
+        if self.tracer is not None:
+            self.tracer.emit(now, "fault", a.item.batch.endpoint,
+                             batch=a.item.batch.trace_id,
+                             size=a.item.batch.size, detail="crash")
         self._mark_terminated(c, now)
         # resolve EVERY live attempt on the dead container — co-resident
         # batches crash with it and must be requeued, not leaked
@@ -495,6 +518,10 @@ class ServerlessPlatform:
             it = v.item
             if not it.done and not it.queued and not it.live:
                 self.requeued_batches += 1
+                if self.tracer is not None:
+                    self.tracer.emit(now, "retry", it.batch.endpoint,
+                                     batch=it.batch.trace_id,
+                                     size=it.batch.size, detail="requeue")
                 self._enqueue(it, front=True)  # at-least-once re-dispatch
         self._try_assign(now)
 
@@ -520,8 +547,30 @@ class ServerlessPlatform:
             self.completed_batches += 1
             self.completed_requests += item.batch.size
             item.batch.attempts = item.attempts
+            if self.tracer is not None:
+                self.tracer.emit(now, "completed", item.batch.endpoint,
+                                 batch=item.batch.trace_id,
+                                 size=item.batch.size,
+                                 value=now - item.submit_time)
             self.on_batch_done(item.batch, now - item.submit_time, now)
         self._try_assign(now)
+
+    # --------------------------------------------------------------- metrics
+    def register_metrics(self, registry, prefix: str = "platform") -> None:
+        """Bind the platform's lifetime ledger into a MetricsRegistry."""
+        b = registry.bind
+        b(f"{prefix}.submitted_batches", lambda: self.submitted_batches)
+        b(f"{prefix}.submitted_requests", lambda: self.submitted_requests)
+        b(f"{prefix}.completed_batches", lambda: self.completed_batches)
+        b(f"{prefix}.completed_requests", lambda: self.completed_requests)
+        b(f"{prefix}.failed_attempts", lambda: self.failed_attempts)
+        b(f"{prefix}.requeued_batches", lambda: self.requeued_batches)
+        b(f"{prefix}.hedged_dispatches", lambda: self.hedged_dispatches)
+        b(f"{prefix}.cancelled_attempts", lambda: self.cancelled_attempts)
+        b(f"{prefix}.duplicate_completions",
+          lambda: self.duplicate_completions)
+        b(f"{prefix}.cold_starts", lambda: self.cold_starts)
+        b(f"{prefix}.peak_containers", lambda: self.peak_containers)
 
     # --------------------------------------------------------- conservation
     def conservation(self) -> dict:
@@ -563,20 +612,29 @@ class ServerlessPlatform:
         (the end-of-run form of the invariant).
         """
         c = self.conservation()
+
+        def trip(reason: str) -> AssertionError:
+            # flight-recorder postmortem fires BEFORE the raise so the
+            # ring survives even when the caller swallows the error
+            if self.recorder is not None:
+                self.recorder.dump(f"conservation-{reason}",
+                                   now=self._conc_t, extra=c)
+            return AssertionError(f"{reason}: {c}")
+
         if c["lost_batches"] != 0:
-            raise AssertionError(f"lost batches: {c}")
+            raise trip("lost batches")
         if c["duplicate_completions"] != 0:
-            raise AssertionError(f"duplicate completions: {c}")
+            raise trip("duplicate completions")
         accounted = (
             c["completed_batches"] + c["queued_batches"] + c["inflight_batches"]
         )
         if accounted != c["submitted_batches"]:
-            raise AssertionError(f"conservation imbalance: {c}")
+            raise trip("conservation imbalance")
         if require_drained:
             if c["outstanding_batches"] != 0:
-                raise AssertionError(f"undrained work at end of run: {c}")
+                raise trip("undrained work at end of run")
             if c["completed_requests"] != c["submitted_requests"]:
-                raise AssertionError(f"request count mismatch: {c}")
+                raise trip("request count mismatch")
         return c
 
     # ------------------------------------------------------------ autoscaler

@@ -138,7 +138,8 @@ class _ProxyHedger:
     """
 
     __slots__ = ("quantile", "min_samples", "events", "submit_fn",
-                 "monitor_fn", "_state", "_shadow_owner", "hedged", "wins")
+                 "monitor_fn", "_state", "_shadow_owner", "hedged", "wins",
+                 "hedged_by_ep", "wins_by_ep")
 
     def __init__(self, quantile: float, min_samples: int, events: EventQueue,
                  submit_fn, monitor_fn) -> None:
@@ -159,6 +160,10 @@ class _ProxyHedger:
         self._shadow_owner: Dict[int, Batch] = {}
         self.hedged = 0
         self.wins = 0
+        # per-endpoint splits of the two counters above (key "" for the
+        # single-endpoint simulator, whose batches carry no endpoint)
+        self.hedged_by_ep: Dict[str, int] = {}
+        self.wins_by_ep: Dict[str, int] = {}
 
     def on_dispatch(self, batch: Batch, now: float) -> None:
         """Arm the straggler timer for a freshly dispatched batch."""
@@ -181,6 +186,8 @@ class _ProxyHedger:
         st[1] = shadow
         self._shadow_owner[id(shadow)] = batch
         self.hedged += 1
+        ep = batch.endpoint or ""
+        self.hedged_by_ep[ep] = self.hedged_by_ep.get(ep, 0) + 1
         self.submit_fn(shadow, now)
 
     def resolve(self, batch: Batch, latency: float, now: float):
@@ -210,6 +217,8 @@ class _ProxyHedger:
         # exactly as the live runtime's `now - t0` does.
         if owner is not None:
             self.wins += 1
+            ep = primary.endpoint or ""
+            self.wins_by_ep[ep] = self.wins_by_ep.get(ep, 0) + 1
         primary.attempts = batch.attempts + 1
         return primary, now - primary.dispatch_time
 
@@ -322,6 +331,8 @@ class Simulator(_EventLoopDriver):
         seed: int = 0,
         hedge_quantile: float = 0.0,
         hedge_min_samples: int = 10,
+        tracer=None,
+        recorder=None,
     ) -> None:
         self.sla = sla
         self.workload = workload
@@ -335,6 +346,10 @@ class Simulator(_EventLoopDriver):
         self.events = EventQueue()
         self.now = 0.0
         self.events_processed = 0
+        # optional observability plane (same seam as the live runtime:
+        # None — the default — keeps the hot path byte-identical)
+        self.tracer = tracer
+        self.recorder = recorder
 
         self.platform = ServerlessPlatform(
             config=platform_config or PlatformConfig(),
@@ -343,9 +358,12 @@ class Simulator(_EventLoopDriver):
             rng=self.rng,
             fault_rng=self.rng_faults,
             on_batch_done=self._on_batch_done,
+            tracer=tracer,
+            recorder=recorder,
         )
         self.policy = make_policy(
-            policy, sla, self._dispatch, **(policy_kwargs or {})
+            policy, sla, self._dispatch, tracer=tracer,
+            **(policy_kwargs or {})
         )
         # per-request absolute deadlines (None disables — the default)
         self._deadline_budget = sla.deadline_budget
@@ -389,6 +407,11 @@ class Simulator(_EventLoopDriver):
         req = Request(arrival_time=now)
         if self._deadline_budget is not None:
             req.deadline = now + self._deadline_budget
+        if self.tracer is not None:
+            # no frontend in the single-endpoint pipeline, so the driver
+            # stamps admission itself (the multi-endpoint path gets this
+            # from ProxyFrontend.on_request)
+            self.tracer.emit(now, "admitted", "", req_id=req.req_id)
         self.policy.on_request(req, now)
         nxt = self._pump.next()
         if nxt is not None:
@@ -468,6 +491,12 @@ class Simulator(_EventLoopDriver):
             "hedged_batches": float(self._hedger.hedged
                                     if self._hedger else 0),
             "hedge_wins": float(self._hedger.wins if self._hedger else 0),
+            # event-core work counter + queue high-water mark + SLO burn,
+            # under the SAME key names as the live runtime's summary()
+            "events_processed": float(self.events_processed),
+            "queue_depth_hwm": float(pstats.get("queue_depth_hwm", 0)),
+            "burn_rate_fast": float(pstats.get("burn_rate_fast", 0.0)),
+            "burn_rate_slow": float(pstats.get("burn_rate_slow", 0.0)),
         }
         # conservation ledger: every submitted batch must be completed or
         # still accounted for (queued/in-flight); lost and duplicate must
@@ -554,6 +583,8 @@ class MultiEndpointSimulator(_EventLoopDriver):
         seed: int = 0,
         hedge_quantile: float = 0.0,
         hedge_min_samples: int = 10,
+        tracer=None,
+        recorder=None,
     ) -> None:
         if not endpoints:
             raise ValueError("need at least one endpoint")
@@ -567,6 +598,8 @@ class MultiEndpointSimulator(_EventLoopDriver):
         self.events = EventQueue()
         self.now = 0.0
         self.events_processed = 0
+        self.tracer = tracer
+        self.recorder = recorder
 
         # platform groups: shared key → one fleet; None → dedicated fleet
         groups: Dict[str, List[str]] = {}
@@ -594,6 +627,8 @@ class MultiEndpointSimulator(_EventLoopDriver):
                 rng=self.rng,
                 fault_rng=self.rng_faults,
                 on_batch_done=self._on_batch_done,
+                tracer=tracer,
+                recorder=recorder,
             )
             for m in members:
                 self._platform_of[m] = key
@@ -610,7 +645,7 @@ class MultiEndpointSimulator(_EventLoopDriver):
                     b.endpoint).policy.monitor,
             )
 
-        self.frontend = ProxyFrontend()
+        self.frontend = ProxyFrontend(tracer=tracer)
         for name, spec in self.specs.items():
             plat = self.platforms[self._platform_of[name]]
             self.frontend.add_endpoint(
@@ -697,12 +732,15 @@ class MultiEndpointSimulator(_EventLoopDriver):
             latencies[name] = e2e
             viol = float(np.mean(e2e > spec.sla.slo_target)) if len(e2e) else 0.0
             ep_stats = fstats["endpoints"][name]
+            hedger = self._hedger
             endpoints[name] = {
                 "completed": float(len(e2e)),
                 "slo_target": spec.sla.slo_target,
                 "violation_rate": viol,
                 "violation_pct": 100.0 * viol,
                 "avg_batch_size": ep_stats.get("avg_batch_size", 0.0),
+                "dispatched_batches": float(
+                    ep_stats.get("dispatched_batches", 0)),
                 "max_bs": float(ep_stats.get("max_bs", 1)),
                 "p50": float(np.percentile(e2e, 50)) if len(e2e) else math.nan,
                 "p95": float(np.percentile(e2e, 95)) if len(e2e) else math.nan,
@@ -713,9 +751,21 @@ class MultiEndpointSimulator(_EventLoopDriver):
                 "upstream_batches": float(ep_stats.get("upstream_batches", 0)),
                 "retried_batches": float(ep_stats.get("retried_batches", 0)),
                 "retry_rate": float(ep_stats.get("retry_rate", 0.0)),
+                "failure_rate": float(ep_stats.get("failure_rate", 0.0)),
                 # deadline accounting (mirrors the live runtime summary)
                 "submitted_requests": float(self.arrived_requests[name]),
                 "timed_out": float(ep_stats.get("expired", 0)),
+                "shed": float(ep_stats.get("shed", 0)),
+                "padding_waste": float(ep_stats.get("padding_waste", 0.0)),
+                # observability surface: identical key names to the live
+                # runtime's per-endpoint summary (sim↔live parity-tested)
+                "queue_depth_hwm": float(ep_stats.get("queue_depth_hwm", 0)),
+                "burn_rate_fast": float(ep_stats.get("burn_rate_fast", 0.0)),
+                "burn_rate_slow": float(ep_stats.get("burn_rate_slow", 0.0)),
+                "hedged_batches": float(
+                    hedger.hedged_by_ep.get(name, 0) if hedger else 0),
+                "hedge_wins": float(
+                    hedger.wins_by_ep.get(name, 0) if hedger else 0),
             }
         total_containers = sum(
             p.avg_containers(billing_window) for p in self.platforms.values()
@@ -744,6 +794,11 @@ class MultiEndpointSimulator(_EventLoopDriver):
             "hedged_batches": float(self._hedger.hedged
                                     if self._hedger else 0),
             "hedge_wins": float(self._hedger.wins if self._hedger else 0),
+            "events_processed": float(self.events_processed),
+            "queue_depth_hwm": float(
+                fstats["aggregate"]["queue_depth_hwm"]),
+            "burn_rate_fast": fstats["aggregate"]["burn_rate_fast"],
+            "burn_rate_slow": fstats["aggregate"]["burn_rate_slow"],
         }
         # fleet-wide conservation ledger (summed over every platform)
         cons = [p.conservation() for p in self.platforms.values()]

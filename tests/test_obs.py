@@ -1,0 +1,438 @@
+"""Observability-plane tests.
+
+Covers the ISSUE-9 acceptance surface: tracer determinism (same seed +
+FakeClock ⇒ byte-identical span logs, all five policies), tracing-off
+identity, metrics-registry round-trip, SmartMonitor snapshot back-compat
+(old-format snapshots load; new format round-trips losslessly),
+deterministic burn-rate meters, flight-recorder triggers, and the
+sim↔live summary key-parity contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import pytest
+
+from repro.core import MonitorConfig, SLAConfig
+from repro.core.monitor import SmartMonitor
+from repro.core.policies import make_policy
+from repro.core.request import reset_request_ids
+from repro.obs import (
+    EV_KIND,
+    BurnRateMeter,
+    FlightRecorder,
+    MetricsRegistry,
+    SPAN_KINDS,
+    Tracer,
+    build_batch_spans,
+    build_request_spans,
+    serialize_events,
+)
+from repro.serverless.latency import get_workload
+from repro.serverless.platform import PlatformConfig
+from repro.simulation.arrivals import MMPP2, PoissonProcess
+from repro.simulation.simulator import (
+    EndpointSpec,
+    Simulator,
+    run_multi_simulation,
+)
+
+POLICIES = ("mlproxy", "passthrough", "static", "clipper", "oracle")
+
+WORKLOAD = get_workload("pytorch-fashion-mnist")
+
+
+def _policy_kwargs(policy: str) -> dict:
+    if policy == "static":
+        return {"batch_size": 4, "timeout": 0.1}
+    if policy == "oracle":
+        return {"latency_model": lambda bs: WORKLOAD.percentile(bs, 95)}
+    return {}
+
+
+def _chaos_sim(policy: str, *, tracer=None, recorder=None,
+               duration: float = 20.0, seed: int = 7):
+    """Short MMPP2 chaos run: bursty load + faults + stragglers, so the
+    span log exercises retry / hedge / expiry kinds, not just the happy
+    path."""
+    sim = Simulator(
+        policy=policy,
+        sla=SLAConfig(slo_target=0.5),
+        workload=WORKLOAD,
+        arrivals=MMPP2(rate_lo=5.0, rate_hi=45.0, mean_lo=6.0, mean_hi=3.0,
+                       duration=duration),
+        platform_config=PlatformConfig(
+            failure_prob_per_batch=0.05,
+            straggler_prob=0.05,
+            straggler_mult=4.0,
+            hedge_factor=3.0,
+        ),
+        policy_kwargs=_policy_kwargs(policy) or None,
+        duration=duration,
+        drain_grace=60.0,
+        seed=seed,
+        tracer=tracer,
+        recorder=recorder,
+    )
+    result = sim.run()
+    return sim, result
+
+
+def _live_run(duration: float, *, tracer=None, recorder=None,
+              crash_prob=None):
+    from experiments.scenarios import LIVE_SCENARIOS, run_live_scenario
+    from repro.runtime import FaultConfig
+
+    sc = LIVE_SCENARIOS["live-crash-storm"]
+    if crash_prob is not None:
+        sc = dataclasses.replace(
+            sc, faults=FaultConfig(crash_prob=crash_prob,
+                                   crash_latency=0.01))
+    sc = dataclasses.replace(sc, duration=duration)
+    return run_live_scenario(sc, "mlproxy", faults=True,
+                             tracer=tracer, recorder=recorder)
+
+
+# ------------------------------------------------------------ determinism
+class TestTracerDeterminism:
+    @pytest.mark.parametrize("policy", POLICIES)
+    def test_same_seed_byte_identical_span_log(self, policy):
+        logs = []
+        for _ in range(2):
+            # req_ids are a process-global sequence (allocation order,
+            # not randomness); reset so both runs label requests 0..n
+            reset_request_ids()
+            tracer = Tracer()
+            _chaos_sim(policy, tracer=tracer)
+            logs.append(serialize_events(tracer.events()))
+        assert logs[0] == logs[1]
+        assert len(logs[0]) > 0
+
+    def test_tracer_off_summary_identical(self):
+        _, plain = _chaos_sim("mlproxy")
+        _, traced = _chaos_sim("mlproxy", tracer=Tracer())
+        assert plain.summary == traced.summary
+
+    def test_all_emitted_kinds_are_declared(self):
+        tracer = Tracer()
+        _chaos_sim("mlproxy", tracer=tracer)
+        kinds = {ev[EV_KIND] for ev in tracer.events()}
+        assert kinds <= set(SPAN_KINDS)
+        # the chaos regime must actually exercise the lifecycle
+        assert {"batched", "dispatched", "completed"} <= kinds
+
+    def test_spans_reconstruct(self):
+        tracer = Tracer()
+        _, result = _chaos_sim("mlproxy", tracer=tracer)
+        spans = build_request_spans(tracer.events())
+        batches = build_batch_spans(tracer.events())
+        completed = [s for s in spans if s["outcome"] == "completed"]
+        assert len(completed) == int(result.summary["completed"])
+        for s in completed:
+            assert s["queue_wait"] is not None and s["queue_wait"] >= 0.0
+            assert s["service"] is not None and s["service"] > 0.0
+            assert s["e2e"] >= s["queue_wait"]
+        # every batched request points at a real batch record
+        assert all(s["batch"] in batches for s in spans if s["batch"] >= 0)
+
+
+# -------------------------------------------------------- metrics registry
+class TestMetricsRegistry:
+    def test_counter_is_monotonic(self):
+        reg = MetricsRegistry()
+        c = reg.counter("n")
+        c.inc()
+        c.inc(3)
+        assert reg.value("n") == 4
+        with pytest.raises(ValueError):
+            c.inc(-1)
+
+    def test_get_or_create_idempotent(self):
+        reg = MetricsRegistry()
+        assert reg.counter("n") is reg.counter("n")
+        assert reg.gauge("g") is reg.gauge("g")
+
+    def test_type_conflict_rejected(self):
+        reg = MetricsRegistry()
+        reg.counter("x")
+        with pytest.raises(ValueError):
+            reg.gauge("x")
+        with pytest.raises(ValueError):
+            reg.bind("x", lambda: 0)
+
+    def test_bound_metric_reads_live_value(self):
+        reg = MetricsRegistry()
+        box = {"v": 0}
+        reg.bind("ext", lambda: box["v"])
+        box["v"] = 7
+        assert reg.value("ext") == 7
+
+    def test_histogram_buckets_and_mean(self):
+        reg = MetricsRegistry()
+        h = reg.histogram("lat", bounds=(0.1, 1.0))
+        for v in (0.05, 0.5, 0.5, 5.0):
+            h.observe(v)
+        assert h.counts == [1, 2, 1]
+        assert h.count == 4
+        assert h.mean == pytest.approx(6.05 / 4)
+
+    def test_snapshot_restore_round_trip(self):
+        reg = MetricsRegistry()
+        reg.counter("c").inc(5)
+        reg.gauge("g").set(2.5)
+        h = reg.histogram("h", bounds=(1.0,))
+        h.observe(0.5)
+        h.observe(3.0)
+        reg.bind("b", lambda: 42)
+
+        snap = reg.snapshot()
+        # bound metrics are materialized into the snapshot...
+        assert snap["bound"] == {"b": 42}
+
+        fresh = MetricsRegistry()
+        fresh.restore(snap)
+        assert fresh.value("c") == 5
+        assert fresh.value("g") == 2.5
+        assert fresh.histogram("h").counts == [1, 1]
+        assert fresh.histogram("h").total == pytest.approx(3.5)
+        # ...but (by design) not restored: the source object owns them
+        with pytest.raises(KeyError):
+            fresh.value("b")
+        # round-trip is lossless for owned metrics
+        snap2 = fresh.snapshot()
+        for table in ("counters", "gauges", "histograms"):
+            assert snap2[table] == snap[table]
+
+
+# -------------------------------------------- monitor snapshot back-compat
+def _seeded_monitor() -> SmartMonitor:
+    mon = SmartMonitor(MonitorConfig(min_samples=1),
+                       SLAConfig(slo_target=0.1))
+    t = 0.0
+    for i in range(20):
+        t += 0.05
+        mon.record_upstream(4, 0.05 + 0.001 * i, now=t,
+                            attempts=2 if i % 5 == 0 else 1)
+        mon.record_dispatch(4, "timeout" if i % 3 == 0 else "full",
+                            effective_size=8)
+        mon.record_e2e(0.05 if i % 2 else 0.2, now=t)
+    mon.record_failure(4, now=t)
+    return mon
+
+
+class TestMonitorSnapshotBackCompat:
+    def test_new_format_round_trip_lossless(self):
+        mon = _seeded_monitor()
+        snap = mon.snapshot()
+        fresh = SmartMonitor(MonitorConfig(min_samples=1),
+                             SLAConfig(slo_target=0.1))
+        fresh.restore(snap)
+        assert fresh.snapshot() == snap
+        assert fresh.lifetime_requests == mon.lifetime_requests
+        assert fresh.lifetime_failed_attempts == 1
+        assert fresh.burn.total == mon.burn.total
+        assert fresh.burn.rates(1.0) == mon.burn.rates(1.0)
+
+    def test_old_format_snapshot_loads(self):
+        """Snapshots predating the typed-counter/burn migration carry no
+        failure, padding, retry, or burn state — they must still load."""
+        mon = _seeded_monitor()
+        snap = mon.snapshot()
+        for legacy_missing in ("burn", "lifetime_failed_attempts",
+                               "lifetime_upstream", "lifetime_padding"):
+            del snap[legacy_missing]
+        fresh = SmartMonitor(MonitorConfig(min_samples=1),
+                             SLAConfig(slo_target=0.1))
+        fresh.restore(snap)
+        # the historical core survives...
+        assert fresh.lifetime_requests == mon.lifetime_requests
+        assert fresh.lifetime_dispatches == mon.lifetime_dispatches
+        assert fresh.lifetime_violations == mon.lifetime_violations
+        # ...and the post-migration counters default to empty
+        assert fresh.lifetime_failed_attempts == 0
+        assert fresh.lifetime_retried_batches == 0
+        assert fresh.padding_waste() == 0.0
+        assert fresh.burn.total == 0
+
+    def test_register_metrics_exposes_counters(self):
+        mon = _seeded_monitor()
+        reg = MetricsRegistry()
+        mon.register_metrics(reg, prefix="ep0")
+        assert reg.value("ep0.lifetime_requests") == mon.lifetime_requests
+        assert reg.value("ep0.burn_samples") == mon.burn.total
+        # bound views are live, not copies
+        mon.record_e2e(0.01, now=2.0)
+        assert reg.value("ep0.lifetime_requests") == mon.lifetime_requests
+
+
+# -------------------------------------------------------------- burn rate
+class TestBurnRate:
+    def test_burn_one_at_exactly_budget_pace(self):
+        # p95 budget: 5% violations allowed; feed exactly 5% violations
+        meter = BurnRateMeter.for_percentile(95.0, fast_window=60.0,
+                                             slow_window=600.0)
+        t = 0.0
+        for i in range(600):
+            t += 1.0
+            meter.record(t, violated=(i % 20 == 0))
+        rates = meter.rates(t)
+        assert rates["burn_rate_fast"] == pytest.approx(1.0, abs=0.35)
+        assert rates["burn_rate_slow"] == pytest.approx(1.0, abs=0.05)
+
+    def test_fast_window_catches_sharp_regression(self):
+        meter = BurnRateMeter(budget=0.05, fast_window=60.0,
+                              slow_window=600.0)
+        t = 0.0
+        for _ in range(540):
+            t += 1.0
+            meter.record(t, violated=False)
+        for _ in range(60):  # total outage in the final minute
+            t += 1.0
+            meter.record(t, violated=True)
+        rates = meter.rates(t)
+        assert rates["burn_rate_fast"] == pytest.approx(20.0, rel=0.05)
+        assert rates["burn_rate_slow"] == pytest.approx(2.0, rel=0.10)
+        assert rates["burning"]
+
+    def test_not_burning_on_blip(self):
+        meter = BurnRateMeter(budget=0.05, fast_window=60.0,
+                              slow_window=600.0)
+        t = 0.0
+        for i in range(600):
+            t += 1.0
+            # one bad minute early on, clean since
+            meter.record(t, violated=(60 <= i < 120))
+        assert not meter.rates(t)["burning"]
+
+    def test_deterministic_and_out_of_order_fold(self):
+        a, b = (BurnRateMeter(budget=0.1, fast_window=10.0,
+                              slow_window=100.0) for _ in range(2))
+        for m in (a, b):
+            m.record(1.0, True)
+            m.record(2.0, False)
+            m.record(1.5, True)  # slightly out of order: folds, no error
+        assert a.snapshot() == b.snapshot()
+        assert a.rates(2.0) == b.rates(2.0)
+        assert a.total == 3 and a.violations == 2
+
+    def test_snapshot_restore_round_trip(self):
+        meter = BurnRateMeter(budget=0.05)
+        for i in range(50):
+            meter.record(i * 0.5, violated=(i % 7 == 0))
+        fresh = BurnRateMeter(budget=0.05)
+        fresh.restore(meter.snapshot())
+        assert fresh.rates(25.0) == meter.rates(25.0)
+        assert fresh.snapshot() == meter.snapshot()
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            BurnRateMeter(budget=0.0)
+        with pytest.raises(ValueError):
+            BurnRateMeter(budget=0.05, fast_window=60.0, slow_window=30.0)
+        # p100 clamps to a finite budget instead of dividing by zero
+        assert BurnRateMeter.for_percentile(100.0).budget == 1e-3
+
+
+# -------------------------------------------------------- flight recorder
+class TestFlightRecorder:
+    def test_ring_bounds_and_dropped(self):
+        rec = FlightRecorder(capacity=4, out_dir="unused")
+        for i in range(6):
+            rec.note(float(i), "dispatch", n=i)
+        assert len(rec) == 4
+        assert rec.dropped == 2
+        assert [e["n"] for e in rec.events()] == [2, 3, 4, 5]
+
+    def test_dump_is_parseable_json(self, tmp_path):
+        rec = FlightRecorder(out_dir=str(tmp_path))
+        rec.note(1.0, "dispatch", endpoint="ep", size=4)
+        path = rec.dump("breaker_open", now=2.0, extra={"endpoint": "ep"})
+        assert path is not None and rec.dumps == [path]
+        doc = json.loads((tmp_path / path.split("/")[-1]).read_text())
+        assert doc["reason"] == "breaker_open"
+        assert doc["now"] == 2.0
+        assert doc["extra"] == {"endpoint": "ep"}
+        assert doc["events"] == [{"t": 1.0, "kind": "dispatch",
+                                  "endpoint": "ep", "size": 4}]
+
+    def test_dump_sanitizes_reason_and_never_raises(self, tmp_path):
+        rec = FlightRecorder(out_dir=str(tmp_path))
+        path = rec.dump("conservation: lost/batches!")
+        assert path is not None and "/flightrec-001-" in path
+        assert path.endswith(".json")
+        # an unwritable out_dir (path through a regular file) must not
+        # turn the postmortem into a second crash
+        blocker = tmp_path / "blocker"
+        blocker.write_text("")
+        rec2 = FlightRecorder(out_dir=str(blocker / "sub"))
+        assert rec2.dump("whatever") is None
+        assert rec2.dumps == []
+
+    def test_conservation_failure_dumps_postmortem(self, tmp_path):
+        rec = FlightRecorder(out_dir=str(tmp_path))
+        sim, _ = _chaos_sim("mlproxy", recorder=rec, duration=10.0)
+        sim.platform.assert_conserved(require_drained=True)  # healthy
+        dumps_before = len(rec.dumps)
+        sim.platform.duplicate_completions += 1  # corrupt the ledger
+        with pytest.raises(AssertionError):
+            sim.platform.assert_conserved()
+        assert len(rec.dumps) == dumps_before + 1
+        doc = json.loads(open(rec.dumps[-1]).read())
+        assert doc["reason"].startswith("conservation-")
+        assert doc["extra"]["duplicate_completions"] == 1
+
+    def test_breaker_open_dumps_postmortem(self, tmp_path):
+        """Forced outage under FakeClock: crash_prob=1.0 trips the
+        breaker, which must leave a parseable postmortem."""
+        rec = FlightRecorder(out_dir=str(tmp_path))
+        _live_run(8.0, recorder=rec, crash_prob=1.0)
+        assert rec.dumps
+        doc = json.loads(open(rec.dumps[0]).read())
+        assert doc["reason"] == "breaker_open"
+        assert any(e["kind"] == "breaker_open" for e in doc["events"])
+        assert any(e["kind"] == "dispatch" for e in doc["events"])
+
+
+# ------------------------------------------------------- sim↔live parity
+class TestSummaryKeyParity:
+    #: live-only optional sub-dict (present only when a breaker is wired)
+    LIVE_ONLY = {"breaker"}
+    #: the shared observability keys every top-level summary must carry
+    OBS_KEYS = {"events_processed", "queue_depth_hwm",
+                "burn_rate_fast", "burn_rate_slow"}
+
+    def _multi_sim(self):
+        specs = {
+            "ep": EndpointSpec(
+                policy="mlproxy", sla=SLAConfig(slo_target=0.5),
+                workload=WORKLOAD,
+                arrivals=PoissonProcess(rate=20.0, duration=20.0),
+                platform_config=PlatformConfig(initial_scale=1),
+            ),
+        }
+        return run_multi_simulation(specs, duration=20.0, seed=3)
+
+    def test_per_endpoint_summary_keys_identical(self):
+        sim_keys = set(self._multi_sim().endpoints["ep"])
+        live = _live_run(8.0)
+        live_keys = set(live.summary["endpoints"]["ep"]) - self.LIVE_ONLY
+        assert sim_keys == live_keys
+
+    def test_top_level_obs_keys_in_both_worlds(self):
+        _, single = _chaos_sim("mlproxy", duration=10.0)
+        multi = self._multi_sim()
+        live = _live_run(8.0)
+        for summary in (single.summary, multi.summary, live.summary):
+            assert self.OBS_KEYS <= set(summary)
+            assert summary["events_processed"] > 0
+            assert summary["queue_depth_hwm"] >= 1
+
+    def test_policy_stats_key_parity_across_policies(self):
+        sla = SLAConfig(slo_target=0.5)
+        key_sets = {}
+        for name in POLICIES:
+            policy = make_policy(name, sla, dispatch_fn=lambda b: None,
+                                 **_policy_kwargs(name))
+            key_sets[name] = frozenset(policy.stats(0.0))
+        assert len(set(key_sets.values())) == 1, key_sets

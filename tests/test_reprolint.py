@@ -362,6 +362,75 @@ class TestLedgerCounter:
                     only=["ledger-counter"]) == []
 
 
+METRICS_PATH = "src/repro/runtime/breaker.py"
+
+
+class TestUnregisteredCounter:
+    def test_unbound_counter_flagged(self):
+        src = ("class Breaker:\n"
+               "    def trip(self):\n"
+               "        self.opens += 1\n"
+               "        self.probes += 1\n"
+               "    def register_metrics(self, registry):\n"
+               "        registry.bind('opens', lambda: self.opens)\n")
+        (f,) = lint(src, path=METRICS_PATH, only=["unregistered-counter"])
+        assert "probes" in f.message
+        assert "never bound in register_metrics" in f.message
+
+    def test_gauge_with_decrement_exempt(self):
+        src = ("class Breaker:\n"
+               "    def work(self):\n"
+               "        self.inflight += 1\n"
+               "        self.inflight -= 1\n"
+               "    def register_metrics(self, registry):\n"
+               "        pass\n")
+        assert lint(src, path=METRICS_PATH,
+                    only=["unregistered-counter"]) == []
+
+    def test_private_attr_exempt(self):
+        src = ("class Breaker:\n"
+               "    def work(self):\n"
+               "        self._seq += 1\n"
+               "    def register_metrics(self, registry):\n"
+               "        pass\n")
+        assert lint(src, path=METRICS_PATH,
+                    only=["unregistered-counter"]) == []
+
+    def test_class_without_binding_method_flagged(self):
+        src = ("class Breaker:\n"
+               "    def trip(self):\n"
+               "        self.opens += 1\n")
+        (f,) = lint(src, path=METRICS_PATH, only=["unregistered-counter"])
+        assert f.line == 1
+        assert "defines no register_metrics" in f.message
+
+    def test_counter_read_in_bind_lambda_passes(self):
+        src = ("class Breaker:\n"
+               "    def trip(self):\n"
+               "        self.opens += 1\n"
+               "    def register_metrics(self, registry):\n"
+               "        registry.bind('opens', lambda: self.opens)\n")
+        assert lint(src, path=METRICS_PATH,
+                    only=["unregistered-counter"]) == []
+
+    def test_non_metrics_module_not_checked(self):
+        src = ("class T:\n"
+               "    def work(self):\n"
+               "        self.hidden += 1\n")
+        assert lint(src, path=SRC_PATH,
+                    only=["unregistered-counter"]) == []
+
+    def test_suppression(self):
+        src = ("class Breaker:\n"
+               "    def trip(self):\n"
+               "        self.opens += 1  "
+               "# reprolint: disable=unregistered-counter\n"
+               "    def register_metrics(self, registry):\n"
+               "        pass\n")
+        assert lint(src, path=METRICS_PATH,
+                    only=["unregistered-counter"]) == []
+
+
 class TestSlotsDataclass:
     def test_missing_slots_flagged(self):
         src = ("import dataclasses\n"

@@ -102,6 +102,21 @@ class LintConfig:
     )
     #: subtree whose dataclasses must declare slots=True
     slots_paths: Tuple[str, ...] = ("src/repro/simulation/",)
+    # observability ----------------------------------------------------
+    #: instrumented modules (suffix match): every class-level monotonic
+    #: counter here must be bound into the MetricsRegistry via a
+    #: binding method, or it is invisible to the metrics plane
+    metrics_modules: Tuple[str, ...] = (
+        "core/batch_queue.py",
+        "core/monitor.py",
+        "runtime/server.py",
+        "runtime/breaker.py",
+        "runtime/faults.py",
+        "serverless/platform.py",
+    )
+    #: method names whose attribute reads count as "bound" (the
+    #: ``registry.bind(name, lambda: self.counter)`` convention)
+    metrics_binding_methods: Tuple[str, ...] = ("register_metrics",)
 
     # --- path helpers -------------------------------------------------
     @staticmethod

@@ -415,6 +415,84 @@ def check_ledger_counter(project: Project, config: LintConfig
                              "or monitored"))
 
 
+@rule("unregistered-counter",
+      "monotonic counter in an instrumented module never bound into the "
+      "metrics registry")
+def check_unregistered_counter(project: Project, config: LintConfig
+                               ) -> Iterator[Finding]:
+    """Counters in ``metrics_modules`` must surface in ``register_metrics``.
+
+    The observability plane's contract is that every hand-rolled ledger
+    counter binds into the MetricsRegistry (``registry.bind(name,
+    lambda: self.counter)``), so dashboards and tests see one uniform
+    surface. A counter incremented but never read inside a binding
+    method is invisible to that surface. Exemptions: attributes that are
+    also decremented (gauges, not monotonic counters) and ``_private``
+    bookkeeping attributes (not part of the metrics surface).
+    """
+    for ctx in project.files:
+        if not any(ctx.path == m or ctx.path.endswith("/" + m)
+                   for m in config.metrics_modules):
+            continue
+        for cls in ctx.tree.body:
+            if not isinstance(cls, ast.ClassDef):
+                continue
+            binding_reads: Set[str] = set()
+            has_binding = False
+            for stmt in cls.body:
+                if (isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef))
+                        and stmt.name in config.metrics_binding_methods):
+                    has_binding = True
+                    for node in ast.walk(stmt):
+                        if (isinstance(node, ast.Attribute)
+                                and isinstance(node.value, ast.Name)
+                                and node.value.id == "self"):
+                            binding_reads.add(node.attr)
+            increments: Dict[str, int] = {}
+            decremented: Set[str] = set()
+            for node in ast.walk(cls):
+                if not (isinstance(node, ast.AugAssign)
+                        and isinstance(node.target, ast.Attribute)
+                        and isinstance(node.target.value, ast.Name)
+                        and node.target.value.id == "self"):
+                    continue
+                attr = node.target.attr
+                if (isinstance(node.op, ast.Add)
+                        and isinstance(node.value, ast.Constant)
+                        and isinstance(node.value.value, int)
+                        and node.value.value > 0):
+                    increments.setdefault(attr, node.lineno)
+                elif isinstance(node.op, ast.Sub):
+                    decremented.add(attr)  # gauge, not a monotonic counter
+            counters = {attr: lineno for attr, lineno in increments.items()
+                        if attr not in decremented
+                        and not attr.startswith("_")}
+            if not counters:
+                continue
+            if not has_binding:
+                _, first_line = min(counters.items(), key=lambda kv: kv[1])
+                yield Finding(
+                    rule="unregistered-counter", path=ctx.path,
+                    line=cls.lineno, col=cls.col_offset,
+                    message=(f"class {cls.name} keeps monotonic counter(s) "
+                             f"{', '.join(sorted(counters))} but defines no "
+                             f"{'/'.join(config.metrics_binding_methods)}() "
+                             "to bind them into the metrics registry"))
+                continue
+            for attr, lineno in sorted(counters.items(),
+                                       key=lambda kv: kv[1]):
+                if attr in binding_reads:
+                    continue
+                yield Finding(
+                    rule="unregistered-counter", path=ctx.path,
+                    line=lineno, col=0,
+                    message=(f"counter self.{attr} in class {cls.name} is "
+                             "incremented but never bound in "
+                             f"{'/'.join(config.metrics_binding_methods)}"
+                             "(); unregistered counters are invisible to "
+                             "the metrics plane"))
+
+
 # ----------------------------------------------------------- fault safety
 #: callee terminal names that look like an upstream dispatch — the thing
 #: a retry loop re-invokes
