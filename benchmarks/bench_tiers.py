@@ -1,0 +1,223 @@
+"""Fleet-tier economics: cost at equal SLA for spillover routing.
+
+For every chaos scenario the sweep runs three fleets through the
+multi-endpoint simulator under the ``mlproxy`` policy:
+
+* **single** — today's homogeneous fleet (weight-1.0 containers), the
+  untiered reference;
+* **cheap+fast** — a discounted slower instance family preferred by the
+  :class:`~repro.core.frontend.SpilloverRouter`, spilling to full-price
+  full-speed containers when the cheap tier's in-flight / queue-depth
+  guards trip;
+* **spot+od** — deeply discounted *preemptible* capacity (containers are
+  reclaimed mid-batch with probability ``preempt_prob`` per attempt and
+  the victims requeue through the attempt ledger) backed by on-demand
+  containers.
+
+Per cell the per-tier AND aggregate conservation ledgers are asserted
+(zero lost, zero duplicated; ``violations`` must sum to 0 across the
+sweep). ``kind="identity"`` rows check the degenerate case for every
+policy: a 1-tier ``TieredPlatform`` run must be **byte-identical** to
+the untiered single fleet (summary, per-endpoint stats, and every e2e
+latency) — the tier layer must cost nothing when unused.
+
+Headline (``spillover_wins``): in how many of the five scenarios does
+the best spillover fleet meet the single fleet's SLA (violation rate
+within ``SLA_EPS_PCT``) at strictly lower weighted cost.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from experiments.scenarios import (
+    POLICIES,
+    SCENARIOS,
+    ChaosScenario,
+    make_arrivals,
+)
+from repro.core import SLAConfig, ms
+from repro.core.request import reset_request_ids
+from repro.serverless.latency import get_workload
+from repro.serverless.tiers import TierSpec
+from repro.simulation.simulator import EndpointSpec, run_multi_simulation
+
+from benchmarks.common import write_csv
+
+#: Tolerance (percentage points of violation rate) within which a
+#: spillover fleet counts as "meeting the same SLA" as the single fleet.
+SLA_EPS_PCT = 0.5
+
+#: Cheap-slow tier: a discounted instance family at ~55% of the on-demand
+#: price running ~10% slower — the sub-linear price/perf gap real cloud
+#: instance generations exhibit. Guards keep the tier from drowning:
+#: spill once 16 batches are in flight or its backend queue backs up.
+CHEAP_FAST: Tuple[TierSpec, ...] = (
+    TierSpec(name="cheap", cost_weight=0.55, latency_scale=1.10,
+             max_inflight=16, queue_depth_max=8),
+    TierSpec(name="fast", cost_weight=1.0),
+)
+
+#: Spot + on-demand: spot at 40% of the on-demand price but preemptible
+#: (3% of attempts lose their container mid-batch and requeue).
+SPOT_OD: Tuple[TierSpec, ...] = (
+    TierSpec(name="spot", cost_weight=0.4, preemptible=True,
+             preempt_prob=0.03, max_inflight=16, queue_depth_max=8),
+    TierSpec(name="ondemand", cost_weight=1.0),
+)
+
+FLEETS: Dict[str, Optional[Tuple[TierSpec, ...]]] = {
+    "single": None,
+    "cheap+fast": CHEAP_FAST,
+    "spot+od": SPOT_OD,
+}
+
+#: Degenerate fleet for the identity rows: one weight-1.0 tier, no
+#: guards, no preemption — must change *nothing*.
+ONE_TIER: Tuple[TierSpec, ...] = (TierSpec(name="only"),)
+
+
+def _run_cell(sc: ChaosScenario, policy: str,
+              tiers: Optional[Tuple[TierSpec, ...]], quick: bool):
+    duration = max(120.0, sc.duration * 0.25) if quick else sc.duration
+    workload = get_workload(sc.workload)
+    policy_kwargs: dict = {}
+    if policy == "static":
+        policy_kwargs = {"batch_size": 8, "timeout": 0.2}
+    elif policy == "oracle":
+        policy_kwargs = {
+            "latency_model": lambda bs, _w=workload: _w.percentile(bs, 95)
+        }
+    reset_request_ids()
+    return run_multi_simulation(
+        {
+            "ep": EndpointSpec(
+                policy=policy,
+                sla=SLAConfig(slo_target=ms(sc.slo_ms)),
+                workload=workload,
+                arrivals=make_arrivals(sc, duration),
+                policy_kwargs=policy_kwargs,
+                platform_config=sc.platform,
+                tiers=tiers,
+            )
+        },
+        duration=duration,
+        drain_grace=sc.drain_grace,
+        seed=sc.seed,
+    )
+
+
+def _violations(res) -> int:
+    """Conservation violations in one cell: lost or duplicated batches,
+    per tier and in aggregate, plus leaked router in-flight slots."""
+    v = int(res.summary["lost_batches"] + res.summary["duplicate_completions"])
+    for tiers in res.tiers.values():
+        for t in tiers.values():
+            v += int(t["submitted_batches"] - t["completed_batches"])
+    for r in res.routers.values():
+        v += int(sum(r["inflight"].values()))
+    return v
+
+
+def _identity_rows(quick: bool) -> List[Dict]:
+    """1-tier TieredPlatform vs untiered fleet, every policy: byte-equal."""
+    sc = SCENARIOS["crash-storm"]
+    rows: List[Dict] = []
+    for policy in POLICIES:
+        plain = _run_cell(sc, policy, None, quick)
+        tiered = _run_cell(sc, policy, ONE_TIER, quick)
+        identical = (
+            tiered.summary == plain.summary
+            and tiered.endpoints == plain.endpoints
+            and all(
+                np.array_equal(tiered.e2e_latencies[k], plain.e2e_latencies[k])
+                for k in plain.e2e_latencies
+            )
+        )
+        rows.append({
+            "kind": "identity",
+            "scenario": sc.name,
+            "policy": policy,
+            "fleet": "1tier",
+            "identical": identical,
+            "completed": plain.summary["completed"],
+            "violations": _violations(plain) + _violations(tiered),
+            "viol_pct": round(tiered.summary["violation_pct"], 4),
+            "weighted_cost": round(
+                tiered.summary["weighted_cost"], 6),
+            "cost_delta_pct": round(
+                100.0 * (tiered.summary["weighted_cost"]
+                         - plain.summary["weighted_cost"])
+                / plain.summary["weighted_cost"]
+                if plain.summary["weighted_cost"] else 0.0, 6),
+            "spillover_pct": 0.0,
+            "preemptions": int(tiered.summary["preemptions"]),
+        })
+    return rows
+
+
+def run(quick: bool = False) -> List[Dict]:
+    rows: List[Dict] = _identity_rows(quick)
+    for name, sc in SCENARIOS.items():
+        ref = None  # the single-fleet cell this scenario is judged against
+        for fleet, tiers in FLEETS.items():
+            res = _run_cell(sc, "mlproxy", tiers, quick)
+            if fleet == "single":
+                ref = res
+            router = res.routers.get("ep", {})
+            tier_break = next(iter(res.tiers.values()), {})
+            rows.append({
+                "kind": "sweep",
+                "scenario": name,
+                "policy": "mlproxy",
+                "fleet": fleet,
+                "identical": "",
+                "completed": res.summary["completed"],
+                "violations": _violations(res),
+                "viol_pct": round(res.summary["violation_pct"], 4),
+                "weighted_cost": round(res.summary["weighted_cost"], 6),
+                "cost_delta_pct": round(
+                    100.0 * (res.summary["weighted_cost"]
+                             - ref.summary["weighted_cost"])
+                    / ref.summary["weighted_cost"]
+                    if ref.summary["weighted_cost"] else 0.0, 3),
+                "spillover_pct": round(
+                    100.0 * router.get("spillover_rate", 0.0), 2),
+                "preemptions": int(res.summary["preemptions"]),
+                # per-tier weighted-cost split (empty for the single fleet)
+                "cost_by_tier": "|".join(
+                    f"{tn}:{t['cost_integral']:.1f}"
+                    for tn, t in tier_break.items()),
+            })
+    write_csv("tier_economics.csv", rows)
+    return rows
+
+
+def spillover_wins(rows: List[Dict]) -> float:
+    """Scenarios where a spillover fleet meets the single fleet's SLA at
+    strictly lower weighted cost — the headline ``derived`` value.
+    Returns -1.0 if any identity row broke or any cell lost work."""
+    if any(r["violations"] for r in rows):
+        return -1.0
+    if not all(r["identical"] for r in rows if r["kind"] == "identity"):
+        return -1.0
+    wins = 0
+    for name in SCENARIOS:
+        cells = {r["fleet"]: r for r in rows
+                 if r["kind"] == "sweep" and r["scenario"] == name}
+        single = cells["single"]
+        if any(
+            c["viol_pct"] <= single["viol_pct"] + SLA_EPS_PCT
+            and c["weighted_cost"] < single["weighted_cost"]
+            for f, c in cells.items() if f != "single"
+        ):
+            wins += 1
+    return float(wins)
+
+
+if __name__ == "__main__":
+    out = run(quick=True)
+    for r in out:
+        print(r)
+    print("spillover_wins:", spillover_wins(out))

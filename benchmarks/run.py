@@ -84,6 +84,16 @@ BENCHES = {
                 and all(r["parseable"] for r in rows
                         if r["kind"] == "flightrec"))
             else -1.0)),
+    # fleet tiers: cost at equal SLA for spillover routing vs a single
+    # homogeneous fleet; derived = scenarios (of 5) where a spillover
+    # fleet meets the single fleet's SLA at strictly lower weighted cost
+    # (-1 if any cell lost work or a 1-tier run was not byte-identical
+    # to the untiered fleet)
+    "tiers": (
+        "bench_tiers",
+        lambda rows: __import__(
+            "benchmarks.bench_tiers", fromlist=["spillover_wins"]
+        ).spillover_wins(rows)),
     # JAX data plane: fused decode loop vs per-token reference + packing
     # cost at equal SLA; derived = fused speedup on the best
     # decode-dominated config (0 if ANY bucket's outputs diverge from the

@@ -80,6 +80,10 @@ class Batch:
     # Stamped by the frontend so shared dispatch targets (and shared
     # platforms) know which endpoint's model a batch belongs to.
     endpoint: Optional[str] = None
+    # Fleet tier chosen by the SpilloverRouter at dispatch time (None on
+    # single-fleet paths). TieredPlatform / TieredTarget use it to pick
+    # the per-tier backend; EndpointRoutedLatency keys on it too.
+    tier: Optional[str] = None
     # Stamped by the platform on completion: how many dispatch attempts
     # (crash retries + hedges) this batch took before it finished. The
     # monitor uses it for retry-aware upstream statistics.

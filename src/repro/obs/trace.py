@@ -69,6 +69,8 @@ SPAN_KINDS = (
     "batched",       # batch membership: member ids in req slot (tuple),
                      # member arrival times in value slot (tuple)
     "dispatched",    # batch handed to the dispatch_fn (cause in detail)
+    "routed",        # SpilloverRouter picked a fleet tier for the batch
+                     # (detail = "tier:reason", e.g. "fast:inflight_cap")
     "attempt",       # platform/target attempt started
     "fault",         # injected or upstream fault (kind in detail)
     "retry",         # driver re-submitting a failed batch (backoff in value)

@@ -64,7 +64,7 @@ from typing import Dict, List, Optional, Set, Tuple
 import numpy as np
 
 from repro.core.config import SLAConfig
-from repro.core.frontend import ProxyFrontend
+from repro.core.frontend import ProxyFrontend, SpilloverRouter
 from repro.obs.metrics import MetricsRegistry
 from repro.core.request import Batch, Request
 from repro.runtime.breaker import CLOSED, BreakerConfig, CircuitBreaker
@@ -401,7 +401,8 @@ class AsyncProxyServer:
     def add_endpoint(self, name: str, *, sla: SLAConfig,
                      target: DispatchTarget, policy: str = "mlproxy",
                      policy_kwargs: Optional[dict] = None,
-                     pack: bool = False) -> None:
+                     pack: bool = False,
+                     router: Optional["SpilloverRouter"] = None) -> None:
         """Register an endpoint backed by ``target``.
 
         If the target declares a ``max_batch`` (fixed-shape engines), the
@@ -413,6 +414,11 @@ class AsyncProxyServer:
         target up to the next engine bucket edge and dispatches exactly at
         it, so "full" batches execute with zero padding (the padding-waste
         stat in :meth:`summary` shows the effect).
+
+        ``router`` attaches a :class:`~repro.core.frontend.SpilloverRouter`
+        that stamps ``batch.tier`` at dispatch; pair it with a
+        :class:`~repro.runtime.targets.TieredTarget` whose tier names
+        match the router's so stamped batches land on the right fleet.
         """
         if pack:
             buckets = getattr(target, "batch_buckets", None)
@@ -461,7 +467,11 @@ class AsyncProxyServer:
 
         ep = self.frontend.add_endpoint(
             name, sla=sla, dispatch_fn=dispatch,
-            policy=policy, policy_kwargs=policy_kwargs, expire_fn=expire)
+            policy=policy, policy_kwargs=policy_kwargs, expire_fn=expire,
+            router=router)
+        if router is not None:
+            router.register_metrics(self.metrics,
+                                    prefix=f"endpoint.{name}.router")
         monitor = getattr(ep.policy, "monitor", None)
         if monitor is not None:
             monitor.register_metrics(self.metrics,
@@ -938,6 +948,14 @@ class AsyncProxyServer:
             self.faulted_batches += 1
         if retries_issued:
             self.retried_batches += 1
+        # The success path releases the router's in-flight slot through
+        # frontend.on_response -> router.on_batch_done; the terminal
+        # failure paths below never reach it, so release here or the
+        # tier's inflight count leaks and the cap wedges shut.
+        _router = self.frontend.endpoint(name).router
+        if (_router is not None and batch.tier is not None
+                and (timed_out or error is not None)):
+            _router.release(batch.tier)
         if timed_out:
             # the batch was never completed by the upstream; its requests
             # exhaust their deadline exactly like a queue expiry would
@@ -1134,6 +1152,15 @@ class AsyncProxyServer:
             breaker = self._breakers.get(name)
             if breaker is not None:
                 per[name]["breaker"] = breaker.stats(now)
+            # Tiered endpoints only: extra keys would break the strict
+            # dict-equality checks untiered parity tests rely on.
+            if ep.router is not None:
+                per[name]["router"] = ep.router.stats()
+            target = self._targets.get(name)
+            tier_stats = getattr(target, "stats", None)
+            if tier_stats is not None and hasattr(target, "cost_integral"):
+                per[name]["tiers"] = tier_stats()
+                per[name]["cost_integral"] = float(target.cost_integral)
         e2e = np.concatenate(all_e2e) if all_e2e else np.empty(0)
         n = len(e2e)
         cons = self.conservation()

@@ -108,6 +108,105 @@ class SyntheticTarget(DispatchTarget):
         self.requests += batch.size
 
 
+class TieredTarget(DispatchTarget):
+    """Fan-out target: one inner :class:`DispatchTarget` per fleet tier.
+
+    The live-world counterpart of
+    :class:`~repro.serverless.tiers.TieredPlatform`: batches arrive
+    already stamped with ``batch.tier`` by the endpoint's
+    :class:`~repro.core.frontend.SpilloverRouter` (the same router seam
+    the simulator uses, so routing decisions agree across worlds) and
+    are forwarded to that tier's target. Unstamped batches fall back to
+    the cheapest tier, so a router-less endpoint degrades to a
+    single-tier fleet instead of erroring.
+
+    Per-tier busy-seconds are integrated around each call and combined
+    through ``cost_weights`` into :attr:`cost_integral` — the live
+    analogue of the platform's billable-seconds cost metric (billing
+    here follows *execution* time, as serverless per-invocation billing
+    does, rather than provisioned-fleet time).
+    """
+
+    def __init__(self, targets, clock: Clock,
+                 cost_weights: Optional[dict] = None) -> None:
+        if not targets:
+            raise ValueError("TieredTarget needs at least one tier")
+        self.targets = dict(targets)
+        self.clock = clock
+        weights = cost_weights or {}
+        self.cost_weights = {
+            n: float(weights.get(n, 1.0)) for n in self.targets}
+        # cheapest tier is the fallback (first wins on cost ties)
+        self.default_tier = min(self.targets,
+                                key=lambda n: self.cost_weights[n])
+        # conservative ceiling: the smallest per-tier cap must hold for
+        # every tier a batch might land on
+        caps = [t.max_batch for t in self.targets.values()
+                if t.max_batch is not None]
+        self.max_batch = min(caps) if caps else None
+        buckets = {t.batch_buckets for t in self.targets.values()}
+        self.batch_buckets = (buckets.pop() if len(buckets) == 1 else None)
+        self._takes_deadline = {}
+        for name, t in self.targets.items():
+            try:
+                sig = inspect.signature(
+                    t.__call__ if hasattr(t, "__call__") else t)
+                self._takes_deadline[name] = "deadline" in sig.parameters
+            except (TypeError, ValueError):
+                self._takes_deadline[name] = False
+        self.calls = {n: 0 for n in self.targets}
+        self.requests = {n: 0 for n in self.targets}
+        self.busy_seconds = {n: 0.0 for n in self.targets}
+        self.default_routed = 0  # batches that arrived with no tier stamp
+
+    @property
+    def cost_integral(self) -> float:
+        """Weighted busy-seconds: Σ tier ``cost_weight × busy_seconds``."""
+        return sum(self.cost_weights[n] * s
+                   for n, s in self.busy_seconds.items())
+
+    def stats(self) -> dict:
+        """Per-tier call/billing breakdown for the server summary."""
+        return {
+            "default_routed": self.default_routed,
+            "cost_integral": self.cost_integral,
+            "tiers": {
+                n: {
+                    "calls": self.calls[n],
+                    "requests": self.requests[n],
+                    "busy_seconds": self.busy_seconds[n],
+                    "cost_weight": self.cost_weights[n],
+                    "cost_integral": (self.cost_weights[n]
+                                      * self.busy_seconds[n]),
+                }
+                for n in self.targets
+            },
+        }
+
+    async def __call__(self, batch: Batch,
+                       deadline: Optional[float] = None) -> None:
+        tier = batch.tier
+        if tier is None:
+            batch.tier = tier = self.default_tier
+            self.default_routed += 1
+        try:
+            target = self.targets[tier]
+        except KeyError:
+            raise KeyError(f"batch stamped with unknown tier {tier!r}; "
+                           f"fleet has {sorted(self.targets)}") from None
+        t0 = self.clock.now()
+        try:
+            if self._takes_deadline[tier]:
+                await target(batch, deadline=deadline)
+            else:
+                await target(batch)
+        finally:
+            # billed while running — a cancelled straggler still accrues
+            self.busy_seconds[tier] += float(self.clock.now() - t0)
+        self.calls[tier] += 1
+        self.requests[tier] += batch.size
+
+
 class EngineTarget(DispatchTarget):
     """Real JAX engine upstream via :class:`ReplicaPoolTarget`.
 

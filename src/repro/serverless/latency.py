@@ -190,6 +190,37 @@ class MeasuredLatency(LatencyModel):
         return cls(points=pts, noise_cv=noise_cv, name=name)
 
 
+@dataclasses.dataclass
+class ScaledLatency(LatencyModel):
+    """Wrap another model, scaling every latency by a constant factor.
+
+    The fleet-tier layer uses this for cheap-slow / expensive-fast tiers
+    that share one calibrated workload curve: scaling the *output* (not
+    re-parameterizing) keeps the wrapped model's RNG draw count identical,
+    so a tiered run stays comparable draw-for-draw with its base run.
+    """
+
+    base: LatencyModel
+    scale: float = 1.0
+    name: str = "scaled"
+    noise_cv: float = 0.0  # the wrapped model carries its own noise
+
+    def mean(self, batch_size: int) -> float:
+        return self.scale * self.base.mean(batch_size)
+
+    def sample(self, batch_size: int, rng: np.random.Generator) -> float:
+        return self.scale * self.base.sample(batch_size, rng)
+
+    def mean_batch(self, batch) -> float:
+        return self.scale * self.base.mean_batch(batch)
+
+    def sample_batch(self, batch, rng: np.random.Generator) -> float:
+        return self.scale * self.base.sample_batch(batch, rng)
+
+    def percentile(self, batch_size: int, q: float) -> float:
+        return self.scale * self.base.percentile(batch_size, q)
+
+
 class EndpointRoutedLatency(LatencyModel):
     """Multi-model service times for a *shared* container fleet.
 
@@ -198,12 +229,22 @@ class EndpointRoutedLatency(LatencyModel):
     latency model — one Knative service hosting several models. Size-only
     queries (``mean``/``sample``) fall back to the slowest member model,
     which keeps hedging and capacity estimates conservative.
+
+    Keys are either plain endpoint names or ``(endpoint, tier)`` tuples.
+    Lookup order for a batch stamped ``(endpoint=e, tier=t)``:
+
+    1. ``(e, t)`` — tier-specific curve for this endpoint,
+    2. ``e`` — the endpoint's tier-agnostic curve,
+
+    and a ``KeyError`` naming both probes if neither is registered. A
+    batch with no tier stamp skips step 1, so pre-tier configurations
+    resolve exactly as before.
     """
 
     name = "endpoint-routed"
     noise_cv = 0.0  # member models carry their own noise
 
-    def __init__(self, models: Dict[str, LatencyModel]) -> None:
+    def __init__(self, models: Dict[object, LatencyModel]) -> None:
         if not models:
             raise ValueError("EndpointRoutedLatency needs at least one model")
         self.models = dict(models)
@@ -212,11 +253,19 @@ class EndpointRoutedLatency(LatencyModel):
         if batch.endpoint is None:
             raise KeyError("batch has no endpoint stamp; route it through a "
                            "ProxyFrontend before a shared platform")
+        tier = getattr(batch, "tier", None)
+        if tier is not None:
+            m = self.models.get((batch.endpoint, tier))
+            if m is not None:
+                return m
         try:
             return self.models[batch.endpoint]
         except KeyError:
-            raise KeyError(f"no latency model for endpoint {batch.endpoint!r}; "
-                           f"registered: {sorted(self.models)}") from None
+            probed = ([f"({batch.endpoint!r}, {tier!r})"] if tier is not None
+                      else []) + [repr(batch.endpoint)]
+            raise KeyError(
+                f"no latency model for {' then '.join(probed)}; "
+                f"registered: {sorted(map(repr, self.models))}") from None
 
     def mean(self, batch_size: int) -> float:
         return max(m.mean(batch_size) for m in self.models.values())

@@ -12,11 +12,15 @@ Models the pieces of Knative that the paper's evaluation depends on:
   queue platform-side; their queueing time is part of the upstream response
   time the proxy's monitor observes — exactly what MLProxy sees through its
   HTTP client.
-* **Billing**: integral of provisioned containers over time; the paper's
-  cost metric ("number of containers") is this integral / duration.
+* **Billing**: cost is a billable-seconds *integral* — billable
+  (provisioned or draining) containers integrated over time, exposed as
+  :attr:`ServerlessPlatform.cost_integral` — not a point-in-time container
+  count. The paper's "number of containers" figure is this integral
+  divided by the billing window (:meth:`ServerlessPlatform.avg_containers`).
 * **Fault injection** (beyond paper, required at production scale): random
   container crashes with at-least-once re-dispatch, straggler service
-  times, and optional hedged duplicates for straggler mitigation.
+  times, spot-style container preemption (a billable container reclaimed
+  mid-batch), and optional hedged duplicates for straggler mitigation.
 
 Execution is organised around an explicit **attempt ledger**: every
 :class:`_WorkItem` (one upstream batch) owns the set of its live
@@ -86,6 +90,11 @@ class PlatformConfig:
     ps_slowdown: float = 1.0
     # Fault injection / mitigation (beyond paper)
     failure_prob_per_batch: float = 0.0
+    # Spot-style preemption: per-attempt probability that the hosting
+    # container is reclaimed mid-service. Like a crash, every co-resident
+    # attempt is requeued through the ledger, but the accounting is kept
+    # separate (capacity taken back by the platform, not lost to a fault).
+    preempt_prob_per_batch: float = 0.0
     straggler_prob: float = 0.0
     straggler_mult: float = 5.0
     hedge_factor: float = 0.0  # >0 enables hedged re-dispatch at f×E[s]
@@ -223,7 +232,9 @@ class ServerlessPlatform:
         self.completed_batches = 0
         self.completed_requests = 0
         self.failed_attempts = 0
-        self.requeued_batches = 0  # crash-driven at-least-once requeues
+        self.preemptions = 0  # billable containers reclaimed mid-batch
+        self.preempted_attempts = 0  # live attempts cancelled by reclaims
+        self.requeued_batches = 0  # crash/preempt at-least-once requeues
         self.hedged_dispatches = 0
         self.cancelled_attempts = 0  # sibling attempts cancelled by a winner
         self.duplicate_completions = 0  # must stay 0: exactly-once guard
@@ -454,6 +465,11 @@ class ServerlessPlatform:
             service *= cfg.straggler_mult
         fail = (cfg.failure_prob_per_batch > 0
                 and self.fault_rng.random() < cfg.failure_prob_per_batch)
+        # Preemption draw is guarded so zero-prob configs consume no extra
+        # randomness (byte-identity with pre-preemption runs); a crash on
+        # the same attempt wins — the container cannot die twice.
+        preempt = (not fail and cfg.preempt_prob_per_batch > 0
+                   and self.fault_rng.random() < cfg.preempt_prob_per_batch)
         a = _Attempt(item, c, start=now, eta=now + service)
         item.live.append(a)
         c.attempts.append(a)
@@ -468,6 +484,11 @@ class ServerlessPlatform:
             # on the container is requeued in _crash
             a.eta = now + service * float(self.fault_rng.random())
             self.events.push(a.eta, partial(self._crash, a))
+        elif preempt:
+            # spot reclaim at a uniform point during service; same requeue
+            # semantics as a crash, separate accounting (_preempt)
+            a.eta = now + service * float(self.fault_rng.random())
+            self.events.push(a.eta, partial(self._preempt, a))
         else:
             self.events.push(a.eta, partial(self._complete, a))
             if cfg.hedge_factor > 0 and item.hedges < cfg.max_hedges:
@@ -498,18 +519,39 @@ class ServerlessPlatform:
     def _crash(self, a: _Attempt, now: float) -> None:
         if a.resolved:
             return  # attempt was cancelled/completed before the fault hit
-        c = a.container
-        if c.terminated:
+        if a.container.terminated:
             return
         self._accrue_conc(now)
         self.failed_attempts += 1
+        self._reclaim_container(a, now, detail="crash")
+
+    def _preempt(self, a: _Attempt, now: float) -> None:
+        """Spot-style reclaim: the platform takes the container back
+        mid-batch. Same ledger path as a crash (every co-resident attempt
+        requeued, nothing lost), but billed to the preemption counters so
+        chaos reports can tell lost capacity from reclaimed capacity."""
+        if a.resolved:
+            return  # attempt was cancelled/completed before the reclaim
+        if a.container.terminated:
+            return
+        self._accrue_conc(now)
+        self.preemptions += 1
+        self.preempted_attempts += self._reclaim_container(
+            a, now, detail="preempt")
+
+    def _reclaim_container(self, a: _Attempt, now: float,
+                           detail: str) -> int:
+        """Terminate ``a``'s container mid-service (crash or preemption),
+        requeueing every live attempt through the ledger. Returns the
+        number of attempts the reclaim cancelled."""
+        c = a.container
         if self.tracer is not None:
             self.tracer.emit(now, "fault", a.item.batch.endpoint,
                              batch=a.item.batch.trace_id,
-                             size=a.item.batch.size, detail="crash")
+                             size=a.item.batch.size, detail=detail)
         self._mark_terminated(c, now)
         # resolve EVERY live attempt on the dead container — co-resident
-        # batches crash with it and must be requeued, not leaked
+        # batches die with it and must be requeued, not leaked
         victims = list(c.attempts)
         for v in victims:
             self._resolve_attempt(v, now, container_dead=True)
@@ -524,6 +566,7 @@ class ServerlessPlatform:
                                      size=it.batch.size, detail="requeue")
                 self._enqueue(it, front=True)  # at-least-once re-dispatch
         self._try_assign(now)
+        return len(victims)
 
     def _complete(self, a: _Attempt, now: float) -> None:
         if a.resolved:
@@ -564,6 +607,8 @@ class ServerlessPlatform:
         b(f"{prefix}.completed_batches", lambda: self.completed_batches)
         b(f"{prefix}.completed_requests", lambda: self.completed_requests)
         b(f"{prefix}.failed_attempts", lambda: self.failed_attempts)
+        b(f"{prefix}.preemptions", lambda: self.preemptions)
+        b(f"{prefix}.preempted_attempts", lambda: self.preempted_attempts)
         b(f"{prefix}.requeued_batches", lambda: self.requeued_batches)
         b(f"{prefix}.hedged_dispatches", lambda: self.hedged_dispatches)
         b(f"{prefix}.cancelled_attempts", lambda: self.cancelled_attempts)
@@ -601,6 +646,8 @@ class ServerlessPlatform:
             "hedged_dispatches": self.hedged_dispatches,
             "cancelled_attempts": self.cancelled_attempts,
             "failed_attempts": self.failed_attempts,
+            "preemptions": self.preemptions,
+            "preempted_attempts": self.preempted_attempts,
             "cold_starts": self.cold_starts,
         }
 
@@ -729,6 +776,18 @@ class ServerlessPlatform:
 
     def finalize(self, now: float) -> None:
         self._accrue_billing(now)
+
+    @property
+    def cost_integral(self) -> float:
+        """Billable container-seconds accrued since the last billing reset.
+
+        The platform's cost metric is this *integral* of billable
+        (provisioned or draining) containers over time — not a container
+        count. :class:`~repro.serverless.tiers.TieredPlatform` applies
+        per-tier cost weights on top; the paper's "number of containers"
+        figure is this integral / billing window (:meth:`avg_containers`).
+        """
+        return self.container_seconds
 
     def avg_containers(self, duration: float) -> float:
         return self.container_seconds / duration if duration > 0 else 0.0

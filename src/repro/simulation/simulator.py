@@ -51,6 +51,7 @@ from repro.core.policies import make_policy
 from repro.core.request import Batch, Request
 from repro.serverless.latency import EndpointRoutedLatency, LatencyModel
 from repro.serverless.platform import PlatformConfig, ServerlessPlatform
+from repro.serverless.tiers import TieredPlatform, TierSpec, make_router
 from repro.simulation.arrivals import ArrivalProcess
 from repro.simulation.events import EventQueue
 from repro.simulation.stats import CompletionLog
@@ -182,7 +183,8 @@ class _ProxyHedger:
             return  # already completed (or already hedged)
         shadow = Batch(requests=batch.requests,
                        dispatch_time=batch.dispatch_time, cause=batch.cause,
-                       bucket_size=batch.bucket_size, endpoint=batch.endpoint)
+                       bucket_size=batch.bucket_size, endpoint=batch.endpoint,
+                       tier=batch.tier)
         st[1] = shadow
         self._shadow_owner[id(shadow)] = batch
         self.hedged += 1
@@ -474,6 +476,9 @@ class Simulator(_EventLoopDriver):
             "violation_rate": viol,
             "violation_pct": 100.0 * viol,
             "avg_containers": self.platform.avg_containers(billing_window),
+            # cost is a billable-seconds integral (avg_containers × window),
+            # surfaced directly so cost reports need no re-derivation
+            "cost_integral": float(self.platform.cost_integral),
             "peak_containers": float(self.platform.peak_containers),
             "avg_batch_size": pstats.get("avg_batch_size", 0.0),
             "p50": float(np.percentile(e2e, 50)) if len(e2e) else math.nan,
@@ -511,6 +516,7 @@ class Simulator(_EventLoopDriver):
                 "duplicate_completions": float(cons["duplicate_completions"]),
                 "requeued_batches": float(cons["requeued_batches"]),
                 "cancelled_attempts": float(cons["cancelled_attempts"]),
+                "preemptions": float(cons["preemptions"]),
             }
         )
         timeline = {
@@ -544,6 +550,13 @@ class EndpointSpec:
     run on one :class:`ServerlessPlatform` (multi-model serving); ``None``
     gives the endpoint a dedicated fleet. ``platform_config`` is taken from
     the first group member that sets one.
+
+    ``tiers`` (a tuple of :class:`~repro.serverless.tiers.TierSpec`)
+    upgrades the endpoint's fleet to a :class:`TieredPlatform` and gives
+    the endpoint a :class:`~repro.core.frontend.SpilloverRouter` over
+    those tiers; every member of a shared group must declare the same
+    tier list. ``platform_config`` (or the group's) becomes the base
+    config tiers inherit from.
     """
 
     policy: str
@@ -553,6 +566,7 @@ class EndpointSpec:
     policy_kwargs: Optional[dict] = None
     platform: Optional[str] = None
     platform_config: Optional[PlatformConfig] = None
+    tiers: Optional[tuple] = None  # Tuple[TierSpec, ...]
 
 
 @dataclasses.dataclass(slots=True)
@@ -561,6 +575,12 @@ class MultiSimResult:
     endpoints: Dict[str, Dict[str, float]]       # per-endpoint summaries
     e2e_latencies: Dict[str, np.ndarray]         # per-endpoint latencies
     frontend_stats: dict
+    # per-tier breakdowns, populated only for tiered fleets so the
+    # summary/endpoints surfaces above stay byte-comparable with
+    # untirered runs: platform-group key → tier name → metrics, and
+    # endpoint → SpilloverRouter.stats()
+    tiers: Dict[str, dict] = dataclasses.field(default_factory=dict)
+    routers: Dict[str, dict] = dataclasses.field(default_factory=dict)
 
 
 class MultiEndpointSimulator(_EventLoopDriver):
@@ -606,6 +626,7 @@ class MultiEndpointSimulator(_EventLoopDriver):
         for name, spec in self.specs.items():
             key = spec.platform if spec.platform is not None else f"dedicated:{name}"
             groups.setdefault(key, []).append(name)
+        # values are ServerlessPlatform or TieredPlatform (same surface)
         self.platforms: Dict[str, ServerlessPlatform] = {}
         self._platform_of: Dict[str, str] = {}
         for key, members in groups.items():
@@ -620,16 +641,35 @@ class MultiEndpointSimulator(_EventLoopDriver):
                  if self.specs[m].platform_config is not None),
                 None,
             )
-            self.platforms[key] = ServerlessPlatform(
-                config=pc or PlatformConfig(),
-                latency_model=latency,
-                events=self.events,
-                rng=self.rng,
-                fault_rng=self.rng_faults,
-                on_batch_done=self._on_batch_done,
-                tracer=tracer,
-                recorder=recorder,
-            )
+            tier_lists = {m: tuple(self.specs[m].tiers)
+                          for m in members if self.specs[m].tiers}
+            if tier_lists and len(set(tier_lists.values())) > 1:
+                raise ValueError(
+                    f"platform group {key!r}: members disagree on tiers "
+                    f"({sorted(tier_lists)})")
+            if tier_lists:
+                self.platforms[key] = TieredPlatform(
+                    next(iter(tier_lists.values())),
+                    latency_model=latency,
+                    events=self.events,
+                    rng=self.rng,
+                    on_batch_done=self._on_batch_done,
+                    base_config=pc or PlatformConfig(),
+                    fault_rng=self.rng_faults,
+                    tracer=tracer,
+                    recorder=recorder,
+                )
+            else:
+                self.platforms[key] = ServerlessPlatform(
+                    config=pc or PlatformConfig(),
+                    latency_model=latency,
+                    events=self.events,
+                    rng=self.rng,
+                    fault_rng=self.rng_faults,
+                    on_batch_done=self._on_batch_done,
+                    tracer=tracer,
+                    recorder=recorder,
+                )
             for m in members:
                 self._platform_of[m] = key
 
@@ -648,12 +688,20 @@ class MultiEndpointSimulator(_EventLoopDriver):
         self.frontend = ProxyFrontend(tracer=tracer)
         for name, spec in self.specs.items():
             plat = self.platforms[self._platform_of[name]]
+            router = None
+            if spec.tiers:
+                # one router per endpoint (per-endpoint in-flight signals)
+                # probing the shared fleet's per-tier platform queues
+                router = make_router(spec.tiers,
+                                     queue_probe=plat.tier_queue_depth,
+                                     tracer=tracer)
             self.frontend.add_endpoint(
                 name,
                 sla=spec.sla,
                 dispatch_fn=partial(self._dispatch_batch, plat),
                 policy=spec.policy,
                 policy_kwargs=spec.policy_kwargs,
+                router=router,
             )
         self.arrived_requests: Dict[str, int] = {n: 0 for n in self.specs}
 
@@ -778,11 +826,19 @@ class MultiEndpointSimulator(_EventLoopDriver):
             if all_completed
             else 0.0
         )
+        # weighted cost: Σ platform cost_integral (TieredPlatform applies
+        # per-tier cost weights; a plain platform's integral is weight-1.0,
+        # so untirered and 1-tier runs produce the identical float)
+        total_cost = sum(
+            p.cost_integral for p in self.platforms.values())
         summary = {
             "completed": all_completed,
             "violation_rate": agg_viol,
             "violation_pct": 100.0 * agg_viol,
             "avg_containers": total_containers,
+            "cost_integral": float(total_cost),
+            "weighted_cost": float(total_cost / billing_window
+                                   if billing_window > 0 else 0.0),
             "peak_containers": float(
                 sum(p.peak_containers for p in self.platforms.values())
             ),
@@ -810,13 +866,47 @@ class MultiEndpointSimulator(_EventLoopDriver):
             "duplicate_completions",
             "requeued_batches",
             "cancelled_attempts",
+            "preemptions",
         ):
             summary[key] = float(sum(c[key] for c in cons))
+        # per-tier breakdowns (tiered fleets only — kept OUT of summary/
+        # endpoints so those stay byte-comparable with untirered runs)
+        tiers_out: Dict[str, dict] = {}
+        for key, p in self.platforms.items():
+            if not isinstance(p, TieredPlatform):
+                continue
+            cost_bt = p.cost_by_tier()
+            cons_bt = p.conservation_by_tier()
+            tiers_out[key] = {
+                tn: {
+                    "avg_containers": child.avg_containers(billing_window),
+                    "peak_containers": float(child.peak_containers),
+                    "cold_starts": float(child.cold_starts),
+                    "container_seconds": cost_bt[tn]["container_seconds"],
+                    "cost_weight": cost_bt[tn]["cost_weight"],
+                    "cost_integral": cost_bt[tn]["cost_integral"],
+                    "submitted_batches": float(
+                        cons_bt[tn]["submitted_batches"]),
+                    "completed_batches": float(
+                        cons_bt[tn]["completed_batches"]),
+                    "requeued_batches": float(
+                        cons_bt[tn]["requeued_batches"]),
+                    "preemptions": float(cons_bt[tn]["preemptions"]),
+                }
+                for tn, child in p.platforms.items()
+            }
+        routers_out = {
+            name: ep.router.stats()
+            for name in self.specs
+            if (ep := self.frontend.endpoint(name)).router is not None
+        }
         return MultiSimResult(
             summary=summary,
             endpoints=endpoints,
             e2e_latencies=latencies,
             frontend_stats=fstats,
+            tiers=tiers_out,
+            routers=routers_out,
         )
 
 

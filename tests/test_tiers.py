@@ -1,0 +1,523 @@
+"""Tests for heterogeneous fleet tiers and cost-aware spillover routing.
+
+Covers the ISSUE-10 acceptance points: per-tier AND aggregate ledger
+conservation across every policy (with crash + preempt chaos on), the
+preempt fault's requeue ordering through the attempt ledger, same-seed
+byte-identical router decision logs under FakeClock, and the 1-tier
+degenerate case being byte-identical to today's single-fleet runs in
+both worlds. Router escalation rules (in-flight cap, queue-depth probe,
+latency EWMA + deterministic re-probe) are unit-tested directly.
+"""
+import numpy as np
+import pytest
+
+from repro.core import SLAConfig, ms
+from repro.core.frontend import SpilloverRouter, TierRoute
+from repro.core.request import Batch, Request, reset_request_ids
+from repro.runtime import (AsyncProxyServer, FakeClock, LoadGenerator,
+                           RuntimeConfig, SyntheticTarget, run)
+from repro.runtime.targets import TieredTarget
+from repro.serverless.latency import (AffineLatency, EndpointRoutedLatency,
+                                      ScaledLatency, get_workload)
+from repro.serverless.platform import PlatformConfig, ServerlessPlatform
+from repro.serverless.tiers import TieredPlatform, TierSpec, make_router
+from repro.simulation.arrivals import PoissonProcess
+from repro.simulation.events import EventQueue
+from repro.simulation.simulator import EndpointSpec, run_multi_simulation
+
+from experiments.scenarios import POLICIES
+
+WL = get_workload("sklearn-iris")
+SLA = SLAConfig(slo_target=ms(500))
+
+
+def policy_kwargs(policy):
+    if policy == "static":
+        return {"batch_size": 8, "timeout": 0.2}
+    if policy == "oracle":
+        return {"latency_model": lambda bs: WL.percentile(bs, 95)}
+    return {}
+
+
+def _batch(endpoint="ep", size=1, t=0.0, tier=None):
+    b = Batch(requests=[Request(arrival_time=t) for _ in range(size)],
+              dispatch_time=t, cause="full")
+    b.endpoint = endpoint
+    b.tier = tier
+    return b
+
+
+# ---------------------------------------------------------------- TierSpec
+class TestTierSpec:
+    def test_validation(self):
+        with pytest.raises(ValueError, match="non-empty name"):
+            TierSpec(name="")
+        with pytest.raises(ValueError, match="cost_weight"):
+            TierSpec(name="t", cost_weight=0.0)
+        with pytest.raises(ValueError, match="latency_scale"):
+            TierSpec(name="t", latency_scale=-1.0)
+        with pytest.raises(ValueError, match="preempt_prob"):
+            TierSpec(name="t", preempt_prob=1.5, preemptible=True)
+        with pytest.raises(ValueError, match="requires preemptible"):
+            TierSpec(name="t", preempt_prob=0.1)
+
+    def test_as_route_carries_guards(self):
+        r = TierSpec(name="cheap", cost_weight=0.5, max_inflight=3,
+                     queue_depth_max=7, latency_threshold=0.9).as_route()
+        assert r == TierRoute(name="cheap", cost_weight=0.5, max_inflight=3,
+                              queue_depth_max=7, latency_threshold=0.9)
+
+    def test_effective_config_overrides(self):
+        base = PlatformConfig(max_scale=100)
+        spec = TierSpec(name="spot", capacity=4, preemptible=True,
+                        preempt_prob=0.2)
+        cfg = spec.effective_config(base)
+        assert cfg.max_scale == 4
+        assert cfg.preempt_prob_per_batch == 0.2
+        # no overrides → base passes through untouched (same object)
+        assert TierSpec(name="plain").effective_config(base) is base
+
+    def test_effective_latency(self):
+        base = AffineLatency(a=0.1, c=0.0, noise_cv=0.0)
+        assert TierSpec(name="t").effective_latency(base) is base
+        scaled = TierSpec(name="t", latency_scale=2.0).effective_latency(base)
+        assert scaled.mean(4) == pytest.approx(2.0 * base.mean(4))
+        own = AffineLatency(a=0.5, c=0.0)
+        spec = TierSpec(name="t", latency=own, latency_scale=3.0)
+        assert spec.effective_latency(base) is own  # explicit model wins
+
+
+class TestScaledLatency:
+    def test_scales_every_surface_same_draws(self):
+        base = AffineLatency(a=0.1, c=0.01, noise_cv=0.3)
+        scaled = ScaledLatency(base=base, scale=2.0)
+        b = _batch(size=4)
+        assert scaled.mean(4) == pytest.approx(2.0 * base.mean(4))
+        assert scaled.mean_batch(b) == pytest.approx(2.0 * base.mean_batch(b))
+        assert scaled.percentile(4, 95) == pytest.approx(
+            2.0 * base.percentile(4, 95))
+        r1, r2 = np.random.default_rng(0), np.random.default_rng(0)
+        assert scaled.sample(4, r1) == pytest.approx(2.0 * base.sample(4, r2))
+        # draw counts identical: streams stay aligned after the call
+        assert r1.random() == r2.random()
+
+
+# ---------------------------------------------------------------- router
+class TestSpilloverRouter:
+    def test_validation(self):
+        with pytest.raises(ValueError, match="at least one tier"):
+            SpilloverRouter([])
+        with pytest.raises(ValueError, match="duplicate"):
+            SpilloverRouter([TierRoute("a"), TierRoute("a")])
+
+    def test_prefers_cheapest(self):
+        r = SpilloverRouter([TierRoute("fast", cost_weight=3.0),
+                             TierRoute("cheap", cost_weight=1.0)])
+        assert r.tier_names == ("cheap", "fast")
+        b = _batch()
+        assert r.route(b, 0.0) == "cheap"
+        assert b.tier == "cheap"
+        assert r.decision_log == [(0.0, "ep", 1, "cheap", "preferred")]
+        assert r.spillovers == 0
+
+    def test_inflight_cap_spills_and_release_recovers(self):
+        r = SpilloverRouter([TierRoute("cheap", cost_weight=1.0,
+                                       max_inflight=1),
+                             TierRoute("fast", cost_weight=3.0)])
+        assert r.route(_batch(), 0.0) == "cheap"
+        assert r.route(_batch(), 1.0) == "fast"   # cap hit → spillover
+        assert r.escalations["inflight_cap"] == 1
+        assert r.spillovers == 1
+        r.on_batch_done("cheap", 0.05, 2.0)       # slot freed
+        assert r.route(_batch(), 3.0) == "cheap"
+        assert r.decision_log[1][4] == "spillover"
+
+    def test_queue_depth_probe_spills(self):
+        depths = {"cheap": 5, "fast": 0}
+        r = SpilloverRouter([TierRoute("cheap", cost_weight=1.0,
+                                       queue_depth_max=3),
+                             TierRoute("fast", cost_weight=3.0)],
+                            queue_probe=depths.get)
+        assert r.route(_batch(), 0.0) == "fast"
+        assert r.escalations["queue_depth"] == 1
+        depths["cheap"] = 0
+        assert r.route(_batch(), 1.0) == "cheap"
+
+    def test_latency_ewma_spills_then_reprobes(self):
+        r = SpilloverRouter([TierRoute("cheap", cost_weight=1.0,
+                                       latency_threshold=0.1),
+                             TierRoute("fast", cost_weight=3.0)],
+                            probe_every=4)
+        # poison the cheap tier's EWMA
+        r.route(_batch(), 0.0)
+        r.on_batch_done("cheap", 5.0, 0.1)
+        picks = [r.route(_batch(), float(i)) for i in range(1, 9)]
+        # every 4th consecutive latency-skip deterministically re-probes
+        assert picks == ["fast", "fast", "fast", "cheap",
+                         "fast", "fast", "fast", "cheap"]
+        probe_rows = [d for d in r.decision_log if d[4] == "probe"]
+        assert len(probe_rows) == 2
+        # a healthy probe sample clears the escalation
+        r.on_batch_done("cheap", 0.01, 9.0)
+        r.on_batch_done("cheap", 0.01, 9.1)
+        ema = r._lat_ema["cheap"]
+        if ema <= 0.1:
+            assert r.route(_batch(), 10.0) == "cheap"
+
+    def test_exhausted_lands_on_most_expensive(self):
+        r = SpilloverRouter([TierRoute("cheap", cost_weight=1.0,
+                                       max_inflight=1),
+                             TierRoute("fast", cost_weight=3.0,
+                                       max_inflight=1)])
+        assert r.route(_batch(), 0.0) == "cheap"
+        assert r.route(_batch(), 1.0) == "fast"
+        assert r.route(_batch(), 2.0) == "fast"   # everything guarded
+        assert r.decision_log[2][4] == "exhausted"
+
+    def test_release_is_floor_zero_and_unknown_safe(self):
+        r = SpilloverRouter([TierRoute("cheap")])
+        r.release("cheap")
+        r.release("nope")
+        r.release(None)
+        assert r.stats()["inflight"] == {"cheap": 0}
+
+
+# ----------------------------------------------- (endpoint, tier) latency
+class TestEndpointTierLatency:
+    def test_fallback_order(self):
+        base = AffineLatency(a=0.1, c=0.0, noise_cv=0.0)
+        fast = AffineLatency(a=0.01, c=0.0, noise_cv=0.0)
+        lat = EndpointRoutedLatency({"ep": base, ("ep", "fast"): fast})
+        assert lat.mean_batch(_batch(tier="fast")) == fast.mean(1)
+        # unkeyed tier falls back to the endpoint's tier-agnostic curve
+        assert lat.mean_batch(_batch(tier="spot")) == base.mean(1)
+        assert lat.mean_batch(_batch(tier=None)) == base.mean(1)
+
+    def test_keyerror_names_both_probes(self):
+        lat = EndpointRoutedLatency({("ep", "fast"):
+                                     AffineLatency(a=0.01, c=0.0)})
+        with pytest.raises(KeyError,
+                           match=r"other.*fast.*then.*other.*registered"):
+            lat.mean_batch(_batch(endpoint="other", tier="fast"))
+        # tier-keyed-only registration: plain-endpoint probe also fails
+        with pytest.raises(KeyError, match="registered"):
+            lat.mean_batch(_batch(tier=None))
+
+
+# ------------------------------------------------------- preempt fault
+def _mk_platform(**cfg_kw):
+    done = []
+    events = EventQueue()
+    plat = ServerlessPlatform(
+        config=PlatformConfig(**cfg_kw),
+        latency_model=AffineLatency(a=0.1, c=0.0, noise_cv=0.0),
+        events=events,
+        rng=np.random.default_rng(0),
+        on_batch_done=lambda b, lat, t: done.append((b, lat, t)),
+    )
+    return plat, events, done
+
+
+def _drain(events, until=1e9):
+    now = 0.0
+    while events:
+        t, fn = events.pop()
+        if t > until:
+            break
+        now = t
+        fn(t)
+    return now
+
+
+class TestPreemptFault:
+    def test_preempt_requeues_all_coresident_fifo(self):
+        plat, events, done = _mk_platform(
+            initial_scale=1, min_scale=1, max_scale=1,
+            container_concurrency=3, ps_slowdown=0.0,
+        )
+        batches = [_batch() for _ in range(3)]
+        for b in batches:
+            plat.submit(b, 0.0)
+        c = plat.containers[0]
+        started_order = [a.item.batch for a in c.attempts]
+        plat._preempt(c.attempts[0], 0.05)
+        assert plat.preemptions == 1
+        assert plat.preempted_attempts == 3   # every co-resident victim
+        assert plat.failed_attempts == 0      # preempt is not a crash
+        requeued = [it.batch for it in plat.pending if it.queued]
+        assert requeued == started_order      # oldest re-dispatches first
+        cons = plat.assert_conserved()
+        assert cons["lost_batches"] == 0
+        _drain(events, until=120.0)
+        assert len(done) == 3
+        plat.assert_conserved(require_drained=True)
+
+    def test_stochastic_preemptions_never_lose_work(self):
+        plat, events, done = _mk_platform(
+            initial_scale=2, min_scale=1, container_concurrency=4,
+            ps_slowdown=0.25, preempt_prob_per_batch=0.3,
+        )
+        for i in range(50):
+            plat.submit(_batch(t=i * 0.05), i * 0.05)
+        _drain(events, until=600.0)
+        assert len(done) == 50
+        assert plat.preemptions > 0           # the fault path actually fired
+        cons = plat.assert_conserved(require_drained=True)
+        assert cons["requeued_batches"] >= cons["preempted_attempts"]
+        assert cons["preemptions"] == plat.preemptions
+
+    def test_cost_integral_is_container_seconds(self):
+        plat, events, done = _mk_platform(initial_scale=1, min_scale=1,
+                                          max_scale=1)
+        plat.submit(_batch(), 0.0)
+        _drain(events, until=60.0)
+        plat.finalize(60.0)
+        assert plat.cost_integral == plat.container_seconds > 0
+
+
+# --------------------------------------------------------- TieredPlatform
+TIERS_2 = (
+    TierSpec(name="cheap", cost_weight=1.0, latency_scale=2.0,
+             max_inflight=4),
+    TierSpec(name="fast", cost_weight=3.0),
+)
+TIERS_SPOT = (
+    TierSpec(name="spot", cost_weight=0.4, preemptible=True,
+             preempt_prob=0.15, max_inflight=4),
+    TierSpec(name="ondemand", cost_weight=1.0),
+)
+
+
+def _tiered_platform(tiers, **base_kw):
+    done = []
+    events = EventQueue()
+    plat = TieredPlatform(
+        tiers,
+        latency_model=AffineLatency(a=0.05, c=0.0, noise_cv=0.0),
+        events=events,
+        rng=np.random.default_rng(0),
+        on_batch_done=lambda b, lat, t: done.append((b, lat, t)),
+        base_config=PlatformConfig(**base_kw),
+        fault_rng=np.random.default_rng(99),
+    )
+    plat.start(0.0)
+    return plat, events, done
+
+
+class TestTieredPlatform:
+    def test_needs_tiers_and_unique_names(self):
+        ev = EventQueue()
+        kw = dict(latency_model=AffineLatency(a=0.1, c=0.0), events=ev,
+                  rng=np.random.default_rng(0),
+                  on_batch_done=lambda *a: None)
+        with pytest.raises(ValueError, match="at least one tier"):
+            TieredPlatform((), **kw)
+        with pytest.raises(ValueError, match="duplicate"):
+            TieredPlatform((TierSpec(name="a"), TierSpec(name="a")), **kw)
+
+    def test_unstamped_batch_lands_on_cheapest(self):
+        plat, events, done = _tiered_platform(TIERS_2)
+        b = _batch()
+        plat.submit(b, 0.0)
+        assert b.tier == "cheap"
+        assert plat.default_routed == 1
+        assert plat.platforms["cheap"].conservation()["submitted_batches"] == 1
+
+    def test_unknown_tier_raises(self):
+        plat, events, done = _tiered_platform(TIERS_2)
+        with pytest.raises(KeyError, match="unknown tier 'gpu'"):
+            plat.submit(_batch(tier="gpu"), 0.0)
+
+    def test_weighted_cost_integral(self):
+        plat, events, done = _tiered_platform(TIERS_2, initial_scale=1,
+                                              min_scale=1, max_scale=1)
+        plat.submit(_batch(tier="cheap"), 0.0)
+        plat.submit(_batch(tier="fast"), 0.0)
+        _drain(events, until=60.0)
+        plat.finalize(60.0)
+        by_tier = plat.cost_by_tier()
+        expect = sum(v["cost_integral"] for v in by_tier.values())
+        assert plat.cost_integral == pytest.approx(expect)
+        assert by_tier["fast"]["cost_integral"] == pytest.approx(
+            3.0 * plat.platforms["fast"].container_seconds)
+        # unweighted integral is the plain sum of seconds
+        assert plat.container_seconds == pytest.approx(
+            sum(p.container_seconds for p in plat.platforms.values()))
+
+    def test_conservation_per_tier_and_aggregate_under_faults(self):
+        plat, events, done = _tiered_platform(
+            TIERS_SPOT, initial_scale=2, min_scale=1,
+            container_concurrency=4, ps_slowdown=0.25,
+            failure_prob_per_batch=0.05,
+        )
+        rng = np.random.default_rng(3)
+        for i in range(120):
+            tier = "spot" if rng.random() < 0.7 else "ondemand"
+            plat.submit(_batch(t=i * 0.03, tier=tier), i * 0.03)
+        _drain(events, until=900.0)
+        assert len(done) == 120
+        assert plat.platforms["spot"].preemptions > 0
+        agg = plat.assert_conserved(require_drained=True)
+        assert agg["submitted_batches"] == 120 == plat.submitted_batches
+        by_tier = plat.conservation_by_tier()
+        assert sum(c["submitted_batches"] for c in by_tier.values()) == 120
+        assert by_tier["ondemand"]["preemptions"] == 0  # tier-scoped fault
+
+    def test_tier_boundary_leak_detected(self):
+        plat, events, done = _tiered_platform(TIERS_2)
+        plat.submit(_batch(tier="cheap"), 0.0)
+        plat.platforms["fast"].submit(_batch(tier="fast"), 0.0)  # bypass
+        with pytest.raises(AssertionError, match="tier boundary leak"):
+            plat.assert_conserved()
+
+
+# -------------------------------------------------- sim-world integration
+def _sim_spec(policy, tiers, pc=None, rate=40.0):
+    return EndpointSpec(
+        policy=policy, sla=SLA, workload=WL,
+        arrivals=PoissonProcess(rate=rate, duration=40.0),
+        policy_kwargs=policy_kwargs(policy),
+        platform_config=pc,
+        tiers=tiers,
+    )
+
+
+class TestTieredSimulation:
+    @pytest.mark.parametrize("policy", POLICIES)
+    def test_one_tier_is_byte_identical_to_single_fleet(self, policy):
+        kw = dict(duration=40.0, drain_grace=120.0, seed=7)
+        reset_request_ids()
+        plain = run_multi_simulation({"ep": _sim_spec(policy, None)}, **kw)
+        reset_request_ids()
+        tiered = run_multi_simulation(
+            {"ep": _sim_spec(policy, (TierSpec(name="only"),))}, **kw)
+        assert tiered.summary == plain.summary
+        assert tiered.endpoints == plain.endpoints
+        np.testing.assert_array_equal(tiered.e2e_latencies["ep"],
+                                      plain.e2e_latencies["ep"])
+        assert plain.tiers == {} and plain.routers == {}
+        assert set(tiered.tiers) == {"dedicated:ep"}
+        assert tiered.routers["ep"]["decisions"] > 0
+
+    @pytest.mark.parametrize("policy", POLICIES)
+    def test_spot_fleet_conserves_per_tier(self, policy):
+        pc = PlatformConfig(initial_scale=2, container_concurrency=4,
+                            ps_slowdown=0.25, failure_prob_per_batch=0.03)
+        res = run_multi_simulation(
+            {"ep": _sim_spec(policy, TIERS_SPOT, pc=pc)},
+            duration=40.0, drain_grace=240.0, seed=11)
+        tiers = res.tiers["dedicated:ep"]
+        submitted = sum(t["submitted_batches"] for t in tiers.values())
+        completed = sum(t["completed_batches"] for t in tiers.values())
+        assert submitted == completed > 0          # drained, nothing lost
+        assert res.summary["lost_batches"] == 0
+        assert res.summary["duplicate_completions"] == 0
+        assert tiers["ondemand"]["preemptions"] == 0
+        r = res.routers["ep"]
+        assert r["decisions"] == res.endpoints["ep"]["dispatched_batches"]
+        assert sum(r["inflight"].values()) == 0
+
+    def test_same_seed_identical_router_decisions(self):
+        def one():
+            reset_request_ids()
+            sim_kw = dict(duration=30.0, drain_grace=120.0, seed=5)
+            return run_multi_simulation(
+                {"ep": _sim_spec("mlproxy", TIERS_2, rate=80.0)}, **sim_kw)
+
+        a, b = one(), one()
+        assert a.routers["ep"] == b.routers["ep"]
+        assert a.summary == b.summary
+
+    def test_shared_group_must_agree_on_tiers(self):
+        specs = {
+            "a": _sim_spec("static", TIERS_2),
+            "b": _sim_spec("static", None),
+        }
+        specs["a"].platform = specs["b"].platform = "shared"
+        specs["b"].tiers = (TierSpec(name="other"),)
+        with pytest.raises(ValueError, match="disagree on tiers"):
+            run_multi_simulation(specs, duration=5.0)
+
+
+# ------------------------------------------------- live-world integration
+def _live_run(seed=0, rate=250.0, duration=4.0):
+    reset_request_ids()
+    clock = FakeClock()
+    server = AsyncProxyServer(clock=clock, config=RuntimeConfig())
+    base = AffineLatency(a=0.01, c=0.005, noise_cv=0.0)
+    cheap = SyntheticTarget(ScaledLatency(base=base, scale=2.0), clock,
+                            rng=np.random.default_rng(1), concurrency=2)
+    fast = SyntheticTarget(base, clock, rng=np.random.default_rng(2),
+                           concurrency=4)
+    target = TieredTarget({"cheap": cheap, "fast": fast}, clock,
+                          cost_weights={"cheap": 1.0, "fast": 3.0})
+    router = SpilloverRouter([
+        TierRoute("cheap", cost_weight=1.0, max_inflight=2),
+        TierRoute("fast", cost_weight=3.0),
+    ])
+    server.add_endpoint("ep", sla=SLA, target=target, policy="static",
+                        policy_kwargs={"batch_size": 4, "timeout": 0.02},
+                        router=router)
+    gen = LoadGenerator(server, PoissonProcess(rate=rate, duration=duration),
+                        duration=duration, rng=np.random.default_rng(seed),
+                        endpoint="ep")
+
+    async def main():
+        await server.start()
+        await gen.run()
+        await server.drain()
+
+    run(clock, main())
+    return server, router, target
+
+
+class TestTieredRuntime:
+    def test_routing_conserves_and_spills(self):
+        server, router, target = _live_run()
+        server.assert_conserved(require_drained=True)
+        ep = server.summary()["endpoints"]["ep"]
+        assert ep["router"]["decisions"] > 0
+        assert ep["router"]["spillovers"] > 0
+        assert sum(ep["router"]["inflight"].values()) == 0  # no slot leaks
+        # every dispatched batch landed on exactly one tier
+        calls = sum(target.calls.values())
+        assert calls == ep["router"]["decisions"]
+        assert ep["cost_integral"] == pytest.approx(
+            sum(target.cost_weights[n] * target.busy_seconds[n]
+                for n in target.targets))
+        assert ep["tiers"]["tiers"]["fast"]["cost_weight"] == 3.0
+
+    def test_same_seed_byte_identical_decision_log(self):
+        _, r1, _ = _live_run(seed=3)
+        _, r2, _ = _live_run(seed=3)
+        assert len(r1.decision_log) > 10
+        assert r1.decision_log == r2.decision_log
+        _, r3, _ = _live_run(seed=4)
+        assert r3.decision_log != r1.decision_log
+
+    def test_default_tier_fallback_without_router(self):
+        reset_request_ids()
+        clock = FakeClock()
+        server = AsyncProxyServer(clock=clock, config=RuntimeConfig())
+        base = AffineLatency(a=0.01, c=0.0, noise_cv=0.0)
+        target = TieredTarget(
+            {"cheap": SyntheticTarget(base, clock,
+                                      rng=np.random.default_rng(1)),
+             "fast": SyntheticTarget(base, clock,
+                                     rng=np.random.default_rng(2))},
+            clock, cost_weights={"cheap": 1.0, "fast": 3.0})
+        server.add_endpoint("ep", sla=SLA, target=target, policy="static",
+                            policy_kwargs={"batch_size": 2, "timeout": 0.01})
+        gen = LoadGenerator(server, PoissonProcess(rate=100.0, duration=1.0),
+                            duration=1.0, rng=np.random.default_rng(0),
+                            endpoint="ep")
+
+        async def main():
+            await server.start()
+            await gen.run()
+            await server.drain()
+
+        run(clock, main())
+        server.assert_conserved(require_drained=True)
+        assert target.default_routed == sum(target.calls.values()) > 0
+        assert target.calls["fast"] == 0   # everything on the cheap default

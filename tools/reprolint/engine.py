@@ -108,11 +108,13 @@ class LintConfig:
     #: binding method, or it is invisible to the metrics plane
     metrics_modules: Tuple[str, ...] = (
         "core/batch_queue.py",
+        "core/frontend.py",
         "core/monitor.py",
         "runtime/server.py",
         "runtime/breaker.py",
         "runtime/faults.py",
         "serverless/platform.py",
+        "serverless/tiers.py",
     )
     #: method names whose attribute reads count as "bound" (the
     #: ``registry.bind(name, lambda: self.counter)`` convention)
